@@ -1,0 +1,39 @@
+"""Paper §4.8: non-monotone bin-count behavior probe.
+
+Sweeps n over {32, 48, 56, 64, 96, 128} (uniform schedule, fp32 norms) and
+reports whether a power-of-2 aliasing dip (n=64 worse than n=56) appears on
+the toy LM — the paper observes it on TinyLlama specifically, so we report
+the observation either way rather than asserting it.
+"""
+from __future__ import annotations
+
+from benchmarks import common as C
+from repro.core import mixedkv
+
+
+def run(params, base_ppl: float) -> dict:
+    rows = []
+    for n in (32, 48, 56, 64, 96, 128):
+        d = C.delta_ppl(params, base_ppl,
+                        mixedkv.uniform(C.TOY.num_layers, n, n))
+        rows.append({"n": n, "delta_ppl": d})
+    by_n = {r["n"]: r["delta_ppl"] for r in rows}
+    res = {
+        "sweep": rows,
+        "monotone_overall": all(
+            by_n[a] >= by_n[b] for a, b in ((32, 48), (48, 64), (64, 128))),
+        "pow2_dip_observed": bool(by_n[64] > by_n[56]),
+    }
+    C.save_table("nonmonotone", res)
+    return res
+
+
+def render(res) -> str:
+    out = ["", "## §4.8 — bin-count sweep", "| n | ΔPPL |", "|---|---|"]
+    for r in res["sweep"]:
+        out.append(f"| {r['n']} | {r['delta_ppl']:+.4f} |")
+    out.append(f"monotone(32->128): {res['monotone_overall']}; "
+               f"pow-2 aliasing dip (n=64 > n=56): "
+               f"{res['pow2_dip_observed']} "
+               f"(paper observes it on TinyLlama only)")
+    return "\n".join(out)

@@ -1,0 +1,309 @@
+"""Roofline analysis: three terms per (arch x shape x mesh).
+
+Methodology (EXPERIMENTS.md §Roofline): XLA's CPU HloCostAnalysis counts
+while-loop bodies inconsistently w.r.t. trip counts (verified in
+tests/test_roofline_calibration.py), so FLOPs/bytes/collectives come from an
+ANALYTIC per-op model of exactly the code we lower — validated against
+cost_analysis on small fully-unrolled compiles — while the dry-run artifacts
+provide compilability, the per-device memory_analysis, and the collective
+schedule. Hardware constants: TPU v5e-ish, 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.configs import registry
+from repro.configs.base import ModelConfig
+from repro.models.common import SHAPES, ShapeSpec
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+BF16 = 2
+
+
+@dataclasses.dataclass
+class MeshSpec:
+    chips: int
+    data: int
+    model: int
+    pods: int = 1
+
+    @property
+    def batch_shards(self):
+        return self.data * self.pods
+
+
+SINGLE_POD = MeshSpec(chips=256, data=16, model=16)
+MULTI_POD = MeshSpec(chips=512, data=16, model=16, pods=2)
+
+
+# ------------------------------------------------------------ flops model --
+def _attn_ctx(cfg: ModelConfig, s: int) -> float:
+    """Mean attended context length per query token."""
+    if cfg.sliding_window is not None and s > cfg.sliding_window:
+        w = cfg.sliding_window
+        # first w tokens grow causally, the rest see w
+        return (w / 2 * w + (s - w) * w) / s
+    return s / 2  # causal average
+
+
+def matmul_params(cfg: ModelConfig) -> float:
+    """Active matmul params per token (excl. embedding gather)."""
+    d, h = cfg.d_model, cfg.head_dim
+    attn = d * (cfg.num_heads * h) + 2 * d * (cfg.num_kv_heads * h) \
+        + (cfg.num_heads * h) * d
+    if cfg.moe_experts:
+        ffn = cfg.moe_top_k * (3 if cfg.glu else 2) * d * cfg.d_ff \
+            + d * cfg.moe_experts
+    elif cfg.d_ff:
+        ffn = (3 if cfg.glu else 2) * d * cfg.d_ff
+    else:
+        ffn = 0.0
+    if cfg.family == "xlstm":
+        per = 6 * d * d  # mLSTM block matmuls (up, qkv, down)
+        return cfg.num_layers * per + d * cfg.vocab_size
+    if cfg.family == "hybrid_ssm":
+        dims_in = cfg.ssm_expand * d
+        per = d * (2 * dims_in + 2 * cfg.ssm_state
+                   + dims_in // cfg.head_dim) + dims_in * d
+        n_attn = cfg.num_layers // cfg.attn_every
+        return cfg.num_layers * per + n_attn * attn + d * cfg.vocab_size
+    return cfg.num_layers * (attn + ffn) + d * cfg.vocab_size
+
+
+def fwd_flops_per_token(cfg: ModelConfig, s: int) -> float:
+    base = 2.0 * matmul_params(cfg)
+    ctx = _attn_ctx(cfg, s)
+    n_attn = cfg.num_attn_layers if cfg.family != "encoder" \
+        else cfg.num_layers
+    if cfg.family == "encoder":
+        ctx = s  # bidirectional
+    attn = 4.0 * n_attn * cfg.num_heads * cfg.head_dim * ctx
+    ssm = 0.0
+    if cfg.family == "hybrid_ssm":
+        dims_in = cfg.ssm_expand * cfg.d_model
+        nheads = dims_in // cfg.head_dim
+        # SSD: intra-chunk quadratic (Q=256) + state update per token
+        q = 256
+        ssm = cfg.num_layers * (
+            2 * q * cfg.ssm_state  # C B^T within chunk (amortized)
+            + 2 * q * nheads  # decay-weighted combine
+            + 4 * nheads * cfg.head_dim * cfg.ssm_state)  # state in/out
+    if cfg.family == "xlstm":
+        q = 256
+        ssm = cfg.num_layers * (7 / 8) * (
+            4 * q * cfg.num_heads * cfg.head_dim  # mLSTM intra-chunk
+            + 4 * cfg.num_heads * cfg.head_dim * cfg.head_dim / q * q)
+    return base + attn + ssm
+
+
+def cell_flops(cfg: ModelConfig, shape: ShapeSpec, *, remat: bool = True
+               ) -> float:
+    """Global FLOPs for one step of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        mult = 4.0 if remat else 3.0  # fwd + 2x bwd (+ recompute)
+        return mult * b * s * fwd_flops_per_token(cfg, s)
+    if shape.kind == "prefill":
+        return b * s * fwd_flops_per_token(cfg, s)
+    # decode: one token against a cache of size s
+    base = 2.0 * matmul_params(cfg)
+    n_attn = cfg.num_attn_layers
+    ctx = min(s, cfg.sliding_window or s)
+    attn = 4.0 * n_attn * cfg.num_heads * cfg.head_dim * ctx
+    return b * (base + attn)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """6*N_active*D (dense) / 6*N_active*D (MoE) — the 'useful' FLOPs."""
+    b, s = shape.global_batch, shape.seq_len
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * b * s
+    if shape.kind == "prefill":
+        return 2.0 * n * b * s
+    return 2.0 * n * b
+
+
+# ------------------------------------------------------------ bytes model --
+def quant_bits_per_element(run) -> float:
+    from repro.launch.steps import make_quantizer
+
+    qz = make_quantizer(run)
+    if qz is None:
+        return 16.0
+    return qz.config.physical_bits()
+
+
+def cell_hbm_bytes(run, shape: ShapeSpec, mesh: MeshSpec, *,
+                   n_micro: int = 1) -> float:
+    """Per-chip HBM traffic per step (leading-order components)."""
+    cfg = run.model
+    b, s = shape.global_batch, shape.seq_len
+    p_bytes = cfg.param_count() * BF16 / mesh.chips
+    tok_per_chip = b * s / mesh.batch_shards / max(
+        mesh.model if shape.kind != "decode" else 1, 1)
+    act_coeff = 16  # resid r/w, qkv, attn out, mlp up/gate/down, norms
+    act = tok_per_chip * cfg.num_layers * act_coeff * cfg.d_model * BF16
+
+    if shape.kind == "train":
+        weights = p_bytes * BF16 / BF16 * (2 * n_micro + 3)  # reads + grad+opt
+        # remat: checkpoints written+read once each
+        ckpt = 2 * tok_per_chip * cfg.num_layers * cfg.d_model * BF16
+        return weights + 3 * act + ckpt  # fwd + recompute + bwd activations
+    if shape.kind == "prefill":
+        cache_bits = quant_bits_per_element(run)
+        t_cached = min(s, cfg.sliding_window or s)
+        cache = (2 * cfg.num_attn_layers * cfg.num_kv_heads * cfg.head_dim
+                 * t_cached * b / mesh.chips * cache_bits / 8)
+        return p_bytes + act + cache
+    # decode: weights + full cache read + tiny activations
+    cache_bits = quant_bits_per_element(run)
+    t_cached = min(s, cfg.sliding_window or s)
+    cache = (2 * cfg.num_attn_layers * cfg.num_kv_heads * cfg.head_dim
+             * t_cached * b / mesh.chips * cache_bits / 8)
+    act_dec = b / mesh.batch_shards * cfg.num_layers * act_coeff \
+        * cfg.d_model * BF16
+    state = 0.0
+    if cfg.family == "hybrid_ssm":
+        dims_in = cfg.ssm_expand * cfg.d_model
+        state = (cfg.num_layers * b * (dims_in // cfg.head_dim)
+                 * cfg.head_dim * cfg.ssm_state * 4 * 2 / mesh.chips)
+    if cfg.family == "xlstm":
+        state = (cfg.num_layers * b * cfg.num_heads * cfg.head_dim
+                 * cfg.head_dim * 4 * 2 / mesh.chips)
+    return p_bytes + cache + act_dec + state
+
+
+# ------------------------------------------------------- collectives model --
+def cell_collective_bytes(run, shape: ShapeSpec, mesh: MeshSpec, *,
+                          n_micro: int = 1,
+                          grad_compression: float = 1.0) -> float:
+    """Per-chip ICI bytes per step (ring-collective cost model)."""
+    cfg = run.model
+    b, s = shape.global_batch, shape.seq_len
+    p_total = cfg.param_count() * BF16
+    n_model, n_data = mesh.model, mesh.data
+
+    def ring_ar(z, n):  # all-reduce: 2 z (n-1)/n per chip
+        return 2 * z * (n - 1) / n if n > 1 else 0.0
+
+    def ring_ag(z_shard, n):  # all-gather of full size z from shards
+        return z_shard * (n - 1) if n > 1 else 0.0
+
+    if shape.kind == "train":
+        tok_chip = b * s / mesh.batch_shards
+        resid = tok_chip * cfg.d_model * BF16
+        # TP/SP: ag + rs per sublayer, fwd+bwd ~ 4 AR-equivalents per layer
+        tp = cfg.num_layers * 4 * ring_ar(resid / n_model, n_model)
+        # FSDP: per microbatch gather weights (model-shard worth), fwd+bwd
+        w_shard = p_total / mesh.chips
+        fsdp = n_micro * 2 * ring_ag(w_shard, n_data) \
+            + ring_ag(w_shard, n_data)  # grads reduce-scatter ~ ag cost
+        pod = 0.0
+        if mesh.pods > 1:
+            pod = ring_ar(p_total / (n_data * n_model), mesh.pods) \
+                / grad_compression
+        return tp + fsdp + pod
+    if shape.kind == "prefill":
+        tok_chip = b * s / mesh.batch_shards
+        resid = tok_chip * cfg.d_model * BF16
+        tp = cfg.num_layers * 2 * ring_ar(resid / n_model, n_model)
+        fsdp = ring_ag(p_total / mesh.chips, n_data)
+        return tp + fsdp
+    # decode (TP-serve layout): batch over "pod" only; per layer the
+    # d-sharded contractions AR activations over "data" and "model" — no
+    # per-step weight gather (that cost 47 GB/chip at 405B, §Perf).
+    b_pod = b / mesh.pods
+    resid = b_pod * cfg.d_model * BF16
+    tp = cfg.num_layers * 2 * (ring_ar(resid / n_model, n_data)
+                               + ring_ar(resid / n_data, n_model))
+    # sequence-parallel cache: partial-softmax combine of (num, den) per attn
+    attn_ar = cfg.num_attn_layers * ring_ar(
+        b_pod * cfg.num_heads * (cfg.head_dim + 2) * 4, n_data)
+    return tp + attn_ar
+
+
+# ---------------------------------------------------------------- driver --
+def analyze_cell(arch: str, shape_name: str, mesh: MeshSpec) -> dict:
+    run = registry.get_run_config(arch)
+    cfg = run.model
+    shape = SHAPES[shape_name]
+    skip = registry.shape_skip_reason(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": skip}
+    n_micro = 1
+    if shape.kind == "train" and run.parallel.microbatch:
+        n_micro = max(1, shape.global_batch // run.parallel.microbatch)
+    flops = cell_flops(cfg, shape) / mesh.chips
+    hbm = cell_hbm_bytes(run, shape, mesh, n_micro=n_micro)
+    coll = cell_collective_bytes(run, shape, mesh, n_micro=n_micro)
+    t_c, t_m, t_l = flops / PEAK_FLOPS, hbm / HBM_BW, coll / ICI_BW
+    mf = model_flops(cfg, shape) / mesh.chips
+    terms = {"compute": t_c, "memory": t_m, "collective": t_l}
+    bottleneck = max(terms, key=terms.get)
+    t_step = max(terms.values())
+    if shape.kind == "decode":
+        # decode MFU is meaningless; report closeness to the memory roofline
+        # (cache+weights streamed once per token = the physical lower bound)
+        frac = t_m / t_step if t_step else 0.0
+    else:
+        frac = (mf / PEAK_FLOPS) / t_step if t_step else 0.0
+    return {
+        "arch": arch, "shape": shape_name, "status": "ok",
+        "chips": mesh.chips,
+        "flops_per_chip": flops, "hbm_bytes_per_chip": hbm,
+        "coll_bytes_per_chip": coll,
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_l,
+        "bottleneck": bottleneck,
+        "model_flops_per_chip": mf,
+        "useful_flops_ratio": mf / flops if flops else 0.0,
+        "roofline_fraction": frac,
+        "mfu_upper_bound": (mf / PEAK_FLOPS) / t_step if t_step else 0.0,
+    }
+
+
+def full_table(mesh: MeshSpec = SINGLE_POD) -> list[dict]:
+    rows = []
+    for arch in registry.ARCH_IDS:
+        for shape_name in SHAPES:
+            rows.append(analyze_cell(arch, shape_name, mesh))
+    return rows
+
+
+def render_markdown(rows: list[dict]) -> str:
+    out = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
+           "bottleneck | useful/HLO | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"skip | — | {r['reason'][:44]} |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} | "
+            f"{r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+            f"{r['bottleneck']} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2f} |")
+    return "\n".join(out)
+
+
+def main():
+    rows = full_table()
+    print(render_markdown(rows))
+    out = Path("artifacts/benchmarks")
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "roofline.json").write_text(json.dumps(rows, indent=2))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Paper Table 4: layer-group sensitivity sweep (boost exactly one group).
+
+Partitions the toy LM's 8 layers into 4 groups of 2 and measures ΔPPL when
+boosting each group alone to K256V128 — the §4.4 methodology, including the
+negative-transfer detector.
+"""
+from __future__ import annotations
+
+from benchmarks import common as C
+from repro.core import mixedkv, sensitivity
+
+
+def run(params, base_ppl: float) -> dict:
+    l = C.TOY.num_layers
+    d_uniform = C.delta_ppl(params, base_ppl, mixedkv.uniform(l))
+
+    def eval_fn(s):
+        return C.delta_ppl(params, base_ppl, s)
+
+    sweep = sensitivity.layer_group_sweep(l, 2, eval_fn)
+    neg = sensitivity.negative_transfer_groups(sweep, d_uniform)
+    result = {
+        "uniform_delta": d_uniform,
+        "groups": [{"label": r.label, "delta_ppl": r.score} for r in sweep],
+        "negative_transfer": [r.label for r in neg],
+        "most_beneficial": min(sweep, key=lambda r: r.score).label,
+    }
+    C.save_table("table4", result)
+    return result
+
+
+def render(res) -> str:
+    out = ["", "## Table 4 — layer-group sensitivity (toy LM)",
+           f"uniform baseline ΔPPL {res['uniform_delta']:+.4f}",
+           "| group | ΔPPL (boost this group only) |", "|---|---|"]
+    for g in res["groups"]:
+        tag = " (negative transfer)" if g["label"] in res[
+            "negative_transfer"] else ""
+        out.append(f"| {g['label']} | {g['delta_ppl']:+.4f}{tag} |")
+    out.append(f"most beneficial: {res['most_beneficial']}; "
+               f"negative-transfer groups: {res['negative_transfer'] or '—'}")
+    return "\n".join(out)

@@ -1,0 +1,72 @@
+"""Paper Table 5 + §4.6: norm quantization and the K/V norm asymmetry.
+
+Configs: fp32 norms (angle-only), norm8 (8-bit linear K and V), K8V4-log
+(asymmetric), and the forbidden K4-log (catastrophic per the paper). Also
+measures the K-vs-V sensitivity ratio directly.
+"""
+from __future__ import annotations
+
+from benchmarks import common as C
+from repro.core import mixedkv, rates
+
+
+def run(params, base_ppl: float) -> list[dict]:
+    l, d = C.TOY.num_layers, C.TOY.head_dim
+    sched = mixedkv.uniform(l)
+    rows = []
+    configs = [
+        ("fp32 norms", rates.NORM_FP32, rates.NORM_FP32),
+        ("norm8", rates.NormConfig(8), rates.NormConfig(8)),
+        ("K8V4-log", rates.NORM_K8, rates.NORM_V4_LOG),
+        ("K4-log V8 (anti-config)", rates.NormConfig(4, True),
+         rates.NormConfig(8)),
+        ("K4-lin V8 (anti-config)", rates.NormConfig(4, False),
+         rates.NormConfig(8)),
+    ]
+    for name, kn, vn in configs:
+        delta = C.delta_ppl(params, base_ppl, sched, kn, vn)
+        rows.append({
+            "config": name,
+            "delta_ppl": delta,
+            "total_bits": rates.schedule_total_bits(sched, kn, vn, d),
+        })
+    k8v4 = next(r for r in rows if r["config"] == "K8V4-log")["delta_ppl"]
+    v8k4 = next(r for r in rows if r["config"].startswith("K4-log")
+                )["delta_ppl"]
+    # The asymmetry DIRECTION is model-specific (paper §4.5/§6): our toy LM
+    # is V-dominated in the angle experiments (Table 2 picks K128V256, like
+    # TinyLlama), so its norm sensitivity should flip the same way. The
+    # check is INTERNAL CONSISTENCY: the cheap-norm side must be the side
+    # the angle sweep found insensitive.
+    import json
+    from benchmarks.common import ART
+
+    t2 = json.loads((ART / "table2.json").read_text()) \
+        if (ART / "table2.json").exists() else None
+    v_dom_angles = bool(t2 and "V256" in t2["best"]["label"])
+    norm_pref_v_cheap = bool(k8v4 < v8k4)  # K8V4 better => V norms cheap
+    rows.append({
+        "config": "CHECK asymmetry direction consistent with angle sweep",
+        "delta_ppl": 0.0, "total_bits": 0.0,
+        "v_dominated_angles": v_dom_angles,
+        "k8v4_delta": k8v4, "v8k4_delta": v8k4,
+        "holds": bool(v_dom_angles != norm_pref_v_cheap) if t2 else None,
+        "recommended": "K4-log/V8" if v_dom_angles else "K8/V4-log",
+    })
+    C.save_table("table5", rows)
+    return rows
+
+
+def render(rows) -> str:
+    out = ["", "## Table 5 — norm quantization (toy LM, d=64)",
+           "| config | total bits | ΔPPL |", "|---|---|---|"]
+    for r in rows:
+        if r["config"].startswith("CHECK"):
+            out.append(
+                f"| {r['config']} | — | holds={r['holds']}; this model is "
+                f"{'V' if r['v_dominated_angles'] else 'K'}-dominated -> "
+                f"recommended {r['recommended']} |")
+        else:
+            out.append(f"| {r['config']} | {r['total_bits']:.2f} | "
+                       f"{r['delta_ppl']:+.4f} |")
+    return "\n".join(out)

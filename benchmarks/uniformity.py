@@ -1,0 +1,69 @@
+"""Paper §2: angle uniformity after HD rotation — on the toy LM's REAL K/V.
+
+Extracts post-RoPE K/V from every layer of the trained toy model, applies
+the rotation, and reports the KS statistic of pair angles vs Uniform[0,2pi)
+— with and without the random sign diagonal (the mechanism test), plus
+angle-radius correlation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import angular
+from repro.core import fwht as F
+from repro.models import transformer
+
+
+def _ks_uniform(theta: np.ndarray) -> float:
+    u = np.sort(theta.ravel()) / (2 * np.pi)
+    grid = (np.arange(len(u)) + 0.5) / len(u)
+    return float(np.max(np.abs(u - grid)))
+
+
+def run(params) -> dict:
+    batch = jax.tree.map(jnp.asarray, dict(C._eval_batches()[0]))
+    pre = transformer.forward_prefill(
+        params, C.TOY, {"tokens": batch["tokens"]}, quantizer=None,
+        remat=False)
+    k_stack, v_stack = pre.kv_quant  # (L, B, S, nkv, d) raw
+    d = C.TOY.head_dim
+    signs = F.make_signs(0, d)
+    res = {}
+    for name, x in (("K", k_stack), ("V", v_stack)):
+        flat = np.asarray(x, np.float32).reshape(-1, d)[:20000]
+        y = F.rotate(jnp.asarray(flat), signs)
+        even, odd = angular.to_pairs(y)
+        theta = np.mod(np.arctan2(np.asarray(odd), np.asarray(even)),
+                       2 * np.pi)
+        r = np.hypot(np.asarray(even), np.asarray(odd))
+        y0 = F.fwht(jnp.asarray(flat))  # no sign rotation (control)
+        e0, o0 = angular.to_pairs(y0)
+        theta0 = np.mod(np.arctan2(np.asarray(o0), np.asarray(e0)),
+                        2 * np.pi)
+        res[name] = {
+            "ks_rotated": _ks_uniform(theta),
+            "ks_no_rotation": _ks_uniform(theta0),
+            "angle_radius_corr": float(abs(np.corrcoef(
+                theta.ravel(), r.ravel())[0, 1])),
+        }
+    res["check_uniform"] = bool(
+        res["K"]["ks_rotated"] < 0.05 and res["V"]["ks_rotated"] < 0.05)
+    C.save_table("uniformity", res)
+    return res
+
+
+def render(res) -> str:
+    out = ["", "## §2 — angle uniformity on real K/V (toy LM)",
+           "| tensor | KS (HD rotated) | KS (H only) | |angle,r| corr |",
+           "|---|---|---|---|"]
+    for name in ("K", "V"):
+        r = res[name]
+        out.append(f"| {name} | {r['ks_rotated']:.4f} | "
+                   f"{r['ks_no_rotation']:.4f} | "
+                   f"{r['angle_radius_corr']:.4f} |")
+    out.append(f"uniformity holds (KS<0.05 with rotation): "
+               f"{res['check_uniform']}")
+    return "\n".join(out)

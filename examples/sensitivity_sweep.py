@@ -1,0 +1,40 @@
+"""The paper's §3.2 configuration procedure, end to end, on a fresh model:
+train a small LM, run the 3-5-evaluation heuristic, print the chosen
+per-layer schedule — the exact workflow a practitioner would follow to
+configure TurboAngle for a new architecture (zero calibration data; the
+only model-specific piece is the layer-boost schedule).
+
+    PYTHONPATH=src python examples/sensitivity_sweep.py
+"""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "benchmarks")
+
+from benchmarks import common as C  # noqa: E402
+from repro.core import mixedkv, sensitivity  # noqa: E402
+
+params = C.train_toy_lm()
+base = C.perplexity(params)
+print(f"base PPL: {base:.4f}")
+
+uniform = mixedkv.uniform(C.TOY.num_layers)
+d_uni = C.delta_ppl(params, base, uniform)
+print(f"uniform K128V64 ({uniform.angle_bits():.2f} bits): "
+      f"ΔPPL {d_uni:+.4f}")
+
+
+def eval_fn(sched):
+    d = C.delta_ppl(params, base, sched)
+    print(f"  eval {sched.describe():<42s} "
+          f"{sched.angle_bits():.2f}b -> ΔPPL {d:+.4f}")
+    return d
+
+
+print("\nrunning the paper's E-grid heuristic (3-5 evals):")
+best = sensitivity.find_config(C.TOY.num_layers, eval_fn,
+                               n_early_grid=(2, 4))
+print(f"\nchosen: {best.label} ({best.schedule.angle_bits():.2f} angle "
+      f"bits) ΔPPL {best.score:+.4f} vs uniform {d_uni:+.4f}")
+print(f"schedule: {best.schedule.describe()}")

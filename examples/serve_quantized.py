@@ -1,0 +1,65 @@
+"""Batched serving with a TurboAngle-compressed KV cache.
+
+Prefills a batch of prompts, decodes greedily with the quantized cache, and
+compares memory + outputs against the bf16-cache reference path.
+
+    PYTHONPATH=src python examples/serve_quantized.py
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache import kvcache
+from repro.configs import registry
+from repro.core import mixedkv, rates
+from repro.core.quantizer import KVQuantizer, QuantizerConfig
+from repro.models import transformer
+from repro.serving import decode as decoding
+
+ARCH = "mistral-7b"  # the paper's eval model (reduced width for CPU)
+B, PROMPT, GEN = 4, 48, 24
+
+cfg = registry.get_reduced_config(ARCH)
+params, _ = transformer.init_params(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(0)
+prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, PROMPT)),
+                      jnp.int32)
+
+qz = KVQuantizer(QuantizerConfig(
+    head_dim=cfg.head_dim,
+    schedule=mixedkv.early_boost(cfg.num_layers, 2),  # E2 on 4 layers
+    k_norm=rates.NORM_K8, v_norm=rates.NORM_V4_LOG))
+
+
+def generate(quantizer):
+    pre = transformer.forward_prefill(
+        params, cfg, {"tokens": prompts}, quantizer=quantizer, remat=False)
+    cache = kvcache.cache_from_prefill(
+        pre.kv_quant, PROMPT, quantizer is not None, pad_to=PROMPT + GEN)
+    state = decoding.DecodeState(cache=cache, states=pre.states)
+    step = jax.jit(lambda s, t: decoding.decode_step(
+        params, cfg, s, t, quantizer=quantizer))
+    nxt = jnp.argmax(pre.last_logits, -1)[:, None].astype(jnp.int32)
+    out = [nxt]
+    for _ in range(GEN - 1):
+        logits, state = step(state, nxt)
+        nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out.append(nxt)
+    return jnp.concatenate(out, 1), state.cache
+
+
+tok_q, cache_q = generate(qz)
+tok_raw, cache_raw = generate(None)
+
+agree = float(jnp.mean((tok_q == tok_raw).astype(jnp.float32)))
+bytes_q = kvcache.cache_physical_bytes(cache_q)
+bytes_raw = kvcache.cache_physical_bytes(cache_raw)
+print(f"greedy tokens, quantized vs bf16 cache: {agree*100:.1f}% agreement")
+print(f"cache bytes: {bytes_q/1e6:.3f} MB quantized vs "
+      f"{bytes_raw/1e6:.3f} MB bf16 ({bytes_raw/bytes_q:.2f}x smaller)")
+print(f"rates: angle {qz.config.angle_bits():.2f} b/elem, end-to-end "
+      f"{qz.config.total_bits():.2f} b/elem")
+print(f"sample continuation (quantized): {np.asarray(tok_q[0])[:12]}")
+print(f"sample continuation (bf16)     : {np.asarray(tok_raw[0])[:12]}")

@@ -1,0 +1,243 @@
+"""KV cache structures + attention-over-cache (raw and TurboAngle-quantized).
+
+Layout: layer-stacked arrays (L_attn, B, T_max, n_kv, ...) so decode scans
+over layers with cache slices as scan xs/ys. Sliding-window configs store a
+ring buffer of T_max = window with the invariant that absolute position p
+lives in slot p % window (softmax is permutation-invariant over keys, and
+RoPE is applied before encoding, so slot order never matters).
+
+The quantized decode path implements the beyond-paper Hadamard-domain
+optimization: queries are rotated once (q -> HDq), scores are taken directly
+against the stored Hadamard-domain keys, and the inverse transform is applied
+once to the attention *output* instead of to every cached value vector.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.quantizer import KVQuantizer, QuantizedKV
+
+NEG_INF = -1e30
+
+
+class RawKVCache(NamedTuple):
+    """fp16/bf16 reference cache."""
+
+    k: jax.Array  # (L, B, T, n_kv, head_dim)
+    v: jax.Array
+    length: jax.Array  # () int32 — number of tokens already cached
+
+
+class QuantKVCache(NamedTuple):
+    """TurboAngle-compressed cache."""
+
+    k: QuantizedKV  # arrays (L, B, T, n_kv, ...)
+    v: QuantizedKV
+    length: jax.Array
+
+
+def _cache_tmax(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def init_raw_cache(cfg: ModelConfig, batch: int, seq_len: int,
+                   dtype=jnp.bfloat16) -> RawKVCache:
+    t = _cache_tmax(cfg, seq_len)
+    shape = (cfg.num_attn_layers, batch, t, cfg.num_kv_heads, cfg.head_dim)
+    return RawKVCache(
+        k=jnp.zeros(shape, dtype),
+        v=jnp.zeros(shape, dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def _quantized_zeros(qz: KVQuantizer, lead: tuple, norm_bits) -> QuantizedKV:
+    c = qz.config
+    if c.storage == "bitpack":
+        from repro.core import packing
+
+        idx = jnp.zeros(
+            (*lead, packing.packed_words(c.n_pairs, c.index_width)), jnp.uint32
+        )
+    else:
+        idx = jnp.zeros((*lead, c.n_pairs), c.index_dtype())
+    if norm_bits is None:
+        return QuantizedKV(
+            idx,
+            jnp.zeros((*lead, c.n_pairs), jnp.float32),
+            jnp.zeros((*lead, 1), jnp.float32),
+            jnp.zeros((*lead, 1), jnp.float32),
+        )
+    return QuantizedKV(
+        idx,
+        jnp.zeros((*lead, c.n_pairs), jnp.uint8),
+        jnp.zeros((*lead, 1), jnp.float32),
+        jnp.zeros((*lead, 1), jnp.float32),
+    )
+
+
+def init_quant_cache(cfg: ModelConfig, qz: KVQuantizer, batch: int,
+                     seq_len: int) -> QuantKVCache:
+    t = _cache_tmax(cfg, seq_len)
+    lead = (cfg.num_attn_layers, batch, t, cfg.num_kv_heads)
+    return QuantKVCache(
+        k=_quantized_zeros(qz, lead, qz.config.k_norm.bits),
+        v=_quantized_zeros(qz, lead, qz.config.v_norm.bits),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def cache_from_prefill(kv_stack, length: int, quantized: bool,
+                       pad_to: int | None = None) -> tuple:
+    """Wrap forward_prefill's scan outputs into a cache struct.
+
+    kv_stack is the (K, V) tuple of layer-stacked QuantizedKV (quantized) or
+    raw arrays; prefill emits (L, B, S, n_kv, ...). `pad_to` grows the token
+    axis to the serving capacity so decode steps have slots to append into
+    (dynamic_update_slice clamps out-of-range starts, which would silently
+    overwrite the last cached token otherwise).
+    """
+    k, v = kv_stack
+
+    def grow(t):
+        cur = t.shape[2]
+        if pad_to is None or pad_to <= cur:
+            return t
+        pad = [(0, 0)] * t.ndim
+        pad[2] = (0, pad_to - cur)
+        return jnp.pad(t, pad)
+
+    k = jax.tree.map(grow, k)
+    v = jax.tree.map(grow, v)
+    if quantized:
+        return QuantKVCache(k=k, v=v, length=jnp.asarray(length, jnp.int32))
+    return RawKVCache(k=k, v=v, length=jnp.asarray(length, jnp.int32))
+
+
+# ==================================================== cache update =========
+def _insert_slot(cache_len: jax.Array, window: Optional[int]) -> jax.Array:
+    if window is None:
+        return cache_len
+    return jnp.mod(cache_len, window)
+
+
+def append_raw(
+    layer_k: jax.Array,  # (B, T, n_kv, h) one layer's cache
+    layer_v: jax.Array,
+    new_k: jax.Array,  # (B, 1, n_kv, h)
+    new_v: jax.Array,
+    length: jax.Array,
+    window: Optional[int],
+):
+    slot = _insert_slot(length, window)
+    layer_k = jax.lax.dynamic_update_slice_in_dim(
+        layer_k, new_k.astype(layer_k.dtype), slot, axis=1)
+    layer_v = jax.lax.dynamic_update_slice_in_dim(
+        layer_v, new_v.astype(layer_v.dtype), slot, axis=1)
+    return layer_k, layer_v
+
+
+def append_quant(
+    layer_q: QuantizedKV,  # (B, T, n_kv, ...) one layer
+    new_q: QuantizedKV,  # (B, 1, n_kv, ...)
+    length: jax.Array,
+    window: Optional[int],
+) -> QuantizedKV:
+    slot = _insert_slot(length, window)
+    upd = lambda buf, new: jax.lax.dynamic_update_slice_in_dim(
+        buf, new.astype(buf.dtype), slot, axis=1)
+    return QuantizedKV(
+        indices=upd(layer_q.indices, new_q.indices),
+        norm_codes=upd(layer_q.norm_codes, new_q.norm_codes),
+        rmin=upd(layer_q.rmin, new_q.rmin),
+        rmax=upd(layer_q.rmax, new_q.rmax),
+    )
+
+
+# ================================================ attention over cache =====
+def _score_mask(t_max: int, n_valid: jax.Array, window: Optional[int]
+                ) -> jax.Array:
+    """(t_max,) bool — which cache slots participate."""
+    slots = jnp.arange(t_max)
+    if window is None:
+        return slots < n_valid
+    return slots < jnp.minimum(n_valid, window)
+
+
+def _gqa_softmax_attend(scores: jax.Array, vals: jax.Array, mask: jax.Array
+                        ) -> jax.Array:
+    """scores (B,nkv,g,T) x vals (B,T,nkv,hv) -> (B,nkv,g,hv), f32."""
+    scores = jnp.where(mask[None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bngt,btnh->bngh", p, vals.astype(jnp.float32))
+
+
+def attend_raw_cache(
+    q: jax.Array,  # (B, 1, nq, h) RoPE'd query
+    layer_k: jax.Array,  # (B, T, n_kv, h)
+    layer_v: jax.Array,
+    n_valid: jax.Array,
+    cfg: ModelConfig,
+) -> jax.Array:
+    b, _, nq, h = q.shape
+    nkv, g = cfg.num_kv_heads, cfg.q_per_kv
+    scale = 1.0 / np.sqrt(h)
+    qg = (q[:, 0].astype(jnp.float32) * scale).reshape(b, nkv, g, h)
+    scores = jnp.einsum("bngh,btnh->bngt", qg, layer_k.astype(jnp.float32))
+    mask = _score_mask(layer_k.shape[1], n_valid, cfg.sliding_window)
+    out = _gqa_softmax_attend(scores, layer_v, mask)
+    return out.reshape(b, 1, nq, h)
+
+
+def attend_quant_cache(
+    q: jax.Array,  # (B, 1, nq, h) RoPE'd query (logical head_dim)
+    layer_kq: QuantizedKV,  # (B, T, n_kv, ...)
+    layer_vq: QuantizedKV,
+    nk_bins: jax.Array,
+    nv_bins: jax.Array,
+    n_valid: jax.Array,
+    cfg: ModelConfig,
+    qz: KVQuantizer,
+) -> jax.Array:
+    """Hadamard-domain fused attention over the quantized cache.
+
+    scores = (HDq) . y_k   (no per-token inverse FWHT on keys)
+    out    = DH( sum_t p_t y_v_t )  (one inverse transform per query)
+    """
+    b, _, nq, h = q.shape
+    nkv, g = cfg.num_kv_heads, cfg.q_per_kv
+    scale = 1.0 / np.sqrt(h)
+    d_pad = qz.config.d_pad
+    q_rot = qz.rotate_query(q[:, 0]) * scale  # (B, nq, d_pad) f32
+    qg = q_rot.reshape(b, nkv, g, d_pad).astype(jnp.bfloat16)
+
+    # dequantized y-domain K/V are cast to bf16: on the XLA fallback path
+    # they materialize in HBM, and f32 doubles the decode memory term (§Perf
+    # iteration). The Pallas qattn kernel dequantizes in VMEM and never
+    # materializes them at all. Scores still accumulate in f32 (MXU-style).
+    y_k = qz.decode_rotated(layer_kq, nk_bins, qz.config.k_norm
+                            ).astype(jnp.bfloat16)
+    scores = jnp.einsum("bngh,btnh->bngt", qg, y_k,
+                        preferred_element_type=jnp.float32)
+    mask = _score_mask(y_k.shape[1], n_valid, cfg.sliding_window)
+
+    y_v = qz.decode_rotated(layer_vq, nv_bins, qz.config.v_norm
+                            ).astype(jnp.bfloat16)
+    out_y = _gqa_softmax_attend(scores, y_v, mask)  # (B,nkv,g,d_pad)
+    out = qz.unrotate_output(out_y)  # (B,nkv,g,h) original domain
+    return out.reshape(b, 1, nq, h)
+
+
+def cache_physical_bytes(cache) -> int:
+    """Actual bytes held by the cache pytree (what memory_analysis sees)."""
+    return sum(
+        x.size * x.dtype.itemsize for x in jax.tree.leaves(cache)
+        if hasattr(x, "dtype")
+    )

@@ -1,0 +1,186 @@
+"""Config system: architecture, quantization, parallelism, run options."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core import mixedkv, rates
+from repro.core.quantizer import QuantizerConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # "decoder" | "encoder" | "hybrid_ssm" | "xlstm"
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    act: str = "silu"  # gate activation for GLU blocks
+    glu: bool = True
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: Optional[int] = None
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    # --- MoE ---
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_dispatch_groups: int = 1  # token groups for shard-local dispatch
+    # --- SSM / hybrid (zamba2) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    attn_every: int = 0  # shared attention block every N ssm blocks
+    # --- xLSTM ---
+    slstm_every: int = 0  # one sLSTM per N-block group (rest mLSTM)
+    # --- frontend stub ---
+    frontend: str = "text"  # "text" | "patch_stub" | "frame_stub"
+    frontend_tokens: int = 0  # e.g. number of image patches prepended
+    # --- numerics ---
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    # --- feature flags ---
+    use_pallas: bool = False  # Pallas kernels (TPU); pure-JAX path otherwise
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.num_heads % max(self.num_kv_heads, 1) != 0:
+            raise ValueError("num_heads must be divisible by num_kv_heads")
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    @property
+    def has_kv_cache(self) -> bool:
+        if self.family == "encoder":
+            return False
+        if self.family == "xlstm":
+            return False
+        return True
+
+    @property
+    def num_attn_layers(self) -> int:
+        """Layers that own a KV cache."""
+        if not self.has_kv_cache:
+            return 0
+        if self.family == "hybrid_ssm":
+            return self.num_layers // max(self.attn_every, 1)
+        return self.num_layers
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND roofline checks)."""
+        d, f, v, h = self.d_model, self.d_ff, self.vocab_size, self.head_dim
+        nq, nkv, L = self.num_heads, self.num_kv_heads, self.num_layers
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        if self.family == "xlstm":
+            per = _xlstm_layer_params(self)
+            return emb + L * per
+        attn = d * (nq * h) + 2 * d * (nkv * h) + (nq * h) * d
+        if self.family == "hybrid_ssm":
+            ssm_per = _mamba2_layer_params(self)
+            n_attn = self.num_attn_layers
+            return emb + L * ssm_per + attn  # attn params shared once
+        if self.moe_experts:
+            ffn = self.moe_experts * (3 if self.glu else 2) * d * f + d * self.moe_experts
+        else:
+            ffn = (3 if self.glu else 2) * d * f
+        return emb + L * (attn + ffn + 2 * d)
+
+    def active_param_count(self) -> int:
+        """MoE: only top-k experts' FFN params are active per token."""
+        if not self.moe_experts:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        per_exp = (3 if self.glu else 2) * d * f
+        inactive = (self.moe_experts - self.moe_top_k) * per_exp
+        return self.param_count() - self.num_layers * inactive
+
+
+def _mamba2_layer_params(cfg: ModelConfig) -> int:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    nheads = d_in // cfg.head_dim
+    return (
+        d * (2 * d_in + 2 * cfg.ssm_state + nheads)  # in_proj(z,x) + B,C,dt
+        + cfg.ssm_conv_width * d_in  # depthwise conv
+        + d_in * d  # out_proj
+        + 2 * nheads  # A_log, D
+        + d  # norm
+    )
+
+
+def _xlstm_layer_params(cfg: ModelConfig) -> int:
+    d, h = cfg.d_model, cfg.num_heads
+    # mLSTM block: qkv + gates + out + norm (approximate paper block)
+    return 4 * d * d + 2 * d * h + d * d + 2 * d
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """KV-cache quantization settings attached to a run."""
+
+    enabled: bool = True
+    schedule: str = "uniform"  # "uniform" | "early_boost" | "selective"
+    n_early: int = 0
+    boost_k: int = 256
+    boost_v: int = 128
+    base_k: int = 128
+    base_v: int = 64
+    boosted_layers: tuple[int, ...] = ()
+    k_norm_bits: Optional[int] = 8
+    k_norm_log: bool = False
+    v_norm_bits: Optional[int] = 4
+    v_norm_log: bool = True
+    seed: int = 0
+    storage: str = "uint8"
+    hadamard_domain_attn: bool = True  # beyond-paper fused score path
+
+    def build(self, head_dim: int, num_attn_layers: int) -> QuantizerConfig:
+        if self.schedule == "uniform":
+            sched = mixedkv.uniform(num_attn_layers, self.base_k, self.base_v)
+        elif self.schedule == "early_boost":
+            sched = mixedkv.early_boost(
+                num_attn_layers, self.n_early, self.boost_k, self.boost_v,
+                self.base_k, self.base_v
+            )
+        elif self.schedule == "selective":
+            sched = mixedkv.selective(
+                num_attn_layers, self.boosted_layers, self.boost_k,
+                self.boost_v, self.base_k, self.base_v
+            )
+        else:
+            raise ValueError(self.schedule)
+        return QuantizerConfig(
+            head_dim=head_dim,
+            schedule=sched,
+            k_norm=rates.NormConfig(self.k_norm_bits, self.k_norm_log),
+            v_norm=rates.NormConfig(self.v_norm_bits, self.v_norm_log),
+            seed=self.seed,
+            storage=self.storage,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    """Per-arch parallelism/memory knobs consumed by launch/."""
+
+    microbatch: int = 0  # 0 -> no gradient accumulation (one shot)
+    remat: str = "full"  # "none" | "full" (per-layer checkpointing)
+    fsdp: bool = True  # shard params over the data axis
+    decode_microbatch: int = 0
+    accum_dtype: str = "float32"  # gradient accumulator dtype
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    quant: QuantConfig = QuantConfig()
+    parallel: ParallelConfig = ParallelConfig()

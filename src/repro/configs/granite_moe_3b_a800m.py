@@ -1,0 +1,43 @@
+"""granite-moe-3b-a800m — fine-grained MoE decoder
+[hf:ibm-granite/granite-3.0 family].
+
+32L d_model=1536 24H (GQA kv=8) d_ff=512/expert vocab=49155, 40 experts
+top-8. Expert-parallel over the "model" mesh axis.
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig, ParallelConfig, QuantConfig
+
+ARCH_ID = "granite-moe-3b-a800m"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="decoder",
+        num_layers=32,
+        d_model=1536,
+        num_heads=24,
+        num_kv_heads=8,
+        d_ff=512,
+        vocab_size=49_155,
+        head_dim=64,
+        moe_experts=40,
+        moe_top_k=8,
+        tie_embeddings=True,
+    )
+
+
+def reduced_config() -> ModelConfig:
+    return dataclasses.replace(
+        config(), num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        head_dim=16, d_ff=32, vocab_size=256, moe_experts=4, moe_top_k=2,
+    )
+
+
+def quant_config() -> QuantConfig:
+    return QuantConfig(schedule="early_boost", n_early=4)
+
+
+def parallel_config() -> ParallelConfig:
+    return ParallelConfig(microbatch=64, remat="full")

@@ -1,0 +1,46 @@
+"""hubert-xlarge — encoder-only audio model [arXiv:2106.07447].
+
+48L d_model=1280 16H (kv=16) d_ff=5120 vocab=504 (cluster targets). The conv
+waveform frontend is a STUB: input_specs() provides precomputed frame
+embeddings (B, S, d_model). Encoder-only -> no autoregressive decode; the
+decode_* shapes are skipped (DESIGN.md §4) and TurboAngle has no inference
+KV cache to compress here (validated on encoder K/V activations in tests).
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig, ParallelConfig, QuantConfig
+
+ARCH_ID = "hubert-xlarge"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="encoder",
+        num_layers=48,
+        d_model=1280,
+        num_heads=16,
+        num_kv_heads=16,
+        d_ff=5120,
+        vocab_size=504,
+        head_dim=80,
+        act="gelu",
+        glu=False,
+        rope_theta=0.0,  # HuBERT uses conv positional encodings (stubbed)
+        frontend="frame_stub",
+    )
+
+
+def reduced_config() -> ModelConfig:
+    return dataclasses.replace(
+        config(), num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        head_dim=16, d_ff=128, vocab_size=32,
+    )
+
+
+def quant_config() -> QuantConfig:
+    return QuantConfig(enabled=False)  # no KV cache at inference
+
+
+def parallel_config() -> ParallelConfig:
+    return ParallelConfig(microbatch=32, remat="full")

@@ -1,0 +1,41 @@
+"""llama3-405b — dense GQA decoder [arXiv:2407.21783].
+
+126L d_model=16384 128H (GQA kv=8) d_ff=53248 vocab=128256. The scale
+stress-test: FSDP x TP x microbatched grad accumulation; 8-bit optimizer
+states; sequence-parallel residual stream.
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig, ParallelConfig, QuantConfig
+
+ARCH_ID = "llama3-405b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="decoder",
+        num_layers=126,
+        d_model=16384,
+        num_heads=128,
+        num_kv_heads=8,
+        d_ff=53248,
+        vocab_size=128_256,
+        head_dim=128,
+        rope_theta=500_000.0,
+    )
+
+
+def reduced_config() -> ModelConfig:
+    return dataclasses.replace(
+        config(), num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        head_dim=16, d_ff=128, vocab_size=256,
+    )
+
+
+def quant_config() -> QuantConfig:
+    return QuantConfig(schedule="early_boost", n_early=4)
+
+
+def parallel_config() -> ParallelConfig:
+    return ParallelConfig(microbatch=32, remat="full")

@@ -1,0 +1,45 @@
+"""mixtral-8x22b — 8-expert top-2 MoE decoder with sliding-window attention
+[arXiv:2401.04088].
+
+56L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=32768, SWA window 4096.
+The window bounds the KV cache, so long_500k *runs* for this arch (ring
+cache of 4096 slots).
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig, ParallelConfig, QuantConfig
+
+ARCH_ID = "mixtral-8x22b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="decoder",
+        num_layers=56,
+        d_model=6144,
+        num_heads=48,
+        num_kv_heads=8,
+        d_ff=16384,
+        vocab_size=32_768,
+        head_dim=128,
+        sliding_window=4096,
+        moe_experts=8,
+        moe_top_k=2,
+    )
+
+
+def reduced_config() -> ModelConfig:
+    return dataclasses.replace(
+        config(), num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        head_dim=16, d_ff=64, vocab_size=256, moe_experts=4, moe_top_k=2,
+        sliding_window=16,
+    )
+
+
+def quant_config() -> QuantConfig:
+    return QuantConfig(schedule="early_boost", n_early=4)
+
+
+def parallel_config() -> ParallelConfig:
+    return ParallelConfig(microbatch=32, remat="full")

@@ -1,0 +1,45 @@
+"""paligemma-3b — SigLIP + Gemma VLM backbone [arXiv:2407.07726; hf].
+
+18L d_model=2048 8H (MQA kv=1) d_ff=16384 vocab=257216. The SigLIP vision
+tower is a STUB per the assignment: input_specs() provides precomputed patch
+embeddings (B, 256, d_model) prepended to the text sequence.
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig, ParallelConfig, QuantConfig
+
+ARCH_ID = "paligemma-3b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="decoder",
+        num_layers=18,
+        d_model=2048,
+        num_heads=8,
+        num_kv_heads=1,  # MQA
+        d_ff=16384,
+        vocab_size=257_216,
+        act="gelu",  # gemma GeGLU
+        glu=True,
+        rope_theta=10_000.0,
+        frontend="patch_stub",
+        frontend_tokens=256,
+    )
+
+
+def reduced_config() -> ModelConfig:
+    return dataclasses.replace(
+        config(), num_layers=2, d_model=64, num_heads=4, num_kv_heads=1,
+        head_dim=16, d_ff=128, vocab_size=128, frontend_tokens=4,
+    )
+
+
+def quant_config() -> QuantConfig:
+    # concentrated early sensitivity heuristic (paper §6: start E4 K-boost)
+    return QuantConfig(schedule="early_boost", n_early=4)
+
+
+def parallel_config() -> ParallelConfig:
+    return ParallelConfig(microbatch=32, remat="full")

@@ -1,0 +1,41 @@
+"""qwen3-0.6b — dense decoder with qk-norm [hf:Qwen/Qwen3-8B family].
+
+28L d_model=1024 16H (GQA kv=8) d_ff=3072 vocab=151936, qk_norm.
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig, ParallelConfig, QuantConfig
+
+ARCH_ID = "qwen3-0.6b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="decoder",
+        num_layers=28,
+        d_model=1024,
+        num_heads=16,
+        num_kv_heads=8,
+        d_ff=3072,
+        vocab_size=151_936,
+        head_dim=64,
+        qk_norm=True,
+        rope_theta=1_000_000.0,
+        tie_embeddings=True,
+    )
+
+
+def reduced_config() -> ModelConfig:
+    return dataclasses.replace(
+        config(), num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        head_dim=16, d_ff=128, vocab_size=256,
+    )
+
+
+def quant_config() -> QuantConfig:
+    return QuantConfig(schedule="early_boost", n_early=4)
+
+
+def parallel_config() -> ParallelConfig:
+    return ParallelConfig(microbatch=64, remat="full")

@@ -1,0 +1,107 @@
+"""Architecture registry: --arch <id> -> configs, shape skips, input specs."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig, QuantConfig, RunConfig
+from repro.models.common import SHAPES, ShapeSpec
+
+_MODULES = {
+    "paligemma-3b": "paligemma_3b",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "hubert-xlarge": "hubert_xlarge",
+    "llama3-405b": "llama3_405b",
+    "deepseek-7b": "deepseek_7b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "xlstm-350m": "xlstm_350m",
+}
+ARCH_IDS = tuple(_MODULES)  # the 10 assigned architectures
+EXTRA_IDS = ("mistral-7b",)  # the paper's own eval model
+ALL_IDS = ARCH_IDS + EXTRA_IDS
+
+
+def _module(arch_id: str):
+    key = arch_id if arch_id in _MODULES else None
+    if key is None and arch_id in EXTRA_IDS:
+        return importlib.import_module("repro.configs.mistral_7b")
+    if key is None:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ALL_IDS}")
+    return importlib.import_module(f"repro.configs.{_MODULES[key]}")
+
+
+def get_model_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).config()
+
+
+def get_reduced_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).reduced_config()
+
+
+def get_run_config(arch_id: str) -> RunConfig:
+    m = _module(arch_id)
+    return RunConfig(model=m.config(), quant=m.quant_config(),
+                     parallel=m.parallel_config())
+
+
+# ------------------------------------------------------------- skips -------
+def shape_skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> str | None:
+    """None -> run the cell; otherwise the documented skip reason."""
+    if cfg.family == "encoder" and shape.kind == "decode":
+        return "encoder-only: no autoregressive decode step"
+    if shape.name == "long_500k":
+        sub_quadratic = (
+            cfg.family in ("hybrid_ssm", "xlstm")
+            or cfg.sliding_window is not None
+        )
+        if not sub_quadratic:
+            return ("pure full-attention arch: 500k-token KV cache is "
+                    "skipped per assignment (sub-quadratic archs only)")
+    return None
+
+
+def run_cells(arch_id: str) -> list[tuple[str, str | None]]:
+    cfg = get_model_config(arch_id)
+    return [(s.name, shape_skip_reason(cfg, s)) for s in SHAPES.values()]
+
+
+# -------------------------------------------------------- input specs ------
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of one cell.
+
+    Weak-type-correct, shardable, no device allocation — feed to
+    jax.jit(...).lower(**input_specs(...)).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "frame_stub":
+            batch = {"frames": sds((b, s, cfg.d_model), f32)}
+            if shape.kind == "train":
+                batch["labels"] = sds((b, s), i32)
+            return {"batch": batch}
+        if cfg.frontend == "patch_stub":
+            p = cfg.frontend_tokens
+            batch = {
+                "patch_embeds": sds((b, p, cfg.d_model), f32),
+                "tokens": sds((b, s - p), i32),
+            }
+            if shape.kind == "train":
+                batch["labels"] = sds((b, s - p), i32)
+            return {"batch": batch}
+        batch = {"tokens": sds((b, s), i32)}
+        if shape.kind == "train":
+            batch["labels"] = sds((b, s), i32)
+        return {"batch": batch}
+
+    # decode: one new token against a cache/state of size seq_len
+    return {"tokens": sds((b, 1), i32)}

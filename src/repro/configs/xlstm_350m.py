@@ -1,0 +1,43 @@
+"""xlstm-350m — sLSTM + mLSTM blocks [arXiv:2405.04517].
+
+24L d_model=1024 4H d_ff=0 (projections live inside the xLSTM blocks)
+vocab=50304. No KV cache: TurboAngle is inapplicable (DESIGN.md
+§Arch-applicability); decode shapes run on the O(1) recurrent state, so
+long_500k *runs* for this arch.
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig, ParallelConfig, QuantConfig
+
+ARCH_ID = "xlstm-350m"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="xlstm",
+        num_layers=24,
+        d_model=1024,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=0,
+        vocab_size=50_304,
+        head_dim=256,
+        slstm_every=8,  # 7 mLSTM : 1 sLSTM per group (paper's [7:1] ratio)
+        tie_embeddings=True,
+    )
+
+
+def reduced_config() -> ModelConfig:
+    return dataclasses.replace(
+        config(), num_layers=4, d_model=64, num_heads=2, num_kv_heads=2,
+        head_dim=32, vocab_size=256, slstm_every=2,
+    )
+
+
+def quant_config() -> QuantConfig:
+    return QuantConfig(enabled=False)  # no KV cache
+
+
+def parallel_config() -> ParallelConfig:
+    return ParallelConfig(microbatch=64, remat="full")

@@ -1,0 +1,45 @@
+"""zamba2-2.7b — Mamba2 backbone + shared attention blocks [arXiv:2411.15242].
+
+54L d_model=2560 32H (kv=32) d_ff=10240 vocab=32000, ssm_state=64. The
+shared attention block (one weight set) is applied every 6 Mamba2 layers —
+9 KV caches total; TurboAngle quantizes those. head_dim=80 is zero-padded to
+128 inside the quantizer (FWHT needs a power of two).
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig, ParallelConfig, QuantConfig
+
+ARCH_ID = "zamba2-2.7b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="hybrid_ssm",
+        num_layers=54,
+        d_model=2560,
+        num_heads=32,
+        num_kv_heads=32,
+        d_ff=10240,
+        vocab_size=32_000,
+        head_dim=80,
+        ssm_state=64,
+        ssm_expand=2,
+        attn_every=6,
+        tie_embeddings=True,
+    )
+
+
+def reduced_config() -> ModelConfig:
+    return dataclasses.replace(
+        config(), num_layers=4, d_model=64, num_heads=4, num_kv_heads=4,
+        head_dim=16, d_ff=128, vocab_size=128, ssm_state=8, attn_every=2,
+    )
+
+
+def quant_config() -> QuantConfig:
+    return QuantConfig(schedule="early_boost", n_early=2)  # 2 of 9 attn caches
+
+
+def parallel_config() -> ParallelConfig:
+    return ParallelConfig(microbatch=32, remat="full")

@@ -1,0 +1,44 @@
+"""TurboAngle core: FWHT angular KV quantization (the paper's contribution)."""
+from repro.core.angular import AngularCode, decode, decode_rotated, encode
+from repro.core.fwht import make_signs, rotate, unrotate
+from repro.core.mixedkv import MixedKVSchedule, early_boost, selective, uniform
+from repro.core.quantizer import (
+    KVQuantizer,
+    QuantizedKV,
+    QuantizerConfig,
+    make_default_quantizer,
+)
+from repro.core.rates import (
+    NORM8,
+    NORM_FP32,
+    NORM_K8,
+    NORM_V4_LOG,
+    NormConfig,
+    angle_bits_per_element,
+    total_bits_per_element,
+)
+
+__all__ = [
+    "AngularCode",
+    "KVQuantizer",
+    "MixedKVSchedule",
+    "NORM8",
+    "NORM_FP32",
+    "NORM_K8",
+    "NORM_V4_LOG",
+    "NormConfig",
+    "QuantizedKV",
+    "QuantizerConfig",
+    "angle_bits_per_element",
+    "decode",
+    "decode_rotated",
+    "early_boost",
+    "encode",
+    "make_default_quantizer",
+    "make_signs",
+    "rotate",
+    "selective",
+    "total_bits_per_element",
+    "uniform",
+    "unrotate",
+]

@@ -1,0 +1,115 @@
+"""Uniform angle quantization of consecutive FWHT-domain pairs (paper Alg. 1).
+
+Encode:  y = H D x;  for each pair i: r_i = |(y_2i, y_2i+1)|,
+         theta_i = atan2(y_2i+1, y_2i),  k_i = floor(n * theta / 2pi) mod n.
+Decode:  yhat_2i = r_i cos(2pi (k_i + 1/2)/n), yhat_2i+1 = r_i sin(...),
+         xhat = D H yhat.
+
+We reconstruct at the *bin center* (k + 1/2), the conditional mean of a
+uniform angle within the bin — this is the MSE-optimal decoder for a uniform
+distribution and matches the paper's "uniform bins are optimal" argument.
+
+All functions operate on the last axis (the head dimension d) and broadcast
+over arbitrary leading axes (layers, batch, heads, tokens).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fwht as F
+
+TWO_PI = 2.0 * np.pi
+
+
+class AngularCode(NamedTuple):
+    """Encoded representation of a batch of d-vectors.
+
+    indices: int32 angle bins in [0, n) — callers may narrow to uint8/uint16
+             or bit-pack via `repro.core.packing`.
+    norms:   f32 per-pair norms (fp32 reference path; quantize via
+             `repro.core.norms` for the deployable path).
+    """
+
+    indices: jax.Array  # (..., d/2)
+    norms: jax.Array  # (..., d/2)
+
+
+def to_pairs(y: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Split last axis into (even, odd) consecutive elements."""
+    d = y.shape[-1]
+    y2 = y.reshape(*y.shape[:-1], d // 2, 2)
+    return y2[..., 0], y2[..., 1]
+
+
+def from_pairs(even: jax.Array, odd: jax.Array) -> jax.Array:
+    y2 = jnp.stack([even, odd], axis=-1)
+    return y2.reshape(*even.shape[:-1], even.shape[-1] * 2)
+
+
+def quantize_angles(theta: jax.Array, n_bins: jax.Array | int) -> jax.Array:
+    """k = floor(n * theta / 2pi) mod n; theta in (-pi, pi] from atan2."""
+    t = jnp.mod(theta, TWO_PI)  # -> [0, 2pi)
+    k = jnp.floor(t * (jnp.asarray(n_bins, jnp.float32) / TWO_PI)).astype(jnp.int32)
+    # Guard the theta == 2pi- float edge.
+    return jnp.clip(k, 0, jnp.asarray(n_bins, jnp.int32) - 1)
+
+
+def dequantize_angles(k: jax.Array, n_bins: jax.Array | int) -> jax.Array:
+    """Bin-center reconstruction angle."""
+    return (k.astype(jnp.float32) + 0.5) * (TWO_PI / jnp.asarray(n_bins, jnp.float32))
+
+
+def encode(x: jax.Array, n_bins: jax.Array | int, signs: jax.Array) -> AngularCode:
+    """TurboAngle encode (Alg. 1). x: (..., d) with d a power of two.
+
+    `n_bins` may be a scalar or any shape broadcastable against the pair
+    layout (..., d/2) — per-layer MixedKV passes an (L, 1, 1, 1, 1) array.
+    """
+    y = F.rotate(x.astype(jnp.float32), signs)
+    even, odd = to_pairs(y)
+    r = jnp.sqrt(even * even + odd * odd)
+    theta = jnp.arctan2(odd, even)
+    k = quantize_angles(theta, n_bins)
+    return AngularCode(indices=k, norms=r)
+
+
+def decode(code: AngularCode, n_bins: jax.Array | int, signs: jax.Array) -> jax.Array:
+    """TurboAngle decode: polar -> Cartesian -> inverse rotation."""
+    theta_hat = dequantize_angles(code.indices, n_bins)
+    r = code.norms.astype(jnp.float32)
+    even = r * jnp.cos(theta_hat)
+    odd = r * jnp.sin(theta_hat)
+    y_hat = from_pairs(even, odd)
+    return F.unrotate(y_hat, signs)
+
+
+def decode_rotated(code: AngularCode, n_bins: jax.Array | int) -> jax.Array:
+    """Decode to the Hadamard domain only (no inverse rotation).
+
+    Used by the Hadamard-domain attention path: scores are computed against
+    y-domain keys directly since q.k = (HDq).(HDk).
+    """
+    theta_hat = dequantize_angles(code.indices, n_bins)
+    r = code.norms.astype(jnp.float32)
+    return from_pairs(r * jnp.cos(theta_hat), r * jnp.sin(theta_hat))
+
+
+def trig_tables(n_bins: int) -> tuple[jax.Array, jax.Array]:
+    """Precomputed (cos, sin) lookup tables at bin centers (kernel path)."""
+    centers = (jnp.arange(n_bins, dtype=jnp.float32) + 0.5) * (TWO_PI / n_bins)
+    return jnp.cos(centers), jnp.sin(centers)
+
+
+def angular_mse_bound(n_bins: int) -> float:
+    """Expected relative MSE of bin-center uniform angle quantization.
+
+    For angle error e ~ U(-pi/n, pi/n), E|y - yhat|^2 / E|y|^2
+    = 2(1 - E cos e) = 2(1 - sinc(1/n)) ~= (pi/n)^2 / 3.
+    Used by napkin-math checks in tests and the rate/distortion benchmark.
+    """
+    half = np.pi / n_bins
+    return float(2.0 * (1.0 - np.sin(half) / half))

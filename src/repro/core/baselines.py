@@ -1,0 +1,64 @@
+"""Baseline KV quantizers the paper compares against.
+
+TurboQuant (Zandieh et al. 2025): FWHT + random sign rotation as
+preprocessing, then *scalar* symmetric b-bit quantization with group size g
+(per-group absmax scale). The paper's Table 1 rows TQ-sym4-g4 / TQ-sym3-g4.
+
+KIVI-style (Liu et al. 2024): per-channel asymmetric quantization of raw
+activations (K per-channel, V per-token), no transform — the "original
+coordinate system + calibration-shaped" family, used as a second reference
+point in benchmarks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fwht as F
+
+
+def _sym_scalar_quant(y: jax.Array, bits: int, group: int) -> jax.Array:
+    """Symmetric group-wise scalar fake-quant along the last axis."""
+    d = y.shape[-1]
+    if d % group != 0:
+        raise ValueError(f"d={d} not divisible by group={group}")
+    g = y.reshape(*y.shape[:-1], d // group, group)
+    qmax = float(2 ** (bits - 1) - 1)
+    scale = jnp.max(jnp.abs(g), axis=-1, keepdims=True) / qmax
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(g / scale), -qmax, qmax)
+    return (q * scale).reshape(y.shape)
+
+
+def turboquant_sym(
+    x: jax.Array, bits: int, group: int, signs: jax.Array
+) -> jax.Array:
+    """TQ-sym{bits}-g{group}: rotate -> scalar quant -> unrotate (fake-quant).
+
+    Rate: `bits` per element (scales counted as overhead the same way the
+    paper's Table 1 does — i.e. not at all).
+    """
+    y = F.rotate(x.astype(jnp.float32), signs)
+    y_hat = _sym_scalar_quant(y, bits, group)
+    return F.unrotate(y_hat, signs)
+
+
+def kivi_asym(
+    x: jax.Array, bits: int, *, axis: int = -1
+) -> jax.Array:
+    """Per-channel/per-token asymmetric min-max fake-quant (KIVI-style).
+
+    axis=-1 quantizes per-token (each vector gets its own min/max over
+    channels); axis=-2 quantizes per-channel over the token axis.
+    """
+    levels = float(2**bits - 1)
+    vmin = jnp.min(x, axis=axis, keepdims=True)
+    vmax = jnp.max(x, axis=axis, keepdims=True)
+    scale = jnp.maximum(vmax - vmin, 1e-12)
+    q = jnp.clip(jnp.round((x - vmin) / scale * levels), 0.0, levels)
+    return q / levels * scale + vmin
+
+
+def fp8_sim(x: jax.Array) -> jax.Array:
+    """e4m3 round-trip — the 'cheap hardware dtype' reference point."""
+    return x.astype(jnp.float8_e4m3fn).astype(x.dtype)

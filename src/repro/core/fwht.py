@@ -1,0 +1,100 @@
+"""Fast Walsh-Hadamard Transform with random sign rotation.
+
+The normalized Hadamard matrix H in {+1/sqrt(d), -1/sqrt(d)}^{d x d} is
+symmetric orthonormal and therefore self-inverse (H^-1 = H^T = H). We compute
+H @ x in O(d log d) with a butterfly decomposition expressed functionally
+(reshape + add/sub), which XLA fuses into a handful of vector ops and which
+maps 1:1 onto the Pallas VMEM kernel in `repro.kernels.fwht`.
+
+TurboAngle's rotation is y = H D x with D = diag(s), s_i ~ U{+1,-1} sampled
+once from a seeded PRNG and shared across all layers/heads/tokens.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+def fwht(x: jax.Array, *, normalize: bool = True) -> jax.Array:
+    """Normalized FWHT along the last axis. Last dim must be a power of two.
+
+    Functional butterfly: stage s reshapes the transform axis into
+    (..., d/2^{s+1}, 2, 2^s) and replaces the pair (a, b) with (a+b, a-b).
+    """
+    d = x.shape[-1]
+    if not is_pow2(d):
+        raise ValueError(f"FWHT requires power-of-two dim, got {d}")
+    orig_dtype = x.dtype
+    # Accumulate in f32: the butterfly adds log2(d) doublings of dynamic range.
+    y = x.astype(jnp.float32)
+    h = 1
+    while h < d:
+        y = y.reshape(*x.shape[:-1], d // (2 * h), 2, h)
+        a = y[..., 0, :]
+        b = y[..., 1, :]
+        y = jnp.concatenate([a + b, a - b], axis=-1)
+        y = y.reshape(*x.shape[:-1], d)
+        h *= 2
+    if normalize:
+        y = y * (1.0 / np.sqrt(d))
+    return y.astype(orig_dtype)
+
+
+def fwht_matrix(d: int) -> np.ndarray:
+    """Dense normalized Hadamard matrix (oracle / tests only)."""
+    if not is_pow2(d):
+        raise ValueError(f"d must be pow2, got {d}")
+    h = np.array([[1.0]])
+    while h.shape[0] < d:
+        h = np.block([[h, h], [h, -h]])
+    return h / np.sqrt(d)
+
+
+@functools.partial(jax.jit, static_argnames=("d",))
+def _sample_signs(key: jax.Array, d: int) -> jax.Array:
+    return jnp.where(jax.random.bernoulli(key, 0.5, (d,)), 1.0, -1.0).astype(
+        jnp.float32
+    )
+
+
+def make_signs(seed: int, d: int) -> jax.Array:
+    """The shared random +/-1 diagonal D, deterministic in (seed, d)."""
+    return _sample_signs(jax.random.PRNGKey(seed), d)
+
+
+def rotate(x: jax.Array, signs: jax.Array) -> jax.Array:
+    """y = H D x along the last axis (paper Alg. 1 line 1)."""
+    return fwht(x * signs.astype(x.dtype))
+
+
+def unrotate(y: jax.Array, signs: jax.Array) -> jax.Array:
+    """x = D H y — inverse of `rotate` (H self-inverse, D^-1 = D)."""
+    return fwht(y) * signs.astype(y.dtype)
+
+
+def pad_pow2(x: jax.Array) -> jax.Array:
+    """Zero-pad the last axis up to the next power of two (norm-preserving)."""
+    d = x.shape[-1]
+    p = next_pow2(d)
+    if p == d:
+        return x
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, p - d)]
+    return jnp.pad(x, pad)
+
+
+def unpad(x: jax.Array, d: int) -> jax.Array:
+    return x[..., :d]

@@ -1,0 +1,132 @@
+"""Per-layer MixedKV schedules (paper §3.2).
+
+A schedule assigns an independent (n_K^l, n_V^l) angle-codebook pair to each
+layer. `early_boost` is the paper's main strategy; `selective` expresses the
+phi-1.5-style non-contiguous configurations; `uniform` is the K128V64
+baseline.
+
+Schedules are static python data (tuples of ints) — they parameterize the
+quantizer *configuration*, while at trace time they become (L,)-shaped arrays
+broadcast into the layer-stacked encode (so a single lax.scan body serves all
+layers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+UNIFORM_NK = 128
+UNIFORM_NV = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class MixedKVSchedule:
+    """Immutable per-layer (n_K, n_V) assignment."""
+
+    n_k: tuple[int, ...]  # length L
+    n_v: tuple[int, ...]
+
+    def __post_init__(self):
+        if len(self.n_k) != len(self.n_v):
+            raise ValueError("n_k and n_v must have equal length")
+        for n in (*self.n_k, *self.n_v):
+            if n < 2:
+                raise ValueError(f"codebook size must be >= 2, got {n}")
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.n_k)
+
+    def angle_bits(self) -> float:
+        """Mean angle bits/element across layers and K/V (paper eq. 1)."""
+        l = self.num_layers
+        return float(
+            sum(np.log2(nk) + np.log2(nv) for nk, nv in zip(self.n_k, self.n_v))
+            / (4.0 * l)
+        )
+
+    def max_bits(self) -> int:
+        """Physical index width needed if all layers share storage."""
+        return int(max(np.ceil(np.log2(n)) for n in (*self.n_k, *self.n_v)))
+
+    def as_arrays(self):
+        """(n_k, n_v) as (L,) int32 numpy arrays for trace-time broadcast."""
+        return (
+            np.asarray(self.n_k, np.int32),
+            np.asarray(self.n_v, np.int32),
+        )
+
+    def describe(self) -> str:
+        groups = []
+        prev = None
+        start = 0
+        for i, pair in enumerate(zip(self.n_k, self.n_v)):
+            if pair != prev:
+                if prev is not None:
+                    groups.append(f"[{start}-{i - 1}] K{prev[0]}V{prev[1]}")
+                prev, start = pair, i
+        groups.append(f"[{start}-{self.num_layers - 1}] K{prev[0]}V{prev[1]}")
+        return ", ".join(groups)
+
+
+def uniform(num_layers: int, n_k: int = UNIFORM_NK, n_v: int = UNIFORM_NV
+            ) -> MixedKVSchedule:
+    """The paper's uniform baseline (K128V64 = 3.25 angle bits/elem)."""
+    return MixedKVSchedule((n_k,) * num_layers, (n_v,) * num_layers)
+
+
+def early_boost(
+    num_layers: int,
+    n_early: int,
+    boost_k: int = 256,
+    boost_v: int = 128,
+    base_k: int = UNIFORM_NK,
+    base_v: int = UNIFORM_NV,
+) -> MixedKVSchedule:
+    """Boost the first n_early layers; the paper's E4/E8/E16... configs."""
+    if not 0 <= n_early <= num_layers:
+        raise ValueError(f"n_early={n_early} out of range for L={num_layers}")
+    n_k = (boost_k,) * n_early + (base_k,) * (num_layers - n_early)
+    n_v = (boost_v,) * n_early + (base_v,) * (num_layers - n_early)
+    return MixedKVSchedule(n_k, n_v)
+
+
+def selective(
+    num_layers: int,
+    boosted_layers: Sequence[int],
+    boost_k: int = 256,
+    boost_v: int = 128,
+    base_k: int = UNIFORM_NK,
+    base_v: int = UNIFORM_NV,
+) -> MixedKVSchedule:
+    """Arbitrary layer subsets, e.g. phi-1.5's {0-7, 16-23} skip-middle."""
+    boosted = set(boosted_layers)
+    if boosted and (min(boosted) < 0 or max(boosted) >= num_layers):
+        raise ValueError("boosted layer index out of range")
+    n_k = tuple(boost_k if i in boosted else base_k for i in range(num_layers))
+    n_v = tuple(boost_v if i in boosted else base_v for i in range(num_layers))
+    return MixedKVSchedule(n_k, n_v)
+
+
+# The paper's Table 3: optimal per-model configurations, reproduced as
+# ready-made schedules (keyed by the paper's eval models).
+def paper_table3_schedule(model: str, num_layers: int) -> MixedKVSchedule:
+    m = model.lower()
+    if m.startswith("tinyllama"):  # V-dominated, E4 with (128, 256)
+        return early_boost(num_layers, 4, boost_k=128, boost_v=256)
+    if m.startswith("mistral"):  # K-dominated, E4 with (256, 128)
+        return early_boost(num_layers, 4, boost_k=256, boost_v=128)
+    if m.startswith("smollm2"):  # 20 of 24 layers
+        return early_boost(num_layers, 20)
+    if m.startswith("phi"):  # selective: skip 8-15
+        boosted = list(range(0, 8)) + list(range(16, num_layers))
+        return selective(num_layers, boosted)
+    if m.startswith("stablelm"):  # 24 of 32
+        return early_boost(num_layers, 24)
+    if m.startswith("starcoder2"):  # 16 of 40
+        return early_boost(num_layers, 16)
+    if m.startswith("olmo"):  # K-only boost, V stays 64
+        return early_boost(num_layers, 4, boost_k=256, boost_v=64)
+    raise KeyError(f"no Table-3 schedule for {model}")

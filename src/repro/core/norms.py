@@ -1,0 +1,60 @@
+"""Per-vector min-max norm quantization (paper §3.3).
+
+Given the d/2 pair-norms of one vector, store (min, max) in fp32 and each
+norm as a b-bit unsigned integer:
+    rhat = round((r - rmin) / (rmax - rmin) * (2^b - 1))        (eq. 2)
+
+Log-space variant quantizes log(r): norms are strictly positive and
+right-skewed, so log spacing spends levels where the density is.
+
+Asymmetric K/V allocation (K8V4-log): 8-bit linear for K norms, 4-bit
+log-space for V norms — K norms are 10-20x more sensitive (paper §4.6).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+class QuantizedNorms(NamedTuple):
+    codes: jax.Array  # (..., d/2) int32 in [0, 2^bits)
+    rmin: jax.Array  # (..., 1) f32 (log-domain if log_space)
+    rmax: jax.Array  # (..., 1) f32
+    # static metadata travels in the quantizer config, not here
+
+
+def quantize_norms(
+    r: jax.Array, bits: int, *, log_space: bool = False
+) -> QuantizedNorms:
+    """Min-max quantize the last axis of r (> 0) at `bits` bits."""
+    levels = float(2**bits - 1)
+    v = jnp.log(jnp.maximum(r, _EPS)) if log_space else r
+    vmin = jnp.min(v, axis=-1, keepdims=True)
+    vmax = jnp.max(v, axis=-1, keepdims=True)
+    scale = jnp.maximum(vmax - vmin, _EPS)
+    q = jnp.round((v - vmin) / scale * levels)
+    codes = jnp.clip(q, 0.0, levels).astype(jnp.int32)
+    return QuantizedNorms(codes=codes, rmin=vmin, rmax=vmax)
+
+
+def dequantize_norms(
+    q: QuantizedNorms, bits: int, *, log_space: bool = False
+) -> jax.Array:
+    levels = float(2**bits - 1)
+    scale = jnp.maximum(q.rmax - q.rmin, _EPS)
+    v = q.codes.astype(jnp.float32) / levels * scale + q.rmin
+    return jnp.exp(v) if log_space else v
+
+
+def fake_quantize_norms(
+    r: jax.Array, bits: int | None, *, log_space: bool = False
+) -> jax.Array:
+    """Round-trip (identity when bits is None == fp32 reference path)."""
+    if bits is None:
+        return r
+    return dequantize_norms(quantize_norms(r, bits, log_space=log_space), bits,
+                            log_space=log_space)

@@ -1,0 +1,75 @@
+"""Bit-packing of b-bit integer codes into uint32 words.
+
+TPU adaptation of the usual GPU warp-shuffle packers: everything is a
+vectorized shift/or over a trailing "codes-per-word" axis, which lowers to
+plain VPU integer ops (and is reused verbatim inside Pallas kernels).
+
+Layout: the last axis of `codes` (length m, with m*b divisible by 32) is
+grouped into words of cpw = 32//gcd-structure ... we simply require
+m * b % 32 == 0 and pack ceil(m*b/32) words by treating the codes axis as a
+flat little-endian bitstream.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def packed_words(m: int, bits: int) -> int:
+    total = m * bits
+    if total % 32 != 0:
+        raise ValueError(f"m*bits={total} must be divisible by 32")
+    return total // 32
+
+
+def pack_bits(codes: jax.Array, bits: int) -> jax.Array:
+    """Pack int codes (..., m) in [0, 2^bits) into uint32 (..., m*bits/32).
+
+    Implementation: expand each code into its `bits` bits, reshape the flat
+    bitstream into words, and recombine. O(bits) vector ops, fully shape
+    static.
+    """
+    m = codes.shape[-1]
+    n_words = packed_words(m, bits)
+    c = codes.astype(jnp.uint32)
+    shifts = jnp.arange(bits, dtype=jnp.uint32)
+    # (..., m, bits) little-endian bits of each code
+    bits_arr = (c[..., None] >> shifts) & jnp.uint32(1)
+    flat = bits_arr.reshape(*codes.shape[:-1], n_words, 32)
+    word_shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(flat << word_shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jax.Array, bits: int, m: int) -> jax.Array:
+    """Inverse of pack_bits -> int32 (..., m)."""
+    n_words = packed_words(m, bits)
+    if words.shape[-1] != n_words:
+        raise ValueError(f"expected {n_words} words, got {words.shape[-1]}")
+    word_shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits_arr = (words[..., None] >> word_shifts) & jnp.uint32(1)
+    flat = bits_arr.reshape(*words.shape[:-1], m, bits)
+    shifts = jnp.arange(bits, dtype=jnp.uint32)
+    return jnp.sum(flat << shifts, axis=-1, dtype=jnp.uint32).astype(jnp.int32)
+
+
+def storage_bits_per_code(bits: int, mode: str) -> float:
+    """Physical bits per stored code under a storage mode."""
+    if mode == "bitpack":
+        return float(bits)
+    if mode == "uint8":
+        if bits > 8:
+            return 16.0  # falls back to uint16
+        return 8.0
+    if mode == "uint16":
+        return 16.0
+    raise ValueError(f"unknown storage mode {mode}")
+
+
+def narrow_dtype(bits: int) -> np.dtype:
+    """Smallest unsigned container dtype for b-bit codes."""
+    if bits <= 8:
+        return np.dtype(np.uint8)
+    if bits <= 16:
+        return np.dtype(np.uint16)
+    return np.dtype(np.uint32)

@@ -1,0 +1,214 @@
+"""Top-level TurboAngle KV quantizer — the composable public API.
+
+A `KVQuantizer` owns the shared rotation, the per-layer MixedKV schedule and
+the K/V norm configs, and exposes:
+
+  encode_kv(layer_n, x)   -> QuantizedKV   (compressed representation)
+  decode_kv(layer_n, q)   -> x_hat         (original domain)
+  decode_rotated(...)     -> y_hat         (Hadamard domain, for fused attn)
+  fake_quant(...)         -> x_hat         (round-trip, for eval/benchmarks)
+
+All entry points broadcast over arbitrary leading axes and accept `n_bins`
+as a python int or a traced array, so a single lax.scan body serves every
+layer of a per-layer MixedKV configuration.
+
+Physical storage: indices are narrowed to uint8/uint16 (schedule max width)
+or bit-packed to uint32 words; norm codes are narrowed to uint8. This is what
+makes the dry-run `memory_analysis()` show the compressed cache footprint.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import angular, fwht, norms, packing, rates
+from repro.core.mixedkv import MixedKVSchedule
+
+
+class QuantizedKV(NamedTuple):
+    """Compressed representation of a (..., d) tensor.
+
+    indices:    (..., d/2) narrow uint (or (..., words) uint32 if bitpacked)
+    norm_codes: (..., d/2) uint8 norm codes, or (..., d/2) f32 if norms are
+                kept in fp32 (angle-only reference config)
+    rmin/rmax:  (..., 1) f32 per-vector min-max (zeros if fp32 norms)
+    """
+
+    indices: jax.Array
+    norm_codes: jax.Array
+    rmin: jax.Array
+    rmax: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizerConfig:
+    head_dim: int  # logical head dim (may be non-pow2; padded internally)
+    schedule: MixedKVSchedule
+    k_norm: rates.NormConfig = rates.NORM_FP32
+    v_norm: rates.NormConfig = rates.NORM_FP32
+    seed: int = 0
+    storage: str = "uint8"  # "uint8" | "bitpack"
+
+    @property
+    def d_pad(self) -> int:
+        return fwht.next_pow2(self.head_dim)
+
+    @property
+    def n_pairs(self) -> int:
+        return self.d_pad // 2
+
+    @property
+    def index_width(self) -> int:
+        return self.schedule.max_bits()
+
+    def index_dtype(self) -> jnp.dtype:
+        return jnp.dtype(packing.narrow_dtype(self.index_width))
+
+    def angle_bits(self) -> float:
+        return self.schedule.angle_bits()
+
+    def total_bits(self) -> float:
+        """Information-theoretic end-to-end rate (paper eq. 3, K/V averaged)."""
+        return rates.schedule_total_bits(
+            self.schedule, self.k_norm, self.v_norm, self.d_pad
+        )
+
+    def physical_bits(self) -> float:
+        return rates.schedule_physical_bits(
+            self.schedule, self.k_norm, self.v_norm, self.d_pad, self.storage
+        )
+
+
+class KVQuantizer:
+    """Stateless-after-init quantizer; everything jit/vmap/scan friendly."""
+
+    def __init__(self, config: QuantizerConfig):
+        self.config = config
+        self.signs = fwht.make_signs(config.seed, config.d_pad)
+        if config.storage == "bitpack":
+            # bitstream length must tile into uint32 words
+            packing.packed_words(config.n_pairs, config.index_width)
+
+    # -- layer-schedule plumbing ------------------------------------------
+    def layer_bins(self) -> tuple[jax.Array, jax.Array]:
+        """(n_k, n_v) as (L,) arrays — feed as xs to lax.scan over layers."""
+        nk, nv = self.config.schedule.as_arrays()
+        return jnp.asarray(nk), jnp.asarray(nv)
+
+    # -- core paths --------------------------------------------------------
+    def _pad(self, x: jax.Array) -> jax.Array:
+        if x.shape[-1] != self.config.head_dim:
+            raise ValueError(
+                f"expected head_dim {self.config.head_dim}, got {x.shape[-1]}"
+            )
+        return fwht.pad_pow2(x)
+
+    def encode(
+        self, x: jax.Array, n_bins: jax.Array | int, norm_cfg: rates.NormConfig
+    ) -> QuantizedKV:
+        code = angular.encode(self._pad(x), n_bins, self.signs)
+        idx = code.indices
+        if self.config.storage == "bitpack":
+            idx = packing.pack_bits(idx, self.config.index_width)
+        else:
+            idx = idx.astype(self.config.index_dtype())
+        if norm_cfg.bits is None:
+            z = jnp.zeros((*code.norms.shape[:-1], 1), jnp.float32)
+            return QuantizedKV(idx, code.norms, z, z)
+        qn = norms.quantize_norms(code.norms, norm_cfg.bits,
+                                  log_space=norm_cfg.log_space)
+        return QuantizedKV(idx, qn.codes.astype(jnp.uint8), qn.rmin, qn.rmax)
+
+    def _indices_of(self, q: QuantizedKV) -> jax.Array:
+        if self.config.storage == "bitpack":
+            return packing.unpack_bits(
+                q.indices, self.config.index_width, self.config.n_pairs
+            )
+        return q.indices.astype(jnp.int32)
+
+    def _norms_of(self, q: QuantizedKV, norm_cfg: rates.NormConfig) -> jax.Array:
+        if norm_cfg.bits is None:
+            return q.norm_codes  # already f32
+        return norms.dequantize_norms(
+            norms.QuantizedNorms(q.norm_codes.astype(jnp.int32), q.rmin, q.rmax),
+            norm_cfg.bits,
+            log_space=norm_cfg.log_space,
+        )
+
+    def decode(
+        self, q: QuantizedKV, n_bins: jax.Array | int, norm_cfg: rates.NormConfig
+    ) -> jax.Array:
+        code = angular.AngularCode(self._indices_of(q), self._norms_of(q, norm_cfg))
+        x_hat = angular.decode(code, n_bins, self.signs)
+        return fwht.unpad(x_hat, self.config.head_dim)
+
+    def decode_rotated(
+        self, q: QuantizedKV, n_bins: jax.Array | int, norm_cfg: rates.NormConfig
+    ) -> jax.Array:
+        """Hadamard-domain reconstruction (padded width; see cache/attn)."""
+        code = angular.AngularCode(self._indices_of(q), self._norms_of(q, norm_cfg))
+        return angular.decode_rotated(code, n_bins)
+
+    def rotate_query(self, qvec: jax.Array) -> jax.Array:
+        """q -> HDq so scores can be taken against y-domain keys."""
+        return fwht.rotate(fwht.pad_pow2(qvec).astype(jnp.float32), self.signs)
+
+    def unrotate_output(self, y: jax.Array) -> jax.Array:
+        """DH(y) and strip padding — applied once per attention output."""
+        return fwht.unpad(fwht.unrotate(y, self.signs), self.config.head_dim)
+
+    # -- eval convenience ---------------------------------------------------
+    def fake_quant(
+        self, x: jax.Array, n_bins: jax.Array | int, norm_cfg: rates.NormConfig
+    ) -> jax.Array:
+        return self.decode(self.encode(x, n_bins, norm_cfg), n_bins, norm_cfg)
+
+    def fake_quant_layers(self, k: jax.Array, v: jax.Array
+                          ) -> tuple[jax.Array, jax.Array]:
+        """Round-trip layer-stacked K/V: inputs (L, ..., head_dim)."""
+        nk, nv = self.layer_bins()
+        l = self.config.schedule.num_layers
+        if k.shape[0] != l or v.shape[0] != l:
+            raise ValueError(f"leading axis must be L={l}")
+        # broadcast (L,) against the (L, ..., d/2) pair layout
+        nk = nk.reshape((l,) + (1,) * (k.ndim - 1))
+        nv = nv.reshape((l,) + (1,) * (v.ndim - 1))
+        k_hat = self.fake_quant(k, nk, self.config.k_norm)
+        v_hat = self.fake_quant(v, nv, self.config.v_norm)
+        return k_hat, v_hat
+
+
+def make_default_quantizer(
+    head_dim: int,
+    num_layers: int,
+    *,
+    n_early: int = 0,
+    boost_k: int = 256,
+    boost_v: int = 128,
+    k_norm: rates.NormConfig = rates.NORM_FP32,
+    v_norm: rates.NormConfig = rates.NORM_FP32,
+    seed: int = 0,
+    storage: str = "uint8",
+) -> KVQuantizer:
+    """Uniform-baseline (+optional early-boost) quantizer in one call."""
+    from repro.core import mixedkv
+
+    sched = (
+        mixedkv.early_boost(num_layers, n_early, boost_k, boost_v)
+        if n_early
+        else mixedkv.uniform(num_layers)
+    )
+    return KVQuantizer(
+        QuantizerConfig(
+            head_dim=head_dim,
+            schedule=sched,
+            k_norm=k_norm,
+            v_norm=v_norm,
+            seed=seed,
+            storage=storage,
+        )
+    )

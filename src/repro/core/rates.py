@@ -1,0 +1,108 @@
+"""Bit-rate accounting (paper eq. 1 and eq. 3).
+
+Information-theoretic rates count ceil-free log2(n) angle bits; physical
+rates count the actual container bytes under a storage mode
+(`repro.core.packing.storage_bits_per_code`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.mixedkv import MixedKVSchedule
+from repro.core.packing import storage_bits_per_code
+
+
+@dataclasses.dataclass(frozen=True)
+class NormConfig:
+    """Norm quantization config for one of K or V."""
+
+    bits: int | None = None  # None == fp32 norms (angle-only reference)
+    log_space: bool = False
+
+    def bits_per_element(self, d: int) -> float:
+        """Norm bits amortized per element, incl. per-vector min/max overhead."""
+        if self.bits is None:
+            return 16.0  # paper: fp32 norm per pair == 16 bits per element
+        return self.bits / 2.0 + 64.0 / d
+
+    def describe(self) -> str:
+        if self.bits is None:
+            return "fp32"
+        return f"{self.bits}b{'-log' if self.log_space else '-lin'}"
+
+
+# Paper §3.3 presets.
+NORM_FP32 = NormConfig(None)
+NORM8 = NormConfig(8, log_space=False)
+NORM_K8 = NormConfig(8, log_space=False)
+NORM_V4_LOG = NormConfig(4, log_space=True)
+
+
+def angle_bits_per_element(n_bins: int) -> float:
+    """log2(n)/2 — one index per consecutive pair."""
+    return float(np.log2(n_bins) / 2.0)
+
+
+def total_bits_per_element(
+    n_bins: int, norm: NormConfig, d: int
+) -> float:
+    """Paper eq. (3): b_total = b_angle + b_norm/2 + 64/d (for one of K/V)."""
+    return angle_bits_per_element(n_bins) + norm.bits_per_element(d)
+
+
+def schedule_total_bits(
+    schedule: MixedKVSchedule,
+    k_norm: NormConfig,
+    v_norm: NormConfig,
+    d: int,
+) -> float:
+    """K/V- and layer-averaged end-to-end bits per element."""
+    l = schedule.num_layers
+    tot = 0.0
+    for nk, nv in zip(schedule.n_k, schedule.n_v):
+        tot += total_bits_per_element(nk, k_norm, d)
+        tot += total_bits_per_element(nv, v_norm, d)
+    return tot / (2.0 * l)
+
+
+def schedule_physical_bits(
+    schedule: MixedKVSchedule,
+    k_norm: NormConfig,
+    v_norm: NormConfig,
+    d: int,
+    storage: str = "uint8",
+) -> float:
+    """Physical bits/element as actually stored.
+
+    Layer-stacked caches share one container width (= the schedule max) so
+    that lax.scan over layers sees uniform shapes; per-layer logical bits
+    remain available for entropy-coding offload.
+    """
+    width = schedule.max_bits()
+    angle_phys = storage_bits_per_code(width, storage) / 2.0
+
+    def norm_phys(cfg: NormConfig) -> float:
+        if cfg.bits is None:
+            return 16.0
+        return storage_bits_per_code(cfg.bits, storage) / 2.0 + 64.0 / d
+
+    return angle_phys + (norm_phys(k_norm) + norm_phys(v_norm)) / 2.0
+
+
+def compression_ratio_vs_fp16(bits_per_element: float) -> float:
+    return 16.0 / bits_per_element
+
+
+def kv_cache_bytes(
+    *,
+    num_layers: int,
+    kv_heads: int,
+    head_dim: int,
+    tokens: int,
+    batch: int,
+    bits_per_element: float,
+) -> float:
+    elems = 2 * num_layers * kv_heads * head_dim * tokens * batch  # K and V
+    return elems * bits_per_element / 8.0

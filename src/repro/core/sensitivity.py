@@ -1,0 +1,95 @@
+"""Layer-sensitivity tooling (paper §3.2 heuristic + §4.4 group sweeps).
+
+Everything is expressed against an abstract `eval_fn(schedule) -> float`
+(lower is better, e.g. ΔPPL) so the same machinery drives the toy-LM
+benchmarks here and would drive real-model PPL on hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+from repro.core import mixedkv
+from repro.core.mixedkv import MixedKVSchedule
+
+EvalFn = Callable[[MixedKVSchedule], float]
+
+
+@dataclasses.dataclass
+class SweepResult:
+    schedule: MixedKVSchedule
+    score: float
+    label: str
+
+
+def layer_group_sweep(
+    num_layers: int,
+    group_size: int,
+    eval_fn: EvalFn,
+    *,
+    boost_k: int = 256,
+    boost_v: int = 128,
+) -> list[SweepResult]:
+    """Boost exactly one contiguous group at a time (paper Table 4)."""
+    results = []
+    for start in range(0, num_layers, group_size):
+        layers = range(start, min(start + group_size, num_layers))
+        sched = mixedkv.selective(num_layers, layers, boost_k, boost_v)
+        results.append(
+            SweepResult(sched, eval_fn(sched), f"G{start // group_size}"
+                        f"[{layers.start}-{layers.stop - 1}]")
+        )
+    return results
+
+
+def early_boost_sweep(
+    num_layers: int,
+    eval_fn: EvalFn,
+    *,
+    n_early_grid: Sequence[int] = (4, 8, 16),
+) -> list[SweepResult]:
+    """The paper's 3-5-run heuristic grid: E{4,8,16} x {(256,128),(128,256)}."""
+    results = []
+    for n_early in n_early_grid:
+        if n_early > num_layers:
+            continue
+        for bk, bv in ((256, 128), (128, 256)):
+            sched = mixedkv.early_boost(num_layers, n_early, bk, bv)
+            results.append(
+                SweepResult(sched, eval_fn(sched), f"E{n_early}-K{bk}V{bv}")
+            )
+    return results
+
+
+def find_config(
+    num_layers: int,
+    eval_fn: EvalFn,
+    *,
+    n_early_grid: Sequence[int] = (4, 8, 16),
+    refine: bool = True,
+) -> SweepResult:
+    """Paper §3.2: grid, pick the best, then extend n_early while improving."""
+    results = early_boost_sweep(num_layers, eval_fn, n_early_grid=n_early_grid)
+    best = min(results, key=lambda r: r.score)
+    if not refine:
+        return best
+    # parse boost direction back out of the winning label
+    bk, bv = (256, 128) if "K256" in best.label else (128, 256)
+    n = max(
+        (g for g in n_early_grid if f"E{g}-" in best.label), default=n_early_grid[0]
+    )
+    while n + 4 <= num_layers:
+        cand = mixedkv.early_boost(num_layers, n + 4, bk, bv)
+        s = eval_fn(cand)
+        if s >= best.score:
+            break
+        n += 4
+        best = SweepResult(cand, s, f"E{n}-K{bk}V{bv}")
+    return best
+
+
+def negative_transfer_groups(
+    sweep: list[SweepResult], uniform_score: float
+) -> list[SweepResult]:
+    """Groups whose *single-group boost* scores worse than uniform (G3-style)."""
+    return [r for r in sweep if r.score > uniform_score]

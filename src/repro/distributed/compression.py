@@ -1,0 +1,86 @@
+"""Angular gradient compression with error feedback — the paper's transform
+reused as a cross-pod comms compressor (beyond-paper).
+
+Cross-pod DP all-reduce moves one full gradient copy per step over the slow
+inter-pod links. We compress each gradient leaf exactly like a KV vector:
+chunk to 128 lanes -> HD rotation -> uniform angle bins (n=64 -> 3 bits/pair)
++ 8-bit pair norms ~= 7 bits/element vs 32 (4.6x cross-pod traffic cut).
+Error feedback (Karimireddy et al. 2019) accumulates the residual locally so
+the compression bias vanishes over steps: e_{t+1} = g_t + e_t - C(g_t + e_t).
+
+`EFState` rides next to the optimizer state; `compress_grads` round-trips
+the gradients (the actual collective runs on the compressed payload — on the
+dry-run mesh GSPMD sees the small arrays; numerically the round-trip is what
+training observes either way).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import angular, norms
+from repro.core import fwht as F
+
+CHUNK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    n_bins: int = 64
+    norm_bits: int = 8
+    seed: int = 0
+    min_size: int = 4096  # leaves smaller than this stay uncompressed
+
+
+class EFState(NamedTuple):
+    error: Any  # pytree matching grads (f32)
+
+
+def init_ef_state(grads_like) -> EFState:
+    return EFState(error=jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def _roundtrip(x: jax.Array, signs, cfg: CompressionConfig) -> jax.Array:
+    """Compress-decompress one leaf (pads to CHUNK lanes)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % CHUNK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    rows = flat.reshape(-1, CHUNK)
+    code = angular.encode(rows, cfg.n_bins, signs)
+    r_hat = norms.fake_quantize_norms(code.norms, cfg.norm_bits)
+    rows_hat = angular.decode(
+        angular.AngularCode(code.indices, r_hat), cfg.n_bins, signs)
+    return rows_hat.reshape(-1)[:n].reshape(x.shape)
+
+
+def bits_per_element(cfg: CompressionConfig) -> float:
+    import numpy as np
+
+    return float(np.log2(cfg.n_bins) / 2 + cfg.norm_bits / 2 + 64 / CHUNK)
+
+
+def compress_grads(
+    grads, ef: EFState, cfg: CompressionConfig
+) -> tuple[Any, EFState]:
+    """Returns (decompressed grads to feed the optimizer, new EF state)."""
+    signs = F.make_signs(cfg.seed, CHUNK)
+
+    def one(g, e):
+        if g.size < cfg.min_size:
+            return g.astype(jnp.float32), jnp.zeros(g.shape, jnp.float32)
+        corrected = g.astype(jnp.float32) + e
+        sent = _roundtrip(corrected, signs, cfg)
+        return sent, corrected - sent
+
+    out = jax.tree.map(one, grads, ef.error)
+    sent = jax.tree.map(lambda p: p[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda p: p[1], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return sent, EFState(error=err)

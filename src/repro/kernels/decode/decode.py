@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: fused TurboAngle decode.
+
+Angles are reconstructed with direct cos/sin on the TPU transcendental unit
+rather than a codebook gather — dynamic gathers are the expensive op on TPU
+while transcendentals are cheap, the exact inverse of the usual GPU LUT
+trade-off (DESIGN.md §3). The inverse FWHT + sign flip run on the same VMEM
+tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.fwht.fwht import _fwht_tile
+
+TWO_PI = 2.0 * np.pi
+
+
+def decode_kernel(idx_ref, nq_ref, rmin_ref, rmax_ref, s_ref, o_ref, *,
+                  n_bins: int, norm_bits, norm_log: bool):
+    rows, pairs = idx_ref.shape
+    d = pairs * 2
+    if norm_bits is None:
+        r = nq_ref[...].astype(jnp.float32)
+    else:
+        levels = float(2**norm_bits - 1)
+        scale = jnp.maximum(rmax_ref[...] - rmin_ref[...], 1e-12)
+        v = nq_ref[...].astype(jnp.float32) / levels * scale + rmin_ref[...]
+        r = jnp.exp(v) if norm_log else v
+    theta = (idx_ref[...].astype(jnp.float32) + 0.5) * (TWO_PI / n_bins)
+    even = r * jnp.cos(theta)
+    odd = r * jnp.sin(theta)
+    y = jnp.stack([even, odd], axis=-1).reshape(rows, d)
+    # inverse: x = D H y (H self-inverse)
+    x = _fwht_tile(y) * (1.0 / np.sqrt(d))
+    o_ref[...] = (x * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_bins", "norm_bits", "norm_log", "block_rows",
+                     "interpret"),
+)
+def decode(idx: jax.Array, nq: jax.Array, rmin: jax.Array, rmax: jax.Array,
+           signs: jax.Array, *, n_bins: int, norm_bits=None,
+           norm_log: bool = False, block_rows: int = 256,
+           interpret: bool = True) -> jax.Array:
+    """(rows, d/2) codes -> (rows, d) reconstruction."""
+    rows, pairs = idx.shape
+    d = pairs * 2
+    block_rows = min(block_rows, rows)
+    grid = (pl.cdiv(rows, block_rows),)
+    return pl.pallas_call(
+        functools.partial(decode_kernel, n_bins=n_bins, norm_bits=norm_bits,
+                          norm_log=norm_log),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, pairs), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, pairs), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), jnp.float32),
+        interpret=interpret,
+    )(idx, nq, rmin, rmax, signs)

@@ -1,0 +1,18 @@
+"""jit'd wrapper: fused decode over arbitrary leading axes."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode import decode as k
+
+
+def decode_op(idx, nq, rmin, rmax, signs, *, n_bins: int, norm_bits=None,
+              norm_log: bool = False, interpret: bool = True):
+    lead = idx.shape[:-1]
+    pairs = idx.shape[-1]
+    out = k.decode(
+        idx.reshape(-1, pairs), nq.reshape(-1, pairs),
+        rmin.reshape(-1, 1), rmax.reshape(-1, 1), signs,
+        n_bins=n_bins, norm_bits=norm_bits, norm_log=norm_log,
+        interpret=interpret)
+    return out.reshape(*lead, pairs * 2)

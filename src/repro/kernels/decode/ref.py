@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused TurboAngle decode kernel."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import angular, norms
+
+
+def decode_ref(idx, nq, rmin, rmax, signs, *, n_bins: int,
+               norm_bits: int | None, norm_log: bool):
+    """Inverse of encode_ref -> x_hat (..., d)."""
+    if norm_bits is None:
+        r = nq
+    else:
+        r = norms.dequantize_norms(
+            norms.QuantizedNorms(nq.astype(jnp.int32), rmin, rmax),
+            norm_bits, log_space=norm_log)
+    code = angular.AngularCode(idx.astype(jnp.int32), r)
+    return angular.decode(code, n_bins, signs)

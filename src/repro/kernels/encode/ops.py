@@ -1,0 +1,19 @@
+"""jit'd wrapper: fused encode over arbitrary leading axes."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.encode import encode as k
+
+
+def encode_op(x: jax.Array, signs: jax.Array, *, n_bins: int,
+              norm_bits=None, norm_log: bool = False,
+              interpret: bool = True):
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    idx, nq, rmin, rmax = k.encode(
+        x.reshape(-1, d), signs, n_bins=n_bins, norm_bits=norm_bits,
+        norm_log=norm_log, interpret=interpret)
+    pairs = d // 2
+    return (idx.reshape(*lead, pairs), nq.reshape(*lead, pairs),
+            rmin.reshape(*lead, 1), rmax.reshape(*lead, 1))

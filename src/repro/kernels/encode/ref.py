@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused TurboAngle encode kernel."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import angular, norms
+from repro.core import fwht as F
+
+
+def encode_ref(x, signs, *, n_bins: int, norm_bits: int | None,
+               norm_log: bool):
+    """Returns (indices i32 (..., d/2), norm_codes, rmin, rmax).
+
+    With norm_bits None, norm_codes are the raw f32 norms and rmin/rmax are
+    zeros — mirroring repro.core.quantizer.QuantizedKV layout.
+    """
+    code = angular.encode(x.astype(jnp.float32), n_bins, signs)
+    if norm_bits is None:
+        z = jnp.zeros((*code.norms.shape[:-1], 1), jnp.float32)
+        return code.indices, code.norms, z, z
+    qn = norms.quantize_norms(code.norms, norm_bits, log_space=norm_log)
+    return code.indices, qn.codes, qn.rmin, qn.rmax

@@ -1,0 +1,22 @@
+"""jit'd public wrappers for the FWHT kernel (arbitrary leading axes)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fwht import fwht as k
+
+
+def fwht_op(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    flat = x.reshape(-1, d)
+    return k.fwht(flat, interpret=interpret).reshape(*lead, d)
+
+
+def rotate_op(x: jax.Array, signs: jax.Array, *, interpret: bool = True
+              ) -> jax.Array:
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    flat = x.reshape(-1, d)
+    return k.rotate(flat, signs, interpret=interpret).reshape(*lead, d)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the FWHT kernel."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import fwht as core_fwht
+
+
+def fwht_ref(x: jax.Array) -> jax.Array:
+    """Normalized FWHT along the last axis (delegates to the core impl,
+    which is itself validated against the dense Hadamard matrix)."""
+    return core_fwht.fwht(x.astype(jnp.float32))
+
+
+def rotate_ref(x: jax.Array, signs: jax.Array) -> jax.Array:
+    return core_fwht.rotate(x.astype(jnp.float32), signs)

@@ -1,0 +1,48 @@
+"""jit'd wrapper: quantized-cache decode attention via the Pallas kernel.
+
+Mirrors `repro.cache.kvcache.attend_quant_cache` (the pure-XLA path) so the
+two are interchangeable behind `ModelConfig.use_pallas`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.quantizer import KVQuantizer, QuantizedKV
+from repro.kernels.qattn import qattn as k
+
+
+def attend_quant_cache_op(
+    q: jax.Array,  # (B, 1, nq, h) RoPE'd query, logical head dim
+    layer_kq: QuantizedKV,  # (B, T, n_kv, ...)
+    layer_vq: QuantizedKV,
+    n_bins_k: int,
+    n_bins_v: int,
+    n_valid: jax.Array,
+    cfg: ModelConfig,
+    qz: KVQuantizer,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    b, _, nq, h = q.shape
+    nkv, g = cfg.num_kv_heads, cfg.q_per_kv
+    dp = qz.config.d_pad
+    scale = 1.0 / np.sqrt(h)
+    q_rot = (qz.rotate_query(q[:, 0]) * scale).reshape(b, nkv, g, dp)
+    kc, vc = qz.config.k_norm, qz.config.v_norm
+    out_y = k.qattn(
+        q_rot,
+        layer_kq.indices.astype(jnp.int32), layer_kq.norm_codes,
+        layer_kq.rmin, layer_kq.rmax,
+        layer_vq.indices.astype(jnp.int32), layer_vq.norm_codes,
+        layer_vq.rmin, layer_vq.rmax,
+        n_valid,
+        n_bins_k=n_bins_k, n_bins_v=n_bins_v,
+        k_bits=kc.bits, k_log=kc.log_space,
+        v_bits=vc.bits, v_log=vc.log_space,
+        interpret=interpret,
+    )
+    out = qz.unrotate_output(out_y)  # one inverse transform per query
+    return out.reshape(b, 1, nq, h)

@@ -1,0 +1,161 @@
+"""Pallas TPU kernel: flash-decode attention over a TurboAngle-quantized
+KV cache, fused with in-VMEM dequantization (Hadamard domain).
+
+Why this is the perf-critical kernel: long-context decode is bound by
+reading the KV cache once per token. Storing angles+norms at ~6.6 bits/elem
+cuts those HBM bytes ~2.4x vs bf16 — but only if the dequant happens INSIDE
+the attention kernel; a separate dequant pass would write the f32 cache back
+to HBM and forfeit the entire win (exactly what the pure-XLA path does,
+measured in EXPERIMENTS.md §Perf).
+
+Beyond-paper fusion: scores are taken directly against Hadamard-domain keys
+(q.k == (HDq).(HDk)) and the weighted value sum is accumulated in the
+Hadamard domain — the inverse FWHT runs ONCE per query on the output instead
+of once per cached token (O(T d log d) -> O(d log d) reconstruction FLOPs).
+
+Grid: (B, n_kv, T/block_t), accumulating online-softmax state in VMEM
+scratch across the sequential T dimension. Per-step VMEM: two uint8 code
+blocks + two f32 dequant tiles (block_t x d_pad) ~= 0.6 MiB at d_pad=128,
+block_t=512.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+TWO_PI = 2.0 * np.pi
+NEG_INF = -1e30
+
+
+def _dequant_block(idx, nq, rmin, rmax, *, n_bins, bits, log):
+    """(bt, pairs) codes -> (bt, 2*pairs) y-domain block, f32."""
+    bt, pairs = idx.shape
+    if bits is None:
+        r = nq.astype(jnp.float32)
+    else:
+        levels = float(2**bits - 1)
+        scale = jnp.maximum(rmax - rmin, 1e-12)
+        v = nq.astype(jnp.float32) / levels * scale + rmin
+        r = jnp.exp(v) if log else v
+    theta = (idx.astype(jnp.float32) + 0.5) * (TWO_PI / n_bins)
+    even = r * jnp.cos(theta)
+    odd = r * jnp.sin(theta)
+    return jnp.stack([even, odd], axis=-1).reshape(bt, pairs * 2)
+
+
+def qattn_kernel(
+    len_ref, q_ref, kidx_ref, knq_ref, krmin_ref, krmax_ref,
+    vidx_ref, vnq_ref, vrmin_ref, vrmax_ref, o_ref,
+    m_scr, l_scr, acc_scr, *,
+    block_t: int, n_bins_k: int, n_bins_v: int,
+    k_bits, k_log, v_bits, v_log,
+):
+    t_step = pl.program_id(2)
+    n_steps = pl.num_programs(2)
+
+    @pl.when(t_step == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]  # (g, dp) pre-rotated, pre-scaled
+    length = len_ref[0, 0]
+    row_pos = t_step * block_t + jax.lax.broadcasted_iota(
+        jnp.int32, (block_t, 1), 0)
+    row_ok = row_pos < length  # (bt, 1); also kills OOB-padding garbage rows
+
+    y_k = _dequant_block(
+        kidx_ref[0, :, 0], knq_ref[0, :, 0], krmin_ref[0, :, 0],
+        krmax_ref[0, :, 0], n_bins=n_bins_k, bits=k_bits, log=k_log)
+    y_k = jnp.where(row_ok, y_k, 0.0)
+    s = jax.lax.dot_general(
+        q.astype(jnp.float32), y_k,
+        (((1,), (1,)), ((), ())))  # (g, bt)
+    s = jnp.where(row_ok.reshape(1, block_t), s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    m_scr[...] = m_new
+
+    y_v = _dequant_block(
+        vidx_ref[0, :, 0], vnq_ref[0, :, 0], vrmin_ref[0, :, 0],
+        vrmax_ref[0, :, 0], n_bins=n_bins_v, bits=v_bits, log=v_log)
+    y_v = jnp.where(row_ok, y_v, 0.0)  # 0 * garbage-NaN would poison p@y_v
+    pv = jax.lax.dot_general(p, y_v, (((1,), (0,)), ((), ())))  # (g, dp)
+    acc_scr[...] = acc_scr[...] * corr + pv
+
+    @pl.when(t_step == n_steps - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_bins_k", "n_bins_v", "k_bits", "k_log", "v_bits",
+                     "v_log", "block_t", "interpret"),
+)
+def qattn(
+    q_rot: jax.Array,  # (B, nkv, G, Dp) f32, pre-scaled
+    k_idx: jax.Array,  # (B, T, nkv, pairs)
+    k_nq: jax.Array,
+    k_rmin: jax.Array,  # (B, T, nkv, 1)
+    k_rmax: jax.Array,
+    v_idx: jax.Array,
+    v_nq: jax.Array,
+    v_rmin: jax.Array,
+    v_rmax: jax.Array,
+    length: jax.Array,  # () int32
+    *,
+    n_bins_k: int,
+    n_bins_v: int,
+    k_bits=None,
+    k_log: bool = False,
+    v_bits=None,
+    v_log: bool = False,
+    block_t: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    b, nkv, g, dp = q_rot.shape
+    t = k_idx.shape[1]
+    pairs = dp // 2
+    block_t = min(block_t, t)
+    grid = (b, nkv, pl.cdiv(t, block_t))
+
+    def kv_spec(last):
+        return pl.BlockSpec(
+            (1, block_t, 1, last), lambda bi, ni, ti: (bi, ti, ni, 0))
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pl.pallas_call(
+        functools.partial(
+            qattn_kernel, block_t=block_t, n_bins_k=n_bins_k,
+            n_bins_v=n_bins_v, k_bits=k_bits, k_log=k_log, v_bits=v_bits,
+            v_log=v_log),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bi, ni, ti: (0, 0)),  # length
+            pl.BlockSpec((1, 1, g, dp), lambda bi, ni, ti: (bi, ni, 0, 0)),
+            kv_spec(pairs), kv_spec(pairs), kv_spec(1), kv_spec(1),
+            kv_spec(pairs), kv_spec(pairs), kv_spec(1), kv_spec(1),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dp),
+                               lambda bi, ni, ti: (bi, ni, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nkv, g, dp), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length.reshape(1, 1).astype(jnp.int32), q_rot, k_idx, k_nq, k_rmin,
+      k_rmax, v_idx, v_nq, v_rmin, v_rmax)

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Single pod : (16, 16)    axes ("data", "model")   = 256 chips (v5e pod)
+Multi-pod  : (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before first init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh on the local device (tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n) if n > 1 else (1, 1), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes the batch dimension shards over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh, *names: str) -> int:
+    n = 1
+    for name in names:
+        if name in mesh.axis_names:
+            n *= mesh.shape[name]
+    return n

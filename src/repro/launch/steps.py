@@ -1,0 +1,361 @@
+"""Builders for the jit-compiled production steps (train / prefill / decode).
+
+Everything here works purely from abstract shapes (jax.eval_shape) so the
+dry-run can lower+compile every (arch x shape x mesh) cell without ever
+allocating model-sized buffers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.cache import kvcache
+from repro.configs.base import ModelConfig, RunConfig
+from repro.configs import registry
+from repro.core.quantizer import KVQuantizer
+from repro.distributed import sharding as shd
+from repro.launch.mesh import axis_size, batch_axes
+from repro.models import common, transformer
+from repro.models.common import SHAPES, ShapeSpec
+from repro.serving import decode as decoding
+from repro.training import optimizer as opt
+
+REPL = lambda mesh: NamedSharding(mesh, P())
+
+
+def make_quantizer(run: RunConfig) -> Optional[KVQuantizer]:
+    cfg = run.model
+    if not run.quant.enabled or not cfg.has_kv_cache:
+        return None
+    qc = run.quant
+    n_attn = cfg.num_attn_layers
+    qc = dataclasses.replace(qc, n_early=min(qc.n_early, n_attn))
+    return KVQuantizer(qc.build(cfg.head_dim, n_attn))
+
+
+
+def _layer_param_constraint(mesh: Mesh, rules: shd.ShardingRules, specs_sub):
+    """Anchor for the per-layer FSDP weight gather INSIDE scan bodies.
+
+    Constrains each *single-layer* param slice to its tensor-parallel layout
+    with the FSDP ("data") dim gathered. Without this anchor GSPMD reshards
+    the whole layer stack at the while-loop boundary — an out-of-loop
+    all-gather that costs ~50 GiB/device at 405B scale.
+    """
+    is_axes = lambda x: isinstance(x, tuple)
+
+    def hook(layer_params):
+        def one(axes, t):
+            a = list(axes)
+            while a and a[0] == "layers":
+                a.pop(0)
+            used: set = set()
+            entries = []
+            for dim, logical in zip(t.shape, a):
+                pick = None
+                for cand in rules.mesh_axes_for(logical):
+                    if cand == "data" or cand in used \
+                            or cand not in mesh.axis_names:
+                        continue
+                    if dim % mesh.shape[cand] == 0:
+                        pick = cand
+                        used.add(cand)
+                        break
+                entries.append(pick)
+            return jax.lax.with_sharding_constraint(
+                t, NamedSharding(mesh, P(*entries)))
+
+        return jax.tree.map(one, specs_sub, layer_params, is_leaf=is_axes)
+
+    return hook
+
+
+def _specs_scan_subtree(cfg: ModelConfig, specs):
+    if cfg.family in ("decoder", "encoder"):
+        return specs["layers"]
+    if cfg.family == "hybrid_ssm":
+        return specs["mamba"]
+    if cfg.family == "xlstm":
+        return specs["groups"]["mlstm"]
+    raise ValueError(cfg.family)
+
+
+# ============================================================= train ========
+class TrainArtifacts(NamedTuple):
+    step_fn: Any  # jitted (params, opt_state, batch) -> (params, opt, metrics)
+    param_shapes: Any
+    param_shardings: Any
+    opt_shapes: Any
+    opt_shardings: Any
+    batch_shapes: Any
+    batch_shardings: Any
+    init_fn: Any  # key -> (params, opt_state) honoring shardings
+
+
+def _opt_state_shardings(opt_shapes, p_shardings, mesh: Mesh):
+    """m/v follow the param sharding exactly; int8-quantized leaves keep the
+    param layout (q: same shape/spec; scale: last dim replicated). This keeps
+    (de)quantization fully shard-local — no GSPMD resharding fallback."""
+
+    def for_moment(shape_leaf, p_shard):
+        if isinstance(shape_leaf, opt.Quantized):
+            spec = p_shard.spec
+            scale_spec = P(*(list(spec)[: len(shape_leaf.scale.shape) - 1]
+                             + [None]))
+            return opt.Quantized(
+                q=p_shard, scale=NamedSharding(mesh, scale_spec))
+        return p_shard
+
+    is_q = lambda x: isinstance(x, opt.Quantized)
+    return opt.OptState(
+        step=REPL(mesh),
+        m=jax.tree.map(for_moment, opt_shapes.m, p_shardings, is_leaf=is_q),
+        v=jax.tree.map(for_moment, opt_shapes.v, p_shardings, is_leaf=is_q),
+    )
+
+
+def make_train_step(
+    run: RunConfig,
+    mesh: Mesh,
+    opt_cfg: opt.AdamWConfig,
+    shape: ShapeSpec,
+    *,
+    seq_parallel: bool = True,
+    donate: bool = True,
+) -> TrainArtifacts:
+    cfg = run.model
+    rules = shd.ShardingRules(fsdp=run.parallel.fsdp)
+    param_shapes, specs = transformer.abstract_params(cfg)
+    p_shardings = shd.param_shardings(specs, mesh, rules, param_shapes)
+    opt_shapes = jax.eval_shape(
+        lambda p: opt.init_opt_state(p, opt_cfg), param_shapes)
+    o_shardings = _opt_state_shardings(opt_shapes, p_shardings, mesh)
+
+    batch_shapes = registry.input_specs(cfg, shape)["batch"]
+    b_shardings = shd.batch_shardings(mesh, batch_shapes)
+
+    constraint = shd.activation_constraint(mesh, seq_parallel=seq_parallel)
+    remat = run.parallel.remat != "none"
+    micro = run.parallel.microbatch
+    n_micro = 0
+    if micro and micro < shape.global_batch:
+        if shape.global_batch % micro:
+            raise ValueError("global batch must divide by microbatch")
+        n_micro = shape.global_batch // micro
+        # each microbatch must still shard over the batch axes
+        ba_sz = axis_size(mesh, *batch_axes(mesh))
+        if micro % ba_sz:
+            raise ValueError(
+                f"microbatch {micro} not divisible by batch axes {ba_sz}")
+
+    pcstr = _layer_param_constraint(
+        mesh, rules, _specs_scan_subtree(cfg, specs))
+
+    def loss_fn(params, batch):
+        return transformer.train_loss(
+            params, cfg, batch, remat=remat, constraint=constraint,
+            param_constraint=pcstr)
+
+    accum_dtype = jnp.dtype(run.parallel.accum_dtype)
+
+    def constrain_grads(g):
+        # pin gradient sharding to the param layout — otherwise GSPMD is free
+        # to materialize replicated f32 embed/lm_head grad accumulators
+        # (7.8 GiB/device each at 405B; see EXPERIMENTS.md §Dry-run)
+        return jax.tree.map(
+            lambda t, sh: jax.lax.with_sharding_constraint(t, sh),
+            g, p_shardings)
+
+    def train_step(params, opt_state, batch):
+        if n_micro:
+            resh = lambda t: t.reshape(n_micro, micro, *t.shape[1:])
+            micro_batches = jax.tree.map(resh, batch)
+            zero_g = constrain_grads(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params))
+
+            def accum(carry, mb):
+                g_acc, loss_acc = carry
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = constrain_grads(jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), g_acc, g))
+                return (g_acc, loss_acc + loss), None
+
+            (grads, loss_sum), _ = jax.lax.scan(
+                accum, (zero_g, jnp.zeros((), jnp.float32)), micro_batches)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss_sum / n_micro
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = constrain_grads(grads)
+        new_params, new_opt, metrics = opt.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    metric_sh = {"loss": REPL(mesh), "grad_norm": REPL(mesh), "lr": REPL(mesh)}
+    step_fn = jax.jit(
+        train_step,
+        in_shardings=(p_shardings, o_shardings, b_shardings),
+        out_shardings=(p_shardings, o_shardings, metric_sh),
+        donate_argnums=(0, 1) if donate else (),
+    )
+
+    def init_fn(k):
+        p_init = jax.jit(
+            lambda kk: transformer.init_params(kk, cfg)[0],
+            out_shardings=p_shardings)(k)
+        o_init = jax.jit(
+            lambda p: opt.init_opt_state(p, opt_cfg),
+            out_shardings=o_shardings)(p_init)
+        return p_init, o_init
+
+    return TrainArtifacts(
+        step_fn=step_fn,
+        param_shapes=param_shapes,
+        param_shardings=p_shardings,
+        opt_shapes=opt_shapes,
+        opt_shardings=o_shardings,
+        batch_shapes=batch_shapes,
+        batch_shardings=b_shardings,
+        init_fn=init_fn,
+    )
+
+
+# ============================================================ serving =======
+class ServeArtifacts(NamedTuple):
+    step_fn: Any
+    param_shapes: Any
+    param_shardings: Any
+    input_shapes: Any  # dict of abstract inputs (beyond params)
+    input_shardings: Any
+
+
+def _serve_param_shardings(run: RunConfig, mesh: Mesh, param_shapes, specs):
+    # Serving reuses the training layout (2D-sharded weights); giant models
+    # cannot replicate over "data" anyway.
+    rules = shd.ShardingRules(fsdp=run.parallel.fsdp)
+    return shd.param_shardings(specs, mesh, rules, param_shapes)
+
+
+def make_prefill_step(run: RunConfig, mesh: Mesh, shape: ShapeSpec,
+                      *, seq_parallel: bool = True) -> ServeArtifacts:
+    cfg = run.model
+    qz = make_quantizer(run)
+    param_shapes, specs = transformer.abstract_params(cfg)
+    p_shardings = _serve_param_shardings(run, mesh, param_shapes, specs)
+    batch_shapes = registry.input_specs(cfg, shape)["batch"]
+    b_shardings = shd.batch_shardings(mesh, batch_shapes)
+    constraint = shd.activation_constraint(mesh, seq_parallel=seq_parallel)
+
+    rules = shd.ShardingRules(fsdp=run.parallel.fsdp)
+    pcstr = _layer_param_constraint(
+        mesh, rules, _specs_scan_subtree(cfg, specs))
+
+    if cfg.family == "encoder":
+        # "prefill" for an encoder == one full forward (feature extraction)
+        def step(params, batch):
+            return transformer.forward(
+                params, cfg, batch, remat=False, constraint=constraint,
+                param_constraint=pcstr)
+    else:
+        def step(params, batch):
+            return transformer.forward_prefill(
+                params, cfg, batch, quantizer=qz, remat=True,
+                constraint=constraint, param_constraint=pcstr)
+
+    step_fn = jax.jit(step, in_shardings=(p_shardings, b_shardings))
+    return ServeArtifacts(step_fn, param_shapes, p_shardings,
+                          {"batch": batch_shapes}, {"batch": b_shardings})
+
+
+def _decode_state_shardings(cfg: ModelConfig, mesh: Mesh, state_shapes,
+                            batch: int):
+    # TP-serve layout: batch only over "pod" (see sharding.cache_sharding)
+    ba = ("pod",) if "pod" in mesh.axis_names else ()
+    bsz = axis_size(mesh, *ba) if ba else 1
+    b_ent = ba if (ba and batch % bsz == 0) else None
+
+    cache_sh = None
+    if state_shapes.cache is not None:
+        cache_sh = jax.tree.map(
+            lambda a: shd.cache_sharding(mesh, cfg, a.shape),
+            state_shapes.cache,
+        )
+        cache_sh = cache_sh._replace(length=REPL(mesh))
+
+    def shard_state_leaf(path_hint_batch_dim):
+        def fn(a):
+            entries = [None] * len(a.shape)
+            bd = path_hint_batch_dim
+            if bd < len(a.shape) and a.shape[bd] == batch and b_ent:
+                entries[bd] = b_ent
+            # shard the first post-batch dim over model when divisible
+            for d in range(bd + 1, len(a.shape)):
+                if "model" in mesh.axis_names \
+                        and a.shape[d] % mesh.shape["model"] == 0 \
+                        and a.shape[d] >= mesh.shape["model"]:
+                    entries[d] = "model"
+                    break
+            return NamedSharding(mesh, P(*entries))
+
+        return fn
+
+    states_sh = None
+    if state_shapes.states is not None:
+        if cfg.family == "hybrid_ssm":
+            states_sh = jax.tree.map(shard_state_leaf(2), state_shapes.states)
+        elif cfg.family == "xlstm":
+            mstates, sstates = state_shapes.states
+            states_sh = (
+                jax.tree.map(shard_state_leaf(2), mstates),
+                jax.tree.map(shard_state_leaf(1), sstates),
+            )
+    return decoding.DecodeState(cache=cache_sh, states=states_sh)
+
+
+def make_decode_step(run: RunConfig, mesh: Mesh, shape: ShapeSpec,
+                     *, donate: bool = True) -> ServeArtifacts:
+    cfg = run.model
+    qz = make_quantizer(run)
+    param_shapes, specs = transformer.abstract_params(cfg)
+    p_shardings = _serve_param_shardings(run, mesh, param_shapes, specs)
+
+    b = shape.global_batch
+    state_shapes = jax.eval_shape(
+        functools.partial(
+            decoding.init_decode_state, cfg, b, shape.seq_len,
+            quantizer=qz, prefilled=0, dtype=jnp.bfloat16))
+    state_sh = _decode_state_shardings(cfg, mesh, state_shapes, b)
+    tok_shapes = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pod_spec = P(("pod",)) if ("pod" in mesh.axis_names
+                               and b % mesh.shape["pod"] == 0) else P(None)
+    tok_sh = NamedSharding(mesh, pod_spec)
+
+    rules = shd.ShardingRules(fsdp=run.parallel.fsdp)
+    pcstr = _layer_param_constraint(
+        mesh, rules, _specs_scan_subtree(cfg, specs))
+
+    constraint = shd.activation_constraint(mesh, seq_parallel=False)
+
+    def step(params, state, tokens):
+        return decoding.decode_step(params, cfg, state, tokens, quantizer=qz,
+                                    param_constraint=pcstr,
+                                    constraint=constraint)
+
+    step_fn = jax.jit(
+        step,
+        in_shardings=(p_shardings, state_sh, tok_sh),
+        out_shardings=(NamedSharding(mesh, pod_spec), state_sh),
+        donate_argnums=(1,) if donate else (),
+    )
+    return ServeArtifacts(
+        step_fn, param_shapes, p_shardings,
+        {"state": state_shapes, "tokens": tok_shapes},
+        {"state": state_sh, "tokens": tok_sh},
+    )

@@ -1,0 +1,72 @@
+"""Training launcher: --arch <id> [--steps N] [--reduced] ...
+
+Reduced mode runs the real multi-layer stack at toy width on the host
+device (CI-runnable); full mode expects the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import registry
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models.common import SHAPES, ShapeSpec
+from repro.training import train_loop
+from repro.training.checkpoint import CheckpointManager
+from repro.training.optimizer import AdamWConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(registry.ALL_IDS))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true",
+                    help="toy-width config on the host device")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args(argv)
+
+    run = registry.get_run_config(args.arch)
+    if args.reduced:
+        run = dataclasses.replace(
+            run, model=registry.get_reduced_config(args.arch),
+            parallel=dataclasses.replace(run.parallel, microbatch=0))
+        mesh = make_host_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+    shape = ShapeSpec("cli", args.seq, args.batch, "train")
+    opt_cfg = AdamWConfig(learning_rate=args.lr, warmup_steps=10,
+                          total_steps=args.steps)
+    with mesh:
+        art = steps_lib.make_train_step(run, mesh, opt_cfg, shape,
+                                        seq_parallel=not args.reduced)
+        params, opt_state = art.init_fn(jax.random.PRNGKey(0))
+        data = SyntheticLM(DataConfig(
+            vocab_size=run.model.vocab_size, seq_len=args.seq,
+            global_batch=args.batch))
+        ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+        params, opt_state, hist = train_loop.run(
+            step_fn=art.step_fn, params=params, opt_state=opt_state,
+            data=data,
+            loop=train_loop.LoopConfig(total_steps=args.steps,
+                                       ckpt_every=args.ckpt_every),
+            ckpt=ckpt,
+            on_straggler=lambda s, r: print(
+                f"[straggler] step {s}: {r:.1f}x median step time"),
+        )
+    print(f"final loss: {hist[-1]['loss']:.4f} "
+          f"(from {hist[0]['loss']:.4f} over {len(hist)} steps)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,196 @@
+"""Attention: GQA/MQA + RoPE + qk-norm + optional bias + sliding window.
+
+Full-sequence paths (training / prefill) use a blockwise online-softmax
+attention (lax.scan over KV blocks) so 32k-token prefill never materializes
+an S x S score matrix. The single-token decode path lives in
+`repro.cache.kvcache` where it reads (possibly quantized) caches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import Leaf
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> dict:
+    d, h = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": common.dense(ks[0], d, nq * h, ("embed", "heads"), dtype),
+        "wk": common.dense(ks[1], d, nkv * h, ("embed", "heads"), dtype),
+        "wv": common.dense(ks[2], d, nkv * h, ("embed", "heads"), dtype),
+        "wo": common.dense(ks[3], nq * h, d, ("heads", "embed"), dtype,
+                           scale=1.0 / np.sqrt(nq * h)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = common.bias(nq * h, ("heads",), dtype)
+        p["bk"] = common.bias(nkv * h, ("heads",), dtype)
+        p["bv"] = common.bias(nkv * h, ("heads",), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = common.scale_param(h, (None,), dtype)
+        p["k_norm"] = common.scale_param(h, (None,), dtype)
+    return p
+
+
+def project_qkv(
+    params, x: jax.Array, positions: jax.Array, cfg: ModelConfig
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, S, D) -> q (B,S,nq,h), k/v (B,S,nkv,h); RoPE + qk-norm applied."""
+    b, s, _ = x.shape
+    h, nq, nkv = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+    q = jnp.einsum("bsd,dk->bsk", x, params["wq"])
+    k = jnp.einsum("bsd,dk->bsk", x, params["wk"])
+    v = jnp.einsum("bsd,dk->bsk", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, nq, h)
+    k = k.reshape(b, s, nkv, h)
+    v = v.reshape(b, s, nkv, h)
+    if cfg.qk_norm:
+        q = common.rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = common.rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if cfg.rope_theta > 0:
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+class _Carry(NamedTuple):
+    m: jax.Array  # running max        (B, nq, Sq)
+    l: jax.Array  # running denominator (B, nq, Sq)
+    acc: jax.Array  # output accumulator (B, nq, Sq, h)
+
+
+def blockwise_attention(
+    q: jax.Array,  # (B, Sq, nq, h)
+    k: jax.Array,  # (B, Sk, nkv, h)
+    v: jax.Array,  # (B, Sk, nkv, h)
+    *,
+    causal: bool,
+    q_offset: int = 0,
+    window: Optional[int] = None,
+    block_size: int = 1024,
+    softmax_scale: Optional[float] = None,
+) -> jax.Array:
+    """Online-softmax attention scanning KV blocks. Returns (B, Sq, nq, h).
+
+    q_offset: absolute position of q[0] relative to k[0] (chunked prefill /
+    decode). window: sliding-window width (Mistral/Mixtral-style), counted in
+    absolute positions.
+    """
+    b, sq, nq, h = q.shape
+    sk, nkv = k.shape[1], k.shape[2]
+    g = nq // nkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / np.sqrt(h)
+
+    block_size = min(block_size, sk)  # short sequences: no padding waste
+    nb = -(-sk // block_size)
+    pad = nb * block_size - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    # (nb, B, bs, nkv, h)
+    kb = k.reshape(b, nb, block_size, nkv, h).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nb, block_size, nkv, h).transpose(1, 0, 2, 3, 4)
+
+    qf = q.astype(jnp.float32) * scale
+    # group query heads per kv head: (B, nkv, g, Sq, h)
+    qg = qf.transpose(0, 2, 1, 3).reshape(b, nkv, g, sq, h)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry: _Carry, xs):
+        kblk, vblk, blk_idx = xs
+        k_pos = blk_idx * block_size + jnp.arange(block_size)
+        # scores: (B, nkv, g, Sq, bs)
+        s = jnp.einsum(
+            "bngqh,bnkh->bngqk",
+            qg,
+            kblk.astype(jnp.float32).transpose(0, 2, 1, 3),
+        )
+        mask = k_pos[None, :] < sk  # padding
+        valid = jnp.broadcast_to(mask, (sq, block_size))
+        if causal:
+            valid = valid & (k_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            valid = valid & (k_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(carry.m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(carry.m - m_new)
+        l_new = carry.l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bngqk,bnkh->bngqh", p,
+                        vblk.astype(jnp.float32).transpose(0, 2, 1, 3))
+        acc_new = carry.acc * corr[..., None] + pv
+        return _Carry(m_new, l_new, acc_new), None
+
+    init = _Carry(
+        m=jnp.full((b, nkv, g, sq), NEG_INF, jnp.float32),
+        l=jnp.zeros((b, nkv, g, sq), jnp.float32),
+        acc=jnp.zeros((b, nkv, g, sq, h), jnp.float32),
+    )
+    carry, _ = common.uscan(body, init, (kb, vb, jnp.arange(nb)))
+    out = carry.acc / jnp.maximum(carry.l, 1e-30)[..., None]
+    out = out.reshape(b, nq, sq, h).transpose(0, 2, 1, 3)
+    return out.astype(q.dtype)
+
+
+def attention_block(
+    params,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    *,
+    causal: bool,
+    kv_override: Optional[Callable] = None,
+    block_size: int = 1024,
+    cstr=None,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Full-sequence attention sublayer. Returns (out, (k, v)) — k/v post-RoPE
+    for cache population during prefill.
+
+    kv_override(k, v) -> (k, v): hook for fake-quant evaluation (paper's PPL
+    experiments quantize every layer's K/V before attention).
+    """
+    b, s, _ = x.shape
+    cstr = cstr if cstr is not None else (lambda t, kind: t)
+    q, k, v = project_qkv(params, x, positions, cfg)
+    q = cstr(q, "heads")
+    k = cstr(k, "heads")
+    v = cstr(v, "heads")
+    if kv_override is not None:
+        k, v = kv_override(k, v)
+    out = cstr(blockwise_attention(
+        q, k, v, causal=causal, window=cfg.sliding_window,
+        block_size=block_size), "heads")
+    out = out.reshape(b, s, cfg.num_heads * cfg.head_dim)
+    return jnp.einsum("bsk,kd->bsd", out, params["wo"]), (k, v)
+
+
+def reference_attention(q, k, v, *, causal, q_offset=0, window=None):
+    """Naive O(S^2) oracle for tests."""
+    b, sq, nq, h = q.shape
+    nkv = k.shape[2]
+    g = nq // nkv
+    kk = jnp.repeat(k, g, axis=2).astype(jnp.float32)
+    vv = jnp.repeat(v, g, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqnh,bknh->bnqk", q.astype(jnp.float32), kk) / np.sqrt(h)
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(k.shape[1])[None, :]
+    valid = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        valid &= k_pos <= q_pos
+    if window is not None:
+        valid &= k_pos > q_pos - window
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bnqk,bknh->bqnh", p, vv).astype(q.dtype)

@@ -1,0 +1,190 @@
+"""Shared model building blocks (pure functional JAX, no framework).
+
+Parameters are nested dicts of `Leaf(value, axes)` where `axes` is a tuple of
+*logical* axis names ("embed", "mlp", "heads", "vocab", "expert", "layers",
+None). `split(tree)` separates them into a value pytree and a spec pytree;
+`repro.distributed.sharding` maps logical names onto the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Leaf:
+    """A parameter plus its logical sharding axes (static pytree metadata)."""
+
+    value: jax.Array
+    axes: tuple  # logical axis names, len == value.ndim
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+
+Params = Any  # nested dict of arrays
+Specs = Any  # nested dict of logical-axes tuples
+
+
+def _is_leaf(x) -> bool:
+    return isinstance(x, Leaf)
+
+
+def split(tree) -> tuple[Params, Specs]:
+    params = jax.tree.map(lambda l: l.value, tree, is_leaf=_is_leaf)
+    specs = jax.tree.map(lambda l: l.axes, tree, is_leaf=_is_leaf)
+    return params, specs
+
+
+def normal_init(key, shape, scale, dtype):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def dense(key, in_dim: int, out_dim: int, axes, dtype, *, scale=None) -> Leaf:
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    return Leaf(normal_init(key, (in_dim, out_dim), scale, dtype), axes)
+
+
+def bias(dim: int, axes, dtype) -> Leaf:
+    return Leaf(jnp.zeros((dim,), dtype), axes)
+
+
+def scale_param(dim: int, axes, dtype) -> Leaf:
+    return Leaf(jnp.ones((dim,), dtype), axes)
+
+
+def stack_layers(key, num_layers: int, init_fn: Callable[[jax.Array], dict]):
+    """vmap an init over layer keys -> (L, ...)-stacked Leafs with a leading
+    "layers" logical axis (never sharded; scanned over)."""
+    keys = jax.random.split(key, num_layers)
+    stacked = jax.vmap(init_fn)(keys)
+    return jax.tree.map(
+        lambda l: Leaf(l.value, ("layers", *l.axes)), stacked, is_leaf=_is_leaf
+    )
+
+
+# ------------------------------------------------------------------- norms --
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = ((x32 - mu) * jax.lax.rsqrt(var + eps)) * gamma.astype(jnp.float32) \
+        + beta.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def radd(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Residual add preserving the carry dtype (scan-stable)."""
+    return x + y.astype(x.dtype)
+
+
+# ------------------------------------------------------------ scan plumbing --
+# XLA's HloCostAnalysis counts a while-loop body ONCE (verified in
+# tests/test_roofline_calibration.py), so rolled scans under-report FLOPs and
+# bytes. For calibration compiles we flip this flag to fully unroll every
+# model scan, making cost_analysis exact on small configs; the analytic
+# roofline model is validated against those.
+_UNROLL_SCANS = False
+
+
+class unroll_scans:
+    """Context manager: trace model scans fully unrolled."""
+
+    def __enter__(self):
+        global _UNROLL_SCANS
+        self._prev = _UNROLL_SCANS
+        _UNROLL_SCANS = True
+
+    def __exit__(self, *exc):
+        global _UNROLL_SCANS
+        _UNROLL_SCANS = self._prev
+
+
+def uscan(body, init, xs, length=None):
+    """lax.scan honoring the global unroll flag."""
+    return jax.lax.scan(body, init, xs, length=length,
+                        unroll=True if _UNROLL_SCANS else 1)
+
+
+# -------------------------------------------------------------------- rope --
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta))
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,s,1,d/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- activations --
+def activation(name: str):
+    return {
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+        "relu": jax.nn.relu,
+    }[name]
+
+
+# ------------------------------------------------------------------- losses --
+def softmax_xent(logits: jax.Array, labels: jax.Array, mask: jax.Array | None
+                 ) -> jax.Array:
+    """Mean cross-entropy in f32; logits (..., V), labels (...) int32.
+
+    The gold logit is extracted with a masked sum rather than
+    take_along_axis: gathering along a vocab-sharded axis forces GSPMD to
+    replicate the logits (and transitively the embed/lm_head grads — 7.8
+    GiB/device at 405B). The masked sum is elementwise over V and stays
+    sharded end to end.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    v_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(
+        jnp.where(v_iota == labels[..., None], logits, 0.0), axis=-1)
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned (shape-name, seq_len, global_batch, kind) cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}

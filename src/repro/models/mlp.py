@@ -1,0 +1,33 @@
+"""Dense FFN (GLU or plain) sublayer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+
+
+def init_mlp(key, cfg: ModelConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": common.dense(ks[0], d, f, ("embed", "mlp"), dtype),
+        "w_down": common.dense(ks[1], f, d, ("mlp", "embed"), dtype),
+    }
+    if cfg.glu:
+        p["w_gate"] = common.dense(ks[2], d, f, ("embed", "mlp"), dtype)
+    return p
+
+
+def mlp_block(params, x: jax.Array, cfg: ModelConfig, cstr=None) -> jax.Array:
+    act = common.activation(cfg.act)
+    cstr = cstr if cstr is not None else (lambda t, kind: t)
+    up = cstr(jnp.einsum("bsd,df->bsf", x, params["w_up"]), "ffn_hidden")
+    if cfg.glu:
+        gate = act(cstr(jnp.einsum("bsd,df->bsf", x, params["w_gate"]),
+                        "ffn_hidden"))
+        hidden = gate * up
+    else:
+        hidden = act(up)
+    return jnp.einsum("bsf,fd->bsd", hidden, params["w_down"])

@@ -1,0 +1,129 @@
+"""Mixture-of-Experts FFN with group-local sort-based capacity dispatch.
+
+Top-k routing -> GROUP-LOCAL stable sort by expert id -> position-in-expert
+via per-group running offsets -> scatter into a fixed-capacity
+(G, E, C_g, d) buffer -> per-expert GLU FFN via einsum over the expert axis
+-> gather back and combine with gate weights.
+
+Why groups: a single global argsort over the token axis cannot be sharded
+(GSPMD replicates the whole dispatch — 119-161 GiB/device at mixtral/granite
+prefill scale, EXPERIMENTS.md §Perf iteration). With tokens reshaped to
+(G, t/G, ...) and G aligned to the batch shards, every sort/scatter/gather
+is local to its shard; only the expert GEMMs touch the model axis. Capacity
+is per-group (GShard-style drops become group-local).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import Leaf
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    ks = jax.random.split(key, 4)
+
+    def expert_mats(k, shape, axes, scale):
+        return Leaf(common.normal_init(k, shape, scale, dtype), axes)
+
+    return {
+        "router": common.dense(ks[0], d, e, ("embed", None), dtype),
+        "w_up": expert_mats(ks[1], (e, d, f), ("expert", "embed", "mlp"),
+                            1.0 / np.sqrt(d)),
+        "w_gate": expert_mats(ks[2], (e, d, f), ("expert", "embed", "mlp"),
+                              1.0 / np.sqrt(d)),
+        "w_down": expert_mats(ks[3], (e, f, d), ("expert", "mlp", "embed"),
+                              1.0 / np.sqrt(f)),
+    }
+
+
+def _dispatch_groups(cfg: ModelConfig, tokens: int) -> int:
+    """Largest configured group count that divides the token count and keeps
+    groups big enough for stable capacity statistics."""
+    g = max(cfg.moe_dispatch_groups, 1)
+    while g > 1 and (tokens % g or tokens // g < 512):
+        g //= 2
+    return max(g, 1)
+
+
+def moe_block(params, x: jax.Array, cfg: ModelConfig, cstr=None) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    cstr = cstr if cstr is not None else (lambda t, kind: t)
+    b, s, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    t = b * s
+    n_g = _dispatch_groups(cfg, t)
+    tg = t // n_g
+    tk = tg * k
+    xt = x.reshape(n_g, tg, d)
+    xt = cstr(xt, "moe_tokens")
+
+    gates = jax.nn.softmax(
+        jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), params["router"]),
+        axis=-1)
+    top_g, top_e = jax.lax.top_k(gates, k)  # (g, tg, k)
+    top_g = top_g / jnp.maximum(jnp.sum(top_g, axis=-1, keepdims=True), 1e-9)
+
+    # ---- group-local sort-based dispatch --------------------------------
+    capacity = int(np.ceil(tg * k / e * cfg.moe_capacity_factor))
+    flat_e = top_e.reshape(n_g, tk)
+    flat_tok = jnp.tile(jnp.repeat(jnp.arange(tg), k)[None], (n_g, 1))
+    flat_g = top_g.reshape(n_g, tk)
+
+    order = jnp.argsort(flat_e, axis=-1, stable=True)  # local per group
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    sorted_tok = jnp.take_along_axis(flat_tok, order, axis=-1)
+    sorted_g = jnp.take_along_axis(flat_g, order, axis=-1)
+
+    # position of each slot within its expert's contiguous run (per group)
+    expert_start = jnp.sum(
+        sorted_e[:, :, None] < jnp.arange(e)[None, None, :], axis=1
+    )  # (g, e): tokens before expert i
+    pos_in_expert = (jnp.arange(tk)[None, :]
+                     - jnp.take_along_axis(expert_start, sorted_e, axis=-1))
+    keep = pos_in_expert < capacity  # overflow dropped (group-local GShard)
+
+    dest = sorted_e * capacity + jnp.where(keep, pos_in_expert, 0)
+
+    def scatter_one(buf, dst, src):
+        return buf.at[dst].add(src)
+
+    src = jnp.where(
+        keep[..., None],
+        jnp.take_along_axis(xt, sorted_tok[..., None], axis=1), 0.0)
+    buf = jax.vmap(scatter_one)(
+        jnp.zeros((n_g, e * capacity, d), xt.dtype), dest, src)
+    buf = cstr(buf.reshape(n_g, e, capacity, d), "moe_buf")
+
+    # ---- expert FFN (einsum; expert/f dims shard over "model") -----------
+    act = common.activation(cfg.act)
+    up = jnp.einsum("gecd,edf->gecf", buf, params["w_up"])
+    gate = act(jnp.einsum("gecd,edf->gecf", buf, params["w_gate"]))
+    out_e = jnp.einsum("gecf,efd->gecd", gate * up, params["w_down"])
+    out_e = cstr(out_e, "moe_buf")
+
+    # ---- combine ----------------------------------------------------------
+    gathered = jnp.take_along_axis(
+        out_e.reshape(n_g, e * capacity, d), dest[..., None], axis=1)
+    gathered = jnp.where(keep[..., None], gathered, 0.0)
+    contrib = gathered * sorted_g[..., None].astype(gathered.dtype)
+
+    def combine_one(dst, idx, src):
+        return dst.at[idx].add(src)
+
+    out = jax.vmap(combine_one)(
+        jnp.zeros((n_g, tg, d), xt.dtype), sorted_tok, contrib)
+    return out.reshape(b, s, d)
+
+
+def aux_load_balance_loss(gates: jax.Array, top_e: jax.Array, e: int) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss (mean over tokens)."""
+    gates2 = gates.reshape(-1, e)
+    te = top_e.reshape(-1, top_e.shape[-1])
+    me = jnp.mean(gates2, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(te[:, 0], e), axis=0)
+    return e * jnp.sum(me * ce)

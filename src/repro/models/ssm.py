@@ -1,0 +1,224 @@
+"""Mamba2 (SSD) block — the state-space path of zamba2.
+
+Chunked SSD: within-chunk quadratic attention-like form + inter-chunk state
+scan (Mamba-2 paper, Listing 1 adapted to functional JAX). ngroups=1 (B/C
+shared across heads). Decode is the O(1) recurrent update on the
+(heads, head_dim, d_state) state.
+
+Simplification vs the reference CUDA implementation (documented in
+DESIGN.md): the depthwise conv is applied to the concatenated (x, B, C)
+channels with width `ssm_conv_width`, matching mamba2's layout.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import Leaf
+
+
+class SSMDims(NamedTuple):
+    d_inner: int
+    nheads: int
+    d_state: int
+    conv_dim: int
+
+
+def ssm_dims(cfg: ModelConfig) -> SSMDims:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.head_dim
+    return SSMDims(d_inner, nheads, cfg.ssm_state, d_inner + 2 * cfg.ssm_state)
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    dims = ssm_dims(cfg)
+    ks = jax.random.split(key, 5)
+    # in_proj -> [z, x, B, C, dt]
+    proj_out = 2 * dims.d_inner + 2 * dims.d_state + dims.nheads
+    dt_init = jnp.log(jnp.expm1(jnp.exp(
+        jax.random.uniform(ks[2], (dims.nheads,), minval=np.log(1e-3),
+                           maxval=np.log(1e-1))
+    )))  # inverse-softplus of U[1e-3, 1e-1]
+    return {
+        "in_proj": common.dense(ks[0], d, proj_out, ("embed", "mlp"), dtype),
+        "conv_w": Leaf(
+            common.normal_init(ks[1], (cfg.ssm_conv_width, dims.conv_dim),
+                               0.1, dtype),
+            (None, "mlp"),
+        ),
+        "dt_bias": Leaf(dt_init.astype(dtype), (None,)),
+        "a_log": Leaf(
+            jnp.log(jnp.arange(1, dims.nheads + 1, dtype=jnp.float32)
+                    ).astype(dtype),
+            (None,),
+        ),
+        "d_skip": Leaf(jnp.ones((dims.nheads,), dtype), (None,)),
+        "norm": common.scale_param(dims.d_inner, ("mlp",), dtype),
+        "out_proj": common.dense(ks[3], dims.d_inner, d, ("mlp", "embed"), dtype),
+    }
+
+
+def _split_proj(zxbcdt, dims: SSMDims):
+    z, x, bmat, cmat, dt = jnp.split(
+        zxbcdt,
+        [dims.d_inner, 2 * dims.d_inner, 2 * dims.d_inner + dims.d_state,
+         2 * dims.d_inner + 2 * dims.d_state],
+        axis=-1,
+    )
+    return z, x, bmat, cmat, dt
+
+
+def _causal_conv(u: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq. u: (B,S,C); w: (W,C)."""
+    width = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(width):  # width is tiny (4); unrolled taps
+        out = out + up[:, i : i + u.shape[1], :] * w[i]
+    return out
+
+
+class MambaState(NamedTuple):
+    """Decode-time recurrent state for one layer."""
+
+    h: jax.Array  # (B, nheads, head_dim, d_state) f32
+    conv: jax.Array  # (B, conv_width-1, conv_dim) — trailing conv inputs
+
+
+def init_mamba_state(batch: int, cfg: ModelConfig, dtype=jnp.float32
+                     ) -> MambaState:
+    dims = ssm_dims(cfg)
+    return MambaState(
+        h=jnp.zeros((batch, dims.nheads, cfg.head_dim, dims.d_state),
+                    jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, dims.conv_dim), dtype),
+    )
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) post-softplus
+    a: jax.Array,  # (H,) negative
+    bmat: jax.Array,  # (B, S, N)
+    cmat: jax.Array,  # (B, S, N)
+    *,
+    chunk: int = 256,
+    h0: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), h_final (B,H,P,N)). All math f32."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+
+    def rc(t, tail_shape):  # reshape into chunks, chunk axis leading
+        return t.reshape(b, nc, chunk, *tail_shape).swapaxes(0, 1)
+
+    xc = rc(x, (h, p)).astype(jnp.float32)  # (nc, b, q, h, p)
+    dtc = rc(dt, (h,)).astype(jnp.float32)
+    bc = rc(bmat, (n,)).astype(jnp.float32)
+    cc = rc(cmat, (n,)).astype(jnp.float32)
+
+    la = jnp.cumsum(dtc * a, axis=2)  # (nc, b, q, h) cumulative log-decay
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def body(hprev, xs):
+        xq, dq, bq, cq, laq = xs  # per-chunk slices
+        # intra-chunk: decay(t, s) = exp(la_t - la_s) for s <= t
+        diff = laq[:, :, None, :] - laq[:, None, :, :]  # (b, q, q, h)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        decay = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        cb = jnp.einsum("bqn,bsn->bqs", cq, bq)  # (b, q, s)
+        att = cb[..., None] * decay  # (b, q, s, h)
+        y_intra = jnp.einsum("bqsh,bsh,bshp->bqhp", att, dq, xq)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bqn,bhpn,bqh->bqhp", cq, hprev, jnp.exp(laq))
+        # state update: h_new = exp(la_Q) h_prev + sum_s exp(la_Q - la_s) dB x
+        la_end = laq[:, -1]  # (b, h)
+        w = jnp.exp(la_end[:, None, :] - laq) * dq  # (b, q, h)
+        s_chunk = jnp.einsum("bqh,bqn,bqhp->bhpn", w, bq, xq)
+        h_new = jnp.exp(la_end)[:, :, None, None] * hprev + s_chunk
+        return h_new, y_intra + y_inter
+
+    h_final, yc = common.uscan(body, h0, (xc, dtc, bc, cc, la))
+    y = yc.swapaxes(0, 1).reshape(b, nc * chunk, h, p)[:, :s]
+    return y, h_final
+
+
+def mamba2_block(
+    params, x: jax.Array, cfg: ModelConfig, *, chunk: int = 256,
+    return_state: bool = False,
+):
+    """Full-sequence Mamba2 sublayer. x: (B, S, D) -> (B, S, D).
+
+    With return_state=True also returns the final MambaState so prefill can
+    hand off to the recurrent decode path.
+    """
+    dims = ssm_dims(cfg)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, params["in_proj"])
+    z, u, bmat, cmat, dt = _split_proj(zxbcdt, dims)
+    conv_in = jnp.concatenate([u, bmat, cmat], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv_w"]))
+    u, bmat, cmat = jnp.split(
+        conv_out, [dims.d_inner, dims.d_inner + dims.d_state], axis=-1
+    )
+    b, s, _ = x.shape
+    uh = u.reshape(b, s, dims.nheads, cfg.head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    y, h_final = ssd_chunked(uh, dt, a, bmat, cmat, chunk=chunk)
+    y = y + params["d_skip"][None, None, :, None] * uh
+    y = y.reshape(b, s, dims.d_inner).astype(x.dtype)
+    y = common.rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+    if not return_state:
+        return out
+    w = cfg.ssm_conv_width
+    state = MambaState(h=h_final, conv=conv_in[:, -(w - 1):, :])
+    return out, state
+
+
+def mamba2_decode_step(
+    params, x: jax.Array, state: MambaState, cfg: ModelConfig
+) -> tuple[jax.Array, MambaState]:
+    """One-token step. x: (B, 1, D) -> (B, 1, D) + updated state."""
+    dims = ssm_dims(cfg)
+    b = x.shape[0]
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, params["in_proj"])
+    z, u, bmat, cmat, dt = _split_proj(zxbcdt, dims)
+    conv_in = jnp.concatenate([u, bmat, cmat], axis=-1)  # (B, 1, conv_dim)
+    window = jnp.concatenate([state.conv, conv_in], axis=1)  # (B, W, conv)
+    conv_out = jax.nn.silu(
+        jnp.sum(window * params["conv_w"][None], axis=1, keepdims=True)
+    )
+    new_conv = window[:, 1:]
+    u, bmat, cmat = jnp.split(
+        conv_out, [dims.d_inner, dims.d_inner + dims.d_state], axis=-1
+    )
+    uh = u.reshape(b, dims.nheads, cfg.head_dim).astype(jnp.float32)
+    dt1 = jax.nn.softplus(
+        dt[:, 0].astype(jnp.float32) + params["dt_bias"]
+    )  # (B, H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt1 * a)  # (B, H)
+    db_x = jnp.einsum("bh,bn,bhp->bhpn", dt1, bmat[:, 0].astype(jnp.float32), uh)
+    h_new = decay[:, :, None, None] * state.h + db_x
+    y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0].astype(jnp.float32), h_new)
+    y = y + params["d_skip"][None, :, None].astype(jnp.float32) * uh
+    y = y.reshape(b, 1, dims.d_inner).astype(x.dtype)
+    y = common.rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+    return out, MambaState(h=h_new, conv=new_conv)

@@ -1,0 +1,276 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM + recurrent sLSTM.
+
+mLSTM is a matrix-memory linear recurrence with exponential input gating and
+sigmoid forget gating; we implement the *stabilized chunkwise* form (running
+log-max m carried across chunks, flash-attention-style) so training at 4k
+tokens parallelizes while decode is an O(1) state update.
+
+sLSTM has a genuinely nonlinear recurrence (block-diagonal recurrent weights)
+and is computed with lax.scan over time.
+
+Block layout follows the paper's residual pre-norm blocks; d_ff=0 in the
+assigned config means there is no separate FFN block — the up/down
+projections live inside the xLSTM blocks.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import Leaf
+
+
+# =============================================================== mLSTM ======
+def init_mlstm(key, cfg: ModelConfig, dtype) -> dict:
+    d, h, dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "norm": common.scale_param(d, ("embed",), dtype),
+        "w_up": common.dense(ks[0], d, 2 * d, ("embed", "mlp"), dtype),
+        "wq": common.dense(ks[1], d, h * dh, ("embed", "heads"), dtype),
+        "wk": common.dense(ks[2], d, h * dh, ("embed", "heads"), dtype),
+        "wv": common.dense(ks[3], d, h * dh, ("embed", "heads"), dtype),
+        "w_gates": common.dense(ks[4], d, 2 * h, ("embed", None), dtype),
+        "gate_bias": Leaf(
+            jnp.concatenate([jnp.full((h,), 3.0), jnp.full((h,), -1.0)]
+                            ).astype(dtype),
+            (None,),
+        ),  # forget-gate bias +3 (remember by default), input-gate -1
+        "out_norm": common.scale_param(h * dh, ("heads",), dtype),
+        "w_down": common.dense(ks[5], h * dh, d, ("heads", "embed"), dtype),
+    }
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, dh, dh) matrix memory
+    n: jax.Array  # (B, H, dh) normalizer
+    m: jax.Array  # (B, H) log-stabilizer
+
+
+def init_mlstm_state(batch: int, cfg: ModelConfig) -> MLSTMState:
+    h, dh = cfg.num_heads, cfg.head_dim
+    return MLSTMState(
+        c=jnp.zeros((batch, h, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, h, dh), jnp.float32),
+        m=jnp.full((batch, h), -1e30, jnp.float32),
+    )
+
+
+def _mlstm_chunk(carry: MLSTMState, xs, *, chunk: int):
+    """One chunk of the stabilized chunkwise mLSTM recurrence.
+
+    xs: q,k,v (B,Q,H,dh); lf, li (B,Q,H) log forget / log input gate.
+    """
+    q, k, v, lf, li = xs
+    bsz, qlen, h, dh = q.shape
+    scale = 1.0 / np.sqrt(dh)
+    b_cum = jnp.cumsum(lf, axis=1)  # (B,Q,H) cumulative log-forget incl. step t
+    b_tot = b_cum[:, -1]  # (B,H)
+
+    # intra-chunk log weights: lw[t,s] = b_t - b_s + li_s  (s <= t)
+    lw = b_cum[:, :, None, :] - b_cum[:, None, :, :] + li[:, None, :, :]
+    tri = jnp.tril(jnp.ones((qlen, qlen), bool))
+    lw = jnp.where(tri[None, :, :, None], lw, -jnp.inf)
+    m_intra = jnp.max(lw, axis=2)  # (B,Q,H)
+    # inter-chunk scale for query t: b_t + m_prev
+    m_inter = b_cum + carry.m[:, None, :]
+    m_t = jnp.maximum(m_intra, m_inter)  # (B,Q,H)
+    m_t = jnp.maximum(m_t, -1e30)
+
+    w = jnp.exp(lw - m_t[:, :, None, :])  # (B,Q,S,H)
+    qk = jnp.einsum("bqhd,bshd->bqsh", q, k) * scale
+    num_intra = jnp.einsum("bqsh,bqsh,bshd->bqhd", w, qk, v)
+    den_intra = jnp.einsum("bqsh,bqsh->bqh", w, qk)
+
+    inter_scale = jnp.exp(m_inter - m_t)  # (B,Q,H)
+    num_inter = jnp.einsum("bqhd,bhde->bqhe", q * scale, carry.c)
+    num_inter = num_inter * inter_scale[..., None]
+    den_inter = jnp.einsum("bqhd,bhd->bqh", q * scale, carry.n) * inter_scale
+
+    num = num_intra + num_inter
+    den = den_intra + den_inter
+    y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+    # ---- state update across the chunk ---------------------------------
+    # contribution log-scale of step s to end-of-chunk: b_tot - b_s + li_s
+    ls = b_tot[:, None, :] - b_cum + li  # (B,Q,H)
+    m_state_new = jnp.maximum(b_tot + carry.m, jnp.max(ls, axis=1))
+    w_s = jnp.exp(ls - m_state_new[:, None, :])  # (B,Q,H)
+    c_new = (
+        jnp.exp(b_tot + carry.m - m_state_new)[:, :, None, None] * carry.c
+        + jnp.einsum("bsh,bshd,bshe->bhde", w_s, k, v)
+    )
+    n_new = (
+        jnp.exp(b_tot + carry.m - m_state_new)[:, :, None] * carry.n
+        + jnp.einsum("bsh,bshd->bhd", w_s, k)
+    )
+    return MLSTMState(c_new, n_new, m_state_new), y
+
+
+def mlstm_sequence(
+    q, k, v, lf, li, *, chunk: int = 256, state: MLSTMState | None = None
+) -> tuple[jax.Array, MLSTMState]:
+    """Chunkwise mLSTM over (B,S,H,dh) inputs; returns (y, final state)."""
+    b, s, h, dh = q.shape
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        padfn = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        q, k, v = padfn(q), padfn(k), padfn(v)
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))
+        # padded steps must not contribute: li = -inf, lf = 0
+        li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+
+    def rc(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    if state is None:
+        state = init_mlstm_state(b, _CfgShim(h, dh))
+    xs = tuple(map(rc, (q, k, v, lf, li)))
+    final, yc = common.uscan(
+        lambda c, x: _mlstm_chunk(c, x, chunk=chunk), state, xs
+    )
+    y = yc.swapaxes(0, 1).reshape(b, nc * chunk, h, dh)[:, :s]
+    return y, final
+
+
+class _CfgShim(NamedTuple):
+    num_heads: int
+    head_dim: int
+
+
+def mlstm_decode_step(q, k, v, lf, li, state: MLSTMState
+                      ) -> tuple[jax.Array, MLSTMState]:
+    """One-token mLSTM update. q/k/v: (B,H,dh); lf/li: (B,H)."""
+    dh = q.shape[-1]
+    scale = 1.0 / np.sqrt(dh)
+    m_new = jnp.maximum(lf + state.m, li)
+    f_s = jnp.exp(lf + state.m - m_new)
+    i_s = jnp.exp(li - m_new)
+    c_new = f_s[..., None, None] * state.c + i_s[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n_new = f_s[..., None] * state.n + i_s[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q * scale, c_new)
+    den = jnp.einsum("bhd,bhd->bh", q * scale, n_new)
+    y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return y, MLSTMState(c_new, n_new, m_new)
+
+
+def _mlstm_qkv_gates(params, x, cfg: ModelConfig):
+    b = x.shape[0]
+    s = x.shape[1]
+    h, dh = cfg.num_heads, cfg.head_dim
+    xn = common.rms_norm(x, params["norm"], cfg.norm_eps)
+    up = jnp.einsum("bsd,dk->bsk", xn, params["w_up"])
+    u, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bsd,dk->bsk", xn, params["wq"]).reshape(b, s, h, dh)
+    k = jnp.einsum("bsd,dk->bsk", xn, params["wk"]).reshape(b, s, h, dh)
+    v = jnp.einsum("bsd,dk->bsk", u, params["wv"]).reshape(b, s, h, dh)
+    gates = jnp.einsum("bsd,dk->bsk", xn, params["w_gates"]) + params["gate_bias"]
+    fg, ig = jnp.split(gates.astype(jnp.float32), 2, axis=-1)  # (B,S,H)
+    lf = jax.nn.log_sigmoid(fg)
+    li = jnp.minimum(ig, 15.0)  # exp input gating, clamped for safety
+    return q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), lf, li, z
+
+
+def mlstm_block(params, x: jax.Array, cfg: ModelConfig, *, chunk: int = 256
+                ) -> jax.Array:
+    b, s, d = x.shape
+    q, k, v, lf, li, z = _mlstm_qkv_gates(params, x, cfg)
+    y, _ = mlstm_sequence(q, k, v, lf, li, chunk=chunk)
+    y = y.reshape(b, s, cfg.num_heads * cfg.head_dim).astype(x.dtype)
+    y = common.rms_norm(y, params["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return jnp.einsum("bsk,kd->bsd", y, params["w_down"])
+
+
+def mlstm_block_decode(params, x: jax.Array, state: MLSTMState,
+                       cfg: ModelConfig) -> tuple[jax.Array, MLSTMState]:
+    b = x.shape[0]
+    q, k, v, lf, li, z = _mlstm_qkv_gates(params, x, cfg)
+    y, new_state = mlstm_decode_step(
+        q[:, 0], k[:, 0], v[:, 0], lf[:, 0], li[:, 0], state
+    )
+    y = y.reshape(b, 1, cfg.num_heads * cfg.head_dim).astype(x.dtype)
+    y = common.rms_norm(y, params["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return jnp.einsum("bsk,kd->bsd", y, params["w_down"]), new_state
+
+
+# =============================================================== sLSTM ======
+def init_slstm(key, cfg: ModelConfig, dtype) -> dict:
+    d, h, dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+    ks = jax.random.split(key, 3)
+    return {
+        "norm": common.scale_param(d, ("embed",), dtype),
+        "w_in": common.dense(ks[0], d, 4 * d, ("embed", "heads"), dtype),
+        "r": Leaf(
+            common.normal_init(ks[1], (h, dh, 4 * dh), 1.0 / np.sqrt(dh), dtype),
+            (None, None, None),
+        ),
+        "gate_bias": Leaf(
+            jnp.concatenate(
+                [jnp.zeros((d,)), jnp.full((d,), 3.0), jnp.full((d,), -1.0),
+                 jnp.zeros((d,))]
+            ).astype(dtype),
+            (None,),
+        ),
+        "w_down": common.dense(ks[2], d, d, ("heads", "embed"), dtype),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, dh)
+    n: jax.Array  # (B, H, dh)
+    h: jax.Array  # (B, H, dh)
+    m: jax.Array  # (B, H, dh)
+
+
+def init_slstm_state(batch: int, cfg: ModelConfig) -> SLSTMState:
+    h, dh = cfg.num_heads, cfg.head_dim
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return SLSTMState(z, z, z, jnp.full((batch, h, dh), -1e30, jnp.float32))
+
+
+def _slstm_step(params, cfg: ModelConfig, state: SLSTMState, wx
+                ) -> tuple[SLSTMState, jax.Array]:
+    """wx: precomputed input contribution (B, 4*D) for this timestep."""
+    h_, dh = cfg.num_heads, cfg.head_dim
+    rec = jnp.einsum("bhd,hdk->bhk", state.h.astype(wx.dtype), params["r"])
+    pre = wx.reshape(wx.shape[0], h_, 4 * dh) + rec  # (B,H,4dh)
+    zt, ft, it, ot = jnp.split(pre.astype(jnp.float32), 4, axis=-1)
+    lf = jax.nn.log_sigmoid(ft)
+    li = jnp.minimum(it, 15.0)
+    m_new = jnp.maximum(lf + state.m, li)
+    f_s, i_s = jnp.exp(lf + state.m - m_new), jnp.exp(li - m_new)
+    c_new = f_s * state.c + i_s * jnp.tanh(zt)
+    n_new = f_s * state.n + i_s
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+    return SLSTMState(c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_block(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    b, s, d = x.shape
+    xn = common.rms_norm(x, params["norm"], cfg.norm_eps)
+    wx = jnp.einsum("bsd,dk->bsk", xn, params["w_in"]) + params["gate_bias"]
+    state = init_slstm_state(b, cfg)
+    final, hs = common.uscan(
+        lambda c, w: _slstm_step(params, cfg, c, w), state, wx.swapaxes(0, 1)
+    )
+    y = hs.swapaxes(0, 1).reshape(b, s, d).astype(x.dtype)
+    return jnp.einsum("bsd,dk->bsk", y, params["w_down"])
+
+
+def slstm_block_decode(params, x: jax.Array, state: SLSTMState,
+                       cfg: ModelConfig) -> tuple[jax.Array, SLSTMState]:
+    b, _, d = x.shape
+    xn = common.rms_norm(x, params["norm"], cfg.norm_eps)
+    wx = (jnp.einsum("bsd,dk->bsk", xn, params["w_in"])
+          + params["gate_bias"])[:, 0]
+    new_state, h = _slstm_step(params, cfg, state, wx)
+    y = h.reshape(b, 1, d).astype(x.dtype)
+    return jnp.einsum("bsd,dk->bsk", y, params["w_down"]), new_state

@@ -1,0 +1,211 @@
+"""Single-token decode steps for every family, over raw or quantized caches.
+
+The decode step is the serving hot loop: it reads the whole KV cache once per
+token (memory-bound at long context — exactly what TurboAngle compresses) and
+appends the new token's quantized K/V in-place (buffer donation keeps it
+allocation-free across steps).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.cache import kvcache
+from repro.cache.kvcache import QuantKVCache, RawKVCache
+from repro.configs.base import ModelConfig
+from repro.core.quantizer import KVQuantizer
+from repro.models import attention, common, mlp, moe, ssm, transformer, xlstm
+
+
+class DecodeState(NamedTuple):
+    """Everything carried between decode steps."""
+
+    cache: Any  # RawKVCache | QuantKVCache | None
+    states: Any  # recurrent states (hybrid/xlstm) or None
+
+
+def _attn_decode(
+    layer_attn_params,
+    x: jax.Array,  # (B, 1, D) pre-normed input
+    position: jax.Array,  # () int32 absolute position of this token
+    layer_cache: tuple,
+    nk: jax.Array,
+    nv: jax.Array,
+    length: jax.Array,
+    cfg: ModelConfig,
+    qz: Optional[KVQuantizer],
+):
+    """Attention sublayer at decode time. Returns (out (B,1,D), new cache)."""
+    b = x.shape[0]
+    positions = jnp.broadcast_to(position, (b, 1))
+    q, k, v = attention.project_qkv(layer_attn_params, x, positions, cfg)
+    n_valid = length + 1  # includes the token being appended
+
+    if qz is None:
+        layer_k, layer_v = layer_cache
+        layer_k, layer_v = kvcache.append_raw(
+            layer_k, layer_v, k, v, length, cfg.sliding_window)
+        out = kvcache.attend_raw_cache(q, layer_k, layer_v, n_valid, cfg)
+        new_cache = (layer_k, layer_v)
+    else:
+        layer_kq, layer_vq = layer_cache
+        new_kq = qz.encode(k, nk, qz.config.k_norm)
+        new_vq = qz.encode(v, nv, qz.config.v_norm)
+        layer_kq = kvcache.append_quant(layer_kq, new_kq, length,
+                                        cfg.sliding_window)
+        layer_vq = kvcache.append_quant(layer_vq, new_vq, length,
+                                        cfg.sliding_window)
+        out = kvcache.attend_quant_cache(
+            q, layer_kq, layer_vq, nk, nv, n_valid, cfg, qz)
+        new_cache = (layer_kq, layer_vq)
+
+    out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim).astype(x.dtype)
+    return jnp.einsum("bsk,kd->bsd", out, layer_attn_params["wo"]), new_cache
+
+
+def decode_step(
+    params,
+    cfg: ModelConfig,
+    state: DecodeState,
+    tokens: jax.Array,  # (B, 1) int32
+    *,
+    quantizer: Optional[KVQuantizer] = None,
+    param_constraint=None,
+    constraint=None,
+) -> tuple[jax.Array, DecodeState]:
+    """One decode step -> (logits (B, V), new DecodeState)."""
+    x = transformer.embed_inputs(params, cfg, {"tokens": tokens})
+    qz = quantizer
+    pcstr = param_constraint if param_constraint is not None else (lambda t: t)
+    cstr = constraint if constraint is not None else (lambda t, kind="residual": t)
+
+    if cfg.family == "decoder":
+        cache = state.cache
+        length = cache.length
+        position = length
+        nk, nv = transformer._layer_bins(qz, cfg.num_layers)
+
+        def body(carry, xs):
+            layer_params, ck, cv, lnk, lnv = xs
+            layer_params = pcstr(layer_params)
+            h, new_c = _attn_decode(
+                layer_params["attn"],
+                common.rms_norm(carry, layer_params["norm1"], cfg.norm_eps),
+                position, (ck, cv), lnk, lnv, length, cfg, qz,
+            )
+            xx = common.radd(carry, h)
+            inner = common.rms_norm(xx, layer_params["norm2"], cfg.norm_eps)
+            if cfg.moe_experts:
+                xx = common.radd(
+                    xx, moe.moe_block(layer_params["moe"], inner, cfg, cstr))
+            else:
+                xx = common.radd(
+                    xx, mlp.mlp_block(layer_params["mlp"], inner, cfg, cstr))
+            return xx, new_c
+
+        x, new_kv = common.uscan(
+            body, x, (params["layers"], cache.k, cache.v, nk, nv))
+        new_cache = type(cache)(k=new_kv[0], v=new_kv[1], length=length + 1)
+        logits = transformer.lm_logits(params, cfg, x)[:, 0]
+        return logits, DecodeState(cache=new_cache, states=None)
+
+    if cfg.family == "hybrid_ssm":
+        cache = state.cache
+        length = cache.length
+        position = length
+        n_groups = cfg.num_layers // cfg.attn_every
+        nk, nv = transformer._layer_bins(qz, n_groups)
+        shared = params["shared_attn"]
+
+        def group_body(carry, xs):
+            group_params, ck, cv, lnk, lnv, gstates = xs
+
+            def mamba_body(c, lxs):
+                lp, st = lxs
+                lp = pcstr(lp)
+                out, new_st = ssm.mamba2_decode_step(
+                    lp["ssm"],
+                    common.rms_norm(c, lp["norm"], cfg.norm_eps), st, cfg)
+                return common.radd(c, out), new_st
+
+            h, new_states = common.uscan(
+                mamba_body, carry, (group_params, gstates))
+            a, new_c = _attn_decode(
+                shared["attn"],
+                common.rms_norm(h, shared["norm"], cfg.norm_eps),
+                position, (ck, cv), lnk, lnv, length, cfg, qz,
+            )
+            return common.radd(h, a), (new_c, new_states)
+
+        x, (new_kv, new_states) = common.uscan(
+            group_body, x,
+            (params["mamba"], cache.k, cache.v, nk, nv, state.states))
+        new_cache = type(cache)(k=new_kv[0], v=new_kv[1], length=length + 1)
+        logits = transformer.lm_logits(params, cfg, x)[:, 0]
+        return logits, DecodeState(cache=new_cache, states=new_states)
+
+    if cfg.family == "xlstm":
+
+        def group_body(carry, xs):
+            group_params, (mstates, sstate) = xs
+
+            def mbody(c, lxs):
+                lp, st = lxs
+                lp = pcstr(lp)
+                out, new_st = xlstm.mlstm_block_decode(lp, c, st, cfg)
+                return common.radd(c, out), new_st
+
+            h, new_m = common.uscan(
+                mbody, carry, (group_params["mlstm"], mstates))
+            out, new_s = xlstm.slstm_block_decode(
+                group_params["slstm"], h, sstate, cfg)
+            return common.radd(h, out), (new_m, new_s)
+
+        x, new_states = common.uscan(
+            group_body, x, (params["groups"], state.states))
+        logits = transformer.lm_logits(params, cfg, x)[:, 0]
+        return logits, DecodeState(cache=None, states=new_states)
+
+    raise ValueError(f"decode not defined for family {cfg.family}")
+
+
+def init_decode_state(
+    cfg: ModelConfig,
+    batch: int,
+    seq_len: int,
+    *,
+    quantizer: Optional[KVQuantizer] = None,
+    prefilled: int = 0,
+    dtype=jnp.bfloat16,
+) -> DecodeState:
+    """Fresh decode state with an empty (or logically `prefilled`) cache."""
+    cache = None
+    if cfg.has_kv_cache:
+        if quantizer is None:
+            cache = kvcache.init_raw_cache(cfg, batch, seq_len, dtype)
+        else:
+            cache = kvcache.init_quant_cache(cfg, quantizer, batch, seq_len)
+        cache = cache._replace(length=jnp.asarray(prefilled, jnp.int32))
+    states = None
+    if cfg.family == "hybrid_ssm":
+        n_groups = cfg.num_layers // cfg.attn_every
+        one = ssm.init_mamba_state(batch, cfg, dtype)
+        states = jax.tree.map(
+            lambda t: jnp.tile(t[None, None],
+                               (n_groups, cfg.attn_every) + (1,) * t.ndim),
+            one,
+        )
+    if cfg.family == "xlstm":
+        per = cfg.slstm_every
+        n_groups = cfg.num_layers // per
+        m_one = xlstm.init_mlstm_state(batch, cfg)
+        s_one = xlstm.init_slstm_state(batch, cfg)
+        mstates = jax.tree.map(
+            lambda t: jnp.tile(t[None, None],
+                               (n_groups, per - 1) + (1,) * t.ndim), m_one)
+        sstates = jax.tree.map(
+            lambda t: jnp.tile(t[None], (n_groups,) + (1,) * t.ndim), s_one)
+        states = (mstates, sstates)
+    return DecodeState(cache=cache, states=states)
