@@ -1,7 +1,8 @@
-"""Batched serving with a TurboAngle-compressed KV cache.
+"""Ragged batched serving with a TurboAngle-compressed KV cache.
 
-Prefills a batch of prompts, decodes greedily with the quantized cache, and
-compares memory + outputs against the bf16-cache reference path.
+Prefills a batch of unequal-length prompts, decodes greedily through the
+attention-backend layer, and compares memory + outputs between the quantized
+and bf16-cache backends.
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -16,16 +17,22 @@ from repro.configs import registry
 from repro.core import mixedkv, rates
 from repro.core.quantizer import KVQuantizer, QuantizerConfig
 from repro.models import transformer
-from repro.serving import decode as decoding
+from repro.serving import backends as backends_lib
+from repro.serving import engine
 
 ARCH = "mistral-7b"  # the paper's eval model (reduced width for CPU)
-B, PROMPT, GEN = 4, 48, 24
+PROMPT_LENS = (48, 37, 25, 12)  # ragged batch
+GEN = 24
 
 cfg = registry.get_reduced_config(ARCH)
 params, _ = transformer.init_params(jax.random.PRNGKey(0), cfg)
 rng = np.random.default_rng(0)
-prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, PROMPT)),
-                      jnp.int32)
+B, S_MAX = len(PROMPT_LENS), max(PROMPT_LENS)
+tokens = np.zeros((B, S_MAX), np.int32)
+for i, n in enumerate(PROMPT_LENS):
+    tokens[i, :n] = rng.integers(0, cfg.vocab_size, n)
+prompts = jnp.asarray(tokens)
+lengths = jnp.asarray(PROMPT_LENS, jnp.int32)
 
 qz = KVQuantizer(QuantizerConfig(
     head_dim=cfg.head_dim,
@@ -33,25 +40,14 @@ qz = KVQuantizer(QuantizerConfig(
     k_norm=rates.NORM_K8, v_norm=rates.NORM_V4_LOG))
 
 
-def generate(quantizer):
-    pre = transformer.forward_prefill(
-        params, cfg, {"tokens": prompts}, quantizer=quantizer, remat=False)
-    cache = kvcache.cache_from_prefill(
-        pre.kv_quant, PROMPT, quantizer is not None, pad_to=PROMPT + GEN)
-    state = decoding.DecodeState(cache=cache, states=pre.states)
-    step = jax.jit(lambda s, t: decoding.decode_step(
-        params, cfg, s, t, quantizer=quantizer))
-    nxt = jnp.argmax(pre.last_logits, -1)[:, None].astype(jnp.int32)
-    out = [nxt]
-    for _ in range(GEN - 1):
-        logits, state = step(state, nxt)
-        nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        out.append(nxt)
-    return jnp.concatenate(out, 1), state.cache
+def run(backend):
+    res = engine.generate(
+        params, cfg, backend, prompts, lengths, max_new_tokens=GEN)
+    return res.tokens, res.cache
 
 
-tok_q, cache_q = generate(qz)
-tok_raw, cache_raw = generate(None)
+tok_q, cache_q = run(backends_lib.QuantXLABackend(cfg, qz))
+tok_raw, cache_raw = run(backends_lib.RawBackend(cfg))
 
 agree = float(jnp.mean((tok_q == tok_raw).astype(jnp.float32)))
 bytes_q = kvcache.cache_physical_bytes(cache_q)
@@ -61,5 +57,6 @@ print(f"cache bytes: {bytes_q/1e6:.3f} MB quantized vs "
       f"{bytes_raw/1e6:.3f} MB bf16 ({bytes_raw/bytes_q:.2f}x smaller)")
 print(f"rates: angle {qz.config.angle_bits():.2f} b/elem, end-to-end "
       f"{qz.config.total_bits():.2f} b/elem")
-print(f"sample continuation (quantized): {np.asarray(tok_q[0])[:12]}")
-print(f"sample continuation (bf16)     : {np.asarray(tok_raw[0])[:12]}")
+for i, n in enumerate(PROMPT_LENS):
+    print(f"seq {i} (prompt {n:2d}): quant {np.asarray(tok_q[i])[:8]} | "
+          f"bf16 {np.asarray(tok_raw[i])[:8]}")

@@ -6,10 +6,18 @@ ring buffer of T_max = window with the invariant that absolute position p
 lives in slot p % window (softmax is permutation-invariant over keys, and
 RoPE is applied before encoding, so slot order never matters).
 
+Lengths are tracked **per sequence** as a (B,) int32 vector so ragged batches
+(unequal prompt lengths) mask and append correctly: each row appends at its
+own slot `lengths[i] % window` and attends over `slots < lengths[i]`.
+
 The quantized decode path implements the beyond-paper Hadamard-domain
 optimization: queries are rotated once (q -> HDq), scores are taken directly
 against the stored Hadamard-domain keys, and the inverse transform is applied
 once to the attention *output* instead of to every cached value vector.
+
+Backend selection (which of these attend/append paths serves the decode hot
+loop) lives in `repro.serving.backends`; this module only provides the
+primitives.
 """
 from __future__ import annotations
 
@@ -30,7 +38,7 @@ class RawKVCache(NamedTuple):
 
     k: jax.Array  # (L, B, T, n_kv, head_dim)
     v: jax.Array
-    length: jax.Array  # () int32 — number of tokens already cached
+    lengths: jax.Array  # (B,) int32 — tokens already cached per sequence
 
 
 class QuantKVCache(NamedTuple):
@@ -38,13 +46,19 @@ class QuantKVCache(NamedTuple):
 
     k: QuantizedKV  # arrays (L, B, T, n_kv, ...)
     v: QuantizedKV
-    length: jax.Array
+    lengths: jax.Array  # (B,) int32
 
 
 def _cache_tmax(cfg: ModelConfig, seq_len: int) -> int:
     if cfg.sliding_window is not None:
         return min(cfg.sliding_window, seq_len)
     return seq_len
+
+
+def per_seq_lengths(lengths, batch: int) -> jax.Array:
+    """Normalize an int / () / (B,) lengths value to a (B,) int32 vector."""
+    arr = jnp.asarray(lengths, jnp.int32)
+    return jnp.broadcast_to(arr.reshape(-1) if arr.ndim else arr, (batch,))
 
 
 def init_raw_cache(cfg: ModelConfig, batch: int, seq_len: int,
@@ -54,7 +68,7 @@ def init_raw_cache(cfg: ModelConfig, batch: int, seq_len: int,
     return RawKVCache(
         k=jnp.zeros(shape, dtype),
         v=jnp.zeros(shape, dtype),
-        length=jnp.zeros((), jnp.int32),
+        lengths=jnp.zeros((batch,), jnp.int32),
     )
 
 
@@ -90,21 +104,25 @@ def init_quant_cache(cfg: ModelConfig, qz: KVQuantizer, batch: int,
     return QuantKVCache(
         k=_quantized_zeros(qz, lead, qz.config.k_norm.bits),
         v=_quantized_zeros(qz, lead, qz.config.v_norm.bits),
-        length=jnp.zeros((), jnp.int32),
+        lengths=jnp.zeros((batch,), jnp.int32),
     )
 
 
-def cache_from_prefill(kv_stack, length: int, quantized: bool,
+def cache_from_prefill(kv_stack, lengths, quantized: bool,
                        pad_to: int | None = None) -> tuple:
     """Wrap forward_prefill's scan outputs into a cache struct.
 
     kv_stack is the (K, V) tuple of layer-stacked QuantizedKV (quantized) or
-    raw arrays; prefill emits (L, B, S, n_kv, ...). `pad_to` grows the token
-    axis to the serving capacity so decode steps have slots to append into
-    (dynamic_update_slice clamps out-of-range starts, which would silently
-    overwrite the last cached token otherwise).
+    raw arrays; prefill emits (L, B, S, n_kv, ...). `lengths` is the number of
+    valid prompt tokens — an int for uniform batches or a (B,) vector for
+    ragged ones (right-padded prompts: slots past lengths[i] hold encoded
+    padding that stays masked until decode overwrites it). `pad_to` grows the
+    token axis to the serving capacity so decode steps have slots to append
+    into (dynamic_update_slice clamps out-of-range starts, which would
+    silently overwrite the last cached token otherwise).
     """
     k, v = kv_stack
+    batch = jax.tree.leaves(k)[0].shape[1]
 
     def grow(t):
         cur = t.shape[2]
@@ -116,16 +134,18 @@ def cache_from_prefill(kv_stack, length: int, quantized: bool,
 
     k = jax.tree.map(grow, k)
     v = jax.tree.map(grow, v)
+    lengths = per_seq_lengths(lengths, batch)
     if quantized:
-        return QuantKVCache(k=k, v=v, length=jnp.asarray(length, jnp.int32))
-    return RawKVCache(k=k, v=v, length=jnp.asarray(length, jnp.int32))
+        return QuantKVCache(k=k, v=v, lengths=lengths)
+    return RawKVCache(k=k, v=v, lengths=lengths)
 
 
 # ==================================================== cache update =========
-def _insert_slot(cache_len: jax.Array, window: Optional[int]) -> jax.Array:
+def _insert_slots(lengths: jax.Array, window: Optional[int]) -> jax.Array:
+    """(B,) ring-buffer write slots for the next token of each sequence."""
     if window is None:
-        return cache_len
-    return jnp.mod(cache_len, window)
+        return lengths
+    return jnp.mod(lengths, window)
 
 
 def append_raw(
@@ -133,26 +153,35 @@ def append_raw(
     layer_v: jax.Array,
     new_k: jax.Array,  # (B, 1, n_kv, h)
     new_v: jax.Array,
-    length: jax.Array,
+    lengths: jax.Array,  # (B,) or () int32
     window: Optional[int],
 ):
-    slot = _insert_slot(length, window)
-    layer_k = jax.lax.dynamic_update_slice_in_dim(
-        layer_k, new_k.astype(layer_k.dtype), slot, axis=1)
-    layer_v = jax.lax.dynamic_update_slice_in_dim(
-        layer_v, new_v.astype(layer_v.dtype), slot, axis=1)
+    slots = _insert_slots(per_seq_lengths(lengths, layer_k.shape[0]), window)
+
+    def upd(buf, new, slot):  # (T, n, h), (1, n, h), ()
+        return jax.lax.dynamic_update_slice_in_dim(
+            buf, new.astype(buf.dtype), slot, axis=0)
+
+    layer_k = jax.vmap(upd)(layer_k, new_k, slots)
+    layer_v = jax.vmap(upd)(layer_v, new_v, slots)
     return layer_k, layer_v
 
 
 def append_quant(
     layer_q: QuantizedKV,  # (B, T, n_kv, ...) one layer
     new_q: QuantizedKV,  # (B, 1, n_kv, ...)
-    length: jax.Array,
+    lengths: jax.Array,  # (B,) or () int32
     window: Optional[int],
 ) -> QuantizedKV:
-    slot = _insert_slot(length, window)
-    upd = lambda buf, new: jax.lax.dynamic_update_slice_in_dim(
-        buf, new.astype(buf.dtype), slot, axis=1)
+    slots = _insert_slots(
+        per_seq_lengths(lengths, layer_q.indices.shape[0]), window)
+
+    def upd(buf, new):
+        return jax.vmap(
+            lambda b, n, s: jax.lax.dynamic_update_slice_in_dim(
+                b, n.astype(b.dtype), s, axis=0)
+        )(buf, new, slots)
+
     return QuantizedKV(
         indices=upd(layer_q.indices, new_q.indices),
         norm_codes=upd(layer_q.norm_codes, new_q.norm_codes),
@@ -164,17 +193,22 @@ def append_quant(
 # ================================================ attention over cache =====
 def _score_mask(t_max: int, n_valid: jax.Array, window: Optional[int]
                 ) -> jax.Array:
-    """(t_max,) bool — which cache slots participate."""
-    slots = jnp.arange(t_max)
+    """(B, t_max) bool — which cache slots participate, per sequence.
+
+    Accepts scalar n_valid (uniform batch) and returns (1, t_max) then, which
+    broadcasts against any batch dim.
+    """
+    n = jnp.asarray(n_valid, jnp.int32).reshape(-1, 1)  # (B, 1) or (1, 1)
+    slots = jnp.arange(t_max)[None, :]
     if window is None:
-        return slots < n_valid
-    return slots < jnp.minimum(n_valid, window)
+        return slots < n
+    return slots < jnp.minimum(n, window)
 
 
 def _gqa_softmax_attend(scores: jax.Array, vals: jax.Array, mask: jax.Array
                         ) -> jax.Array:
-    """scores (B,nkv,g,T) x vals (B,T,nkv,hv) -> (B,nkv,g,hv), f32."""
-    scores = jnp.where(mask[None, None, None, :], scores, NEG_INF)
+    """scores (B,nkv,g,T) x vals (B,T,nkv,hv), mask (B,T) -> (B,nkv,g,hv)."""
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum("bngt,btnh->bngh", p, vals.astype(jnp.float32))
 
@@ -183,7 +217,7 @@ def attend_raw_cache(
     q: jax.Array,  # (B, 1, nq, h) RoPE'd query
     layer_k: jax.Array,  # (B, T, n_kv, h)
     layer_v: jax.Array,
-    n_valid: jax.Array,
+    n_valid: jax.Array,  # (B,) or () int32
     cfg: ModelConfig,
 ) -> jax.Array:
     b, _, nq, h = q.shape
@@ -202,9 +236,10 @@ def attend_quant_cache(
     layer_vq: QuantizedKV,
     nk_bins: jax.Array,
     nv_bins: jax.Array,
-    n_valid: jax.Array,
+    n_valid: jax.Array,  # (B,) or () int32
     cfg: ModelConfig,
     qz: KVQuantizer,
+    y_dtype=jnp.bfloat16,
 ) -> jax.Array:
     """Hadamard-domain fused attention over the quantized cache.
 
@@ -216,28 +251,35 @@ def attend_quant_cache(
     scale = 1.0 / np.sqrt(h)
     d_pad = qz.config.d_pad
     q_rot = qz.rotate_query(q[:, 0]) * scale  # (B, nq, d_pad) f32
-    qg = q_rot.reshape(b, nkv, g, d_pad).astype(jnp.bfloat16)
+    qg = q_rot.reshape(b, nkv, g, d_pad).astype(y_dtype)
 
-    # dequantized y-domain K/V are cast to bf16: on the XLA fallback path
+    # dequantized y-domain K/V default to bf16: on the XLA fallback path
     # they materialize in HBM, and f32 doubles the decode memory term (§Perf
     # iteration). The Pallas qattn kernel dequantizes in VMEM and never
     # materializes them at all. Scores still accumulate in f32 (MXU-style).
+    # y_dtype=float32 matches the kernel's in-VMEM precision (parity tests).
     y_k = qz.decode_rotated(layer_kq, nk_bins, qz.config.k_norm
-                            ).astype(jnp.bfloat16)
+                            ).astype(y_dtype)
     scores = jnp.einsum("bngh,btnh->bngt", qg, y_k,
                         preferred_element_type=jnp.float32)
     mask = _score_mask(y_k.shape[1], n_valid, cfg.sliding_window)
 
     y_v = qz.decode_rotated(layer_vq, nv_bins, qz.config.v_norm
-                            ).astype(jnp.bfloat16)
+                            ).astype(y_dtype)
     out_y = _gqa_softmax_attend(scores, y_v, mask)  # (B,nkv,g,d_pad)
     out = qz.unrotate_output(out_y)  # (B,nkv,g,h) original domain
     return out.reshape(b, 1, nq, h)
 
 
 def cache_physical_bytes(cache) -> int:
-    """Actual bytes held by the cache pytree (what memory_analysis sees)."""
+    """Bytes of cache *payload* (the K/V arrays; lengths bookkeeping excluded).
+
+    Compression ratios everywhere (launch/serve, examples, benchmarks) are
+    payload-over-payload so the (B,) lengths vector never skews small-cache
+    comparisons.
+    """
+    payload = (cache.k, cache.v) if hasattr(cache, "k") else cache
     return sum(
-        x.size * x.dtype.itemsize for x in jax.tree.leaves(cache)
+        x.size * x.dtype.itemsize for x in jax.tree.leaves(payload)
         if hasattr(x, "dtype")
     )

@@ -46,7 +46,11 @@ class ModelConfig:
     param_dtype: str = "float32"
     compute_dtype: str = "float32"
     # --- feature flags ---
-    use_pallas: bool = False  # Pallas kernels (TPU); pure-JAX path otherwise
+    # Default attention backend for serving when RunConfig.backend == "auto":
+    # True resolves to "quant-pallas" (fused in-VMEM dequant decode kernel),
+    # False to "quant-xla". An explicit RunConfig.backend always wins; see
+    # repro.serving.backends.from_run for the resolution order.
+    use_pallas: bool = False
 
     def __post_init__(self):
         if self.head_dim == 0:
@@ -184,3 +188,7 @@ class RunConfig:
     model: ModelConfig
     quant: QuantConfig = QuantConfig()
     parallel: ParallelConfig = ParallelConfig()
+    # Serving attention backend: "auto" | "raw" | "quant-xla" | "quant-pallas"
+    # (repro.serving.backends). "auto" -> raw when quant is disabled, else
+    # quant-pallas/quant-xla per ModelConfig.use_pallas.
+    backend: str = "auto"

@@ -1,7 +1,16 @@
 """jit'd wrapper: quantized-cache decode attention via the Pallas kernel.
 
-Mirrors `repro.cache.kvcache.attend_quant_cache` (the pure-XLA path) so the
-two are interchangeable behind `ModelConfig.use_pallas`.
+Mirrors `repro.cache.kvcache.attend_quant_cache` (the pure-XLA path). Which
+path serves the decode hot loop is decided by the attention-backend layer in
+`repro.serving.backends`: the `quant-pallas` backend calls this wrapper, the
+`quant-xla` backend calls the XLA path, and `repro.serving.decode` dispatches
+through whichever backend it was handed. `ModelConfig.use_pallas` only sets
+the *default* backend (`RunConfig.backend = "auto"` resolves to quant-pallas
+when it is true); an explicit `RunConfig.backend` always wins.
+
+`n_valid` may be per-sequence (B,) and `n_bins_k/v` may be traced per-layer
+scan values — both are runtime inputs of the kernel, so a mixed (early-boost
+/ selective) schedule runs through one compiled kernel.
 """
 from __future__ import annotations
 
@@ -18,9 +27,9 @@ def attend_quant_cache_op(
     q: jax.Array,  # (B, 1, nq, h) RoPE'd query, logical head dim
     layer_kq: QuantizedKV,  # (B, T, n_kv, ...)
     layer_vq: QuantizedKV,
-    n_bins_k: int,
-    n_bins_v: int,
-    n_valid: jax.Array,
+    n_bins_k,  # int or traced i32 scalar
+    n_bins_v,
+    n_valid: jax.Array,  # (B,) or () int32
     cfg: ModelConfig,
     qz: KVQuantizer,
     *,
@@ -29,6 +38,12 @@ def attend_quant_cache_op(
     b, _, nq, h = q.shape
     nkv, g = cfg.num_kv_heads, cfg.q_per_kv
     dp = qz.config.d_pad
+    if cfg.sliding_window is not None:
+        # mirror kvcache._score_mask: once a sequence decodes past the
+        # window, only `window` ring slots are live — without this clamp the
+        # kernel's row_ok (= row < n_valid) would admit never-written slots
+        n_valid = jnp.minimum(jnp.asarray(n_valid, jnp.int32),
+                              cfg.sliding_window)
     scale = 1.0 / np.sqrt(h)
     q_rot = (qz.rotate_query(q[:, 0]) * scale).reshape(b, nkv, g, dp)
     kc, vc = qz.config.k_norm, qz.config.v_norm

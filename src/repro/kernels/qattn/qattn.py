@@ -17,6 +17,12 @@ Grid: (B, n_kv, T/block_t), accumulating online-softmax state in VMEM
 scratch across the sequential T dimension. Per-step VMEM: two uint8 code
 blocks + two f32 dequant tiles (block_t x d_pad) ~= 0.6 MiB at d_pad=128,
 block_t=512.
+
+Serving integration: `length` is a per-sequence (B,) vector (ragged batches)
+and the codebook sizes `n_bins_k`/`n_bins_v` are *runtime* scalars fed
+through a (1, 2) scalar block — they ride along the per-layer MixedKV scan
+as traced values, so one compiled kernel serves every layer of a mixed
+schedule. Only the norm format (bits/log) stays compile-time static.
 """
 from __future__ import annotations
 
@@ -32,7 +38,10 @@ NEG_INF = -1e30
 
 
 def _dequant_block(idx, nq, rmin, rmax, *, n_bins, bits, log):
-    """(bt, pairs) codes -> (bt, 2*pairs) y-domain block, f32."""
+    """(bt, pairs) codes -> (bt, 2*pairs) y-domain block, f32.
+
+    n_bins may be a traced i32 scalar (read off the bins ref).
+    """
     bt, pairs = idx.shape
     if bits is None:
         r = nq.astype(jnp.float32)
@@ -41,18 +50,18 @@ def _dequant_block(idx, nq, rmin, rmax, *, n_bins, bits, log):
         scale = jnp.maximum(rmax - rmin, 1e-12)
         v = nq.astype(jnp.float32) / levels * scale + rmin
         r = jnp.exp(v) if log else v
-    theta = (idx.astype(jnp.float32) + 0.5) * (TWO_PI / n_bins)
+    theta = (idx.astype(jnp.float32) + 0.5) * (
+        TWO_PI / jnp.asarray(n_bins, jnp.float32))
     even = r * jnp.cos(theta)
     odd = r * jnp.sin(theta)
     return jnp.stack([even, odd], axis=-1).reshape(bt, pairs * 2)
 
 
 def qattn_kernel(
-    len_ref, q_ref, kidx_ref, knq_ref, krmin_ref, krmax_ref,
+    len_ref, bins_ref, q_ref, kidx_ref, knq_ref, krmin_ref, krmax_ref,
     vidx_ref, vnq_ref, vrmin_ref, vrmax_ref, o_ref,
     m_scr, l_scr, acc_scr, *,
-    block_t: int, n_bins_k: int, n_bins_v: int,
-    k_bits, k_log, v_bits, v_log,
+    block_t: int, k_bits, k_log, v_bits, v_log,
 ):
     t_step = pl.program_id(2)
     n_steps = pl.num_programs(2)
@@ -64,7 +73,9 @@ def qattn_kernel(
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     q = q_ref[0, 0]  # (g, dp) pre-rotated, pre-scaled
-    length = len_ref[0, 0]
+    length = len_ref[0, 0]  # this batch row's valid-token count
+    n_bins_k = bins_ref[0, 0]
+    n_bins_v = bins_ref[0, 1]
     row_pos = t_step * block_t + jax.lax.broadcasted_iota(
         jnp.int32, (block_t, 1), 0)
     row_ok = row_pos < length  # (bt, 1); also kills OOB-padding garbage rows
@@ -100,8 +111,8 @@ def qattn_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_bins_k", "n_bins_v", "k_bits", "k_log", "v_bits",
-                     "v_log", "block_t", "interpret"),
+    static_argnames=("k_bits", "k_log", "v_bits", "v_log", "block_t",
+                     "interpret"),
 )
 def qattn(
     q_rot: jax.Array,  # (B, nkv, G, Dp) f32, pre-scaled
@@ -113,10 +124,10 @@ def qattn(
     v_nq: jax.Array,
     v_rmin: jax.Array,
     v_rmax: jax.Array,
-    length: jax.Array,  # () int32
+    length: jax.Array,  # (B,) per-sequence valid counts, or () broadcast
     *,
-    n_bins_k: int,
-    n_bins_v: int,
+    n_bins_k,  # int or traced i32 scalar (per-layer MixedKV scan value)
+    n_bins_v,
     k_bits=None,
     k_log: bool = False,
     v_bits=None,
@@ -130,6 +141,14 @@ def qattn(
     block_t = min(block_t, t)
     grid = (b, nkv, pl.cdiv(t, block_t))
 
+    from repro.cache.kvcache import per_seq_lengths
+
+    lengths = per_seq_lengths(length, b).reshape(b, 1)
+    bins = jnp.stack([
+        jnp.asarray(n_bins_k, jnp.int32).reshape(()),
+        jnp.asarray(n_bins_v, jnp.int32).reshape(()),
+    ]).reshape(1, 2)
+
     def kv_spec(last):
         return pl.BlockSpec(
             (1, block_t, 1, last), lambda bi, ni, ti: (bi, ti, ni, 0))
@@ -138,12 +157,12 @@ def qattn(
 
     return pl.pallas_call(
         functools.partial(
-            qattn_kernel, block_t=block_t, n_bins_k=n_bins_k,
-            n_bins_v=n_bins_v, k_bits=k_bits, k_log=k_log, v_bits=v_bits,
-            v_log=v_log),
+            qattn_kernel, block_t=block_t, k_bits=k_bits, k_log=k_log,
+            v_bits=v_bits, v_log=v_log),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1), lambda bi, ni, ti: (0, 0)),  # length
+            pl.BlockSpec((1, 1), lambda bi, ni, ti: (bi, 0)),  # lengths (B,1)
+            pl.BlockSpec((1, 2), lambda bi, ni, ti: (0, 0)),  # [n_k, n_v]
             pl.BlockSpec((1, 1, g, dp), lambda bi, ni, ti: (bi, ni, 0, 0)),
             kv_spec(pairs), kv_spec(pairs), kv_spec(1), kv_spec(1),
             kv_spec(pairs), kv_spec(pairs), kv_spec(1), kv_spec(1),
@@ -157,5 +176,5 @@ def qattn(
             pltpu.VMEM((g, dp), jnp.float32),
         ],
         interpret=interpret,
-    )(length.reshape(1, 1).astype(jnp.int32), q_rot, k_idx, k_nq, k_rmin,
+    )(lengths, bins, q_rot, k_idx, k_nq, k_rmin,
       k_rmax, v_idx, v_nq, v_rmin, v_rmax)

@@ -20,6 +20,7 @@ def qattn_ref(q_rot, k_idx, k_nq, k_rmin, k_rmax, v_idx, v_nq, v_rmin,
 
     q_rot: (B, nkv, G, Dp) pre-rotated, pre-scaled queries.
     k/v codes: (B, T, nkv, Dp/2) + per-vector min/max (B, T, nkv, 1).
+    length: () uniform or (B,) per-sequence valid-token counts.
     Returns the y-domain output (B, nkv, G, Dp) — caller applies DH.
     """
     y_k = angular.decode_rotated(
@@ -34,7 +35,8 @@ def qattn_ref(q_rot, k_idx, k_nq, k_rmin, k_rmax, v_idx, v_nq, v_rmin,
         n_bins_v)
     scores = jnp.einsum("bngd,btnd->bngt", q_rot.astype(jnp.float32), y_k)
     t = k_idx.shape[1]
-    mask = jnp.arange(t) < length
-    scores = jnp.where(mask[None, None, None, :], scores, -1e30)
+    lengths = jnp.asarray(length, jnp.int32).reshape(-1, 1)  # (B,1) or (1,1)
+    mask = jnp.arange(t)[None, :] < lengths
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
     p = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum("bngt,btnd->bngd", p, y_v)

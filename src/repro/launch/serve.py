@@ -1,8 +1,12 @@
-"""Serving launcher: prefill a batch of prompts, decode with the TurboAngle
-cache, report memory/compression stats.
+"""Serving launcher: prefill a (possibly ragged) batch of prompts, decode
+through a pluggable attention backend, report memory/compression stats.
 
     PYTHONPATH=src python -m repro.launch.serve --arch mistral-7b --reduced \
-        --prompt-len 64 --gen 32
+        --prompt-len 64 --gen 32 --backend quant-pallas
+
+Ragged batches: --prompt-lens 64,48,32,20 gives each row its own prompt
+length (right-padded internally); per-sequence EOS (--eos-id) stops rows
+independently and the whole loop exits early once every row is done.
 """
 from __future__ import annotations
 
@@ -17,7 +21,8 @@ from repro.cache import kvcache
 from repro.configs import registry
 from repro.launch import steps as steps_lib
 from repro.models import transformer
-from repro.serving import decode as decoding
+from repro.serving import backends as backends_lib
+from repro.serving import engine
 
 
 def main(argv=None):
@@ -26,55 +31,72 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--prompt-lens", type=str, default=None,
+                    help="comma-separated per-sequence prompt lengths "
+                         "(overrides --batch/--prompt-len; ragged batch)")
     ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--no-quant", action="store_true")
-    ap.add_argument("--greedy", action="store_true", default=True)
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto",) + backends_lib.BACKEND_NAMES)
+    ap.add_argument("--no-quant", action="store_true",
+                    help="shorthand for --backend raw")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stop a sequence when it samples this token")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 -> greedy")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     run = registry.get_run_config(args.arch)
     cfg = registry.get_reduced_config(args.arch) if args.reduced \
         else run.model
-    if args.no_quant:
+    backend_name = "raw" if args.no_quant else args.backend
+    if backend_name == "raw":
         run = dataclasses.replace(
             run, quant=dataclasses.replace(run.quant, enabled=False))
-    run = dataclasses.replace(run, model=cfg)
+    run = dataclasses.replace(run, model=cfg, backend=backend_name)
     qz = steps_lib.make_quantizer(run)
+    backend = backends_lib.from_run(run, qz)
+
+    if args.prompt_lens:
+        lens = [int(x) for x in args.prompt_lens.split(",")]
+    else:
+        lens = [args.prompt_len] * args.batch
+    batch, s_max = len(lens), max(lens)
+    prompt_lengths = jnp.asarray(lens, jnp.int32)
 
     params, _ = transformer.init_params(jax.random.PRNGKey(0), cfg)
-    rng = np.random.default_rng(0)
-    tokens = jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
-        jnp.int32)
+    rng = np.random.default_rng(args.seed)
+    tokens = np.zeros((batch, s_max), np.int32)
+    for i, n in enumerate(lens):
+        tokens[i, :n] = rng.integers(0, cfg.vocab_size, n)
+    prompts = jnp.asarray(tokens)
 
-    total = args.prompt_len + args.gen
-    if cfg.family in ("decoder", "hybrid_ssm"):
-        pre = transformer.forward_prefill(
-            params, cfg, {"tokens": tokens}, quantizer=qz, remat=False)
-        cache = kvcache.cache_from_prefill(
-            pre.kv_quant, args.prompt_len, qz is not None, pad_to=total)
-        state = decoding.DecodeState(cache=cache, states=pre.states)
-        nxt = jnp.argmax(pre.last_logits, -1)[:, None].astype(jnp.int32)
-    else:  # xlstm: prefill == run the sequence for states
-        pre = transformer.forward_prefill(
-            params, cfg, {"tokens": tokens}, quantizer=None, remat=False)
-        state = decoding.DecodeState(cache=None, states=pre.states)
-        nxt = jnp.argmax(pre.last_logits, -1)[:, None].astype(jnp.int32)
+    result = engine.generate(
+        params, cfg, backend, prompts, prompt_lengths,
+        max_new_tokens=args.gen,
+        sampling=engine.SamplingConfig(
+            temperature=args.temperature, top_k=args.top_k,
+            top_p=args.top_p),
+        eos_id=args.eos_id,
+        rng=jax.random.PRNGKey(args.seed),
+    )
 
-    step = jax.jit(lambda p, s, t: decoding.decode_step(
-        p, cfg, s, t, quantizer=qz))
-    generated = [nxt]
-    for _ in range(args.gen - 1):
-        logits, state = step(params, state, nxt)
-        nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        generated.append(nxt)
-    out = jnp.concatenate(generated, axis=1)
-    print(f"generated {out.shape} tokens; first row: {np.asarray(out[0])[:16]}")
+    out = np.asarray(result.tokens)
+    num = np.asarray(result.num_generated)
+    print(f"backend: {backend.name}; decode steps run: {int(result.steps)} "
+          f"/ {args.gen}")
+    for i in range(batch):
+        print(f"  seq {i}: prompt {lens[i]:4d} tok -> generated "
+              f"{int(num[i]):3d} tok: {out[i, :min(int(num[i]), 12)]}")
 
-    if state.cache is not None:
-        nbytes = kvcache.cache_physical_bytes(state.cache)
-        raw = kvcache.init_raw_cache(cfg, args.batch, total, jnp.bfloat16)
-        raw_bytes = kvcache.cache_physical_bytes(raw) \
-            - raw.length.size * raw.length.dtype.itemsize
+    if result.cache is not None and cfg.has_kv_cache:
+        total = s_max + args.gen
+        nbytes = kvcache.cache_physical_bytes(result.cache)
+        raw = jax.eval_shape(
+            lambda: kvcache.init_raw_cache(cfg, batch, total, jnp.bfloat16))
+        raw_bytes = kvcache.cache_physical_bytes(raw)
         print(f"cache bytes: {nbytes/1e6:.2f} MB "
               f"(bf16 reference: {raw_bytes/1e6:.2f} MB, "
               f"{raw_bytes/max(nbytes,1):.2f}x compression)")

@@ -23,6 +23,7 @@ from repro.distributed import sharding as shd
 from repro.launch.mesh import axis_size, batch_axes
 from repro.models import common, transformer
 from repro.models.common import SHAPES, ShapeSpec
+from repro.serving import backends as backends_lib
 from repro.serving import decode as decoding
 from repro.training import optimizer as opt
 
@@ -287,7 +288,7 @@ def _decode_state_shardings(cfg: ModelConfig, mesh: Mesh, state_shapes,
             lambda a: shd.cache_sharding(mesh, cfg, a.shape),
             state_shapes.cache,
         )
-        cache_sh = cache_sh._replace(length=REPL(mesh))
+        cache_sh = cache_sh._replace(lengths=REPL(mesh))
 
     def shard_state_leaf(path_hint_batch_dim):
         def fn(a):
@@ -323,6 +324,7 @@ def make_decode_step(run: RunConfig, mesh: Mesh, shape: ShapeSpec,
                      *, donate: bool = True) -> ServeArtifacts:
     cfg = run.model
     qz = make_quantizer(run)
+    backend = backends_lib.from_run(run, qz) if cfg.has_kv_cache else None
     param_shapes, specs = transformer.abstract_params(cfg)
     p_shardings = _serve_param_shardings(run, mesh, param_shapes, specs)
 
@@ -330,7 +332,7 @@ def make_decode_step(run: RunConfig, mesh: Mesh, shape: ShapeSpec,
     state_shapes = jax.eval_shape(
         functools.partial(
             decoding.init_decode_state, cfg, b, shape.seq_len,
-            quantizer=qz, prefilled=0, dtype=jnp.bfloat16))
+            quantizer=qz, backend=backend, prefilled=0, dtype=jnp.bfloat16))
     state_sh = _decode_state_shardings(cfg, mesh, state_shapes, b)
     tok_shapes = jax.ShapeDtypeStruct((b, 1), jnp.int32)
     pod_spec = P(("pod",)) if ("pod" in mesh.axis_names
@@ -345,6 +347,7 @@ def make_decode_step(run: RunConfig, mesh: Mesh, shape: ShapeSpec,
 
     def step(params, state, tokens):
         return decoding.decode_step(params, cfg, state, tokens, quantizer=qz,
+                                    backend=backend,
                                     param_constraint=pcstr,
                                     constraint=constraint)
 

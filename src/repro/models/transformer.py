@@ -315,6 +315,17 @@ class PrefillResult(NamedTuple):
     states: Any = None  # recurrent states (hybrid_ssm / xlstm), layer-stacked
 
 
+def _gather_last(x: jax.Array, last_index: Optional[jax.Array]) -> jax.Array:
+    """(B, S, D) -> (B, 1, D) at per-row `last_index` (ragged prompts),
+    or simply the final position when last_index is None."""
+    if last_index is None:
+        return x[:, -1:]
+    idx = jnp.broadcast_to(
+        last_index.astype(jnp.int32)[:, None, None],
+        (x.shape[0], 1, x.shape[-1]))
+    return jnp.take_along_axis(x, idx, axis=1)
+
+
 def forward_prefill(
     params,
     cfg: ModelConfig,
@@ -324,11 +335,16 @@ def forward_prefill(
     remat: bool = True,
     constraint=None,
     param_constraint=None,
+    last_index: Optional[jax.Array] = None,
 ) -> PrefillResult:
     """Full forward emitting the (quantized) KV cache stack as scan outputs.
 
     For sliding-window configs only the trailing `window` positions are kept
     (ring layout, pos = t mod window).
+
+    `last_index` ((B,) int32, optional) selects each row's last *valid*
+    position for last_logits/last_hidden — ragged batches right-pad prompts
+    to a common length, and the pad positions must not drive sampling.
     """
     x = embed_inputs(params, cfg, batch)
     b, s, _ = x.shape
@@ -339,10 +355,20 @@ def forward_prefill(
 
     def encode_kv(k, v, lnk, lnv):
         if window is not None and s > window:
-            # keep last `window` tokens, rolled so cache[i] = token (base + i)
-            shift = s % window
-            k = jnp.roll(k[:, -window:], shift, axis=1)
-            v = jnp.roll(v[:, -window:], shift, axis=1)
+            # Ring layout: slot j holds the latest position p < L with
+            # p == j (mod window), *per row* — ragged rows (last_index set)
+            # keep their own trailing window; rows with L <= window keep
+            # slot j = position j. Slots with no such p get an arbitrary
+            # in-range position (they stay masked: slots >= min(L, window)).
+            b_ = k.shape[0]
+            lengths = (last_index + 1 if last_index is not None
+                       else jnp.full((b_,), s, jnp.int32))
+            j = jnp.arange(window)[None, :]
+            pos = j + window * ((lengths[:, None] - 1 - j) // window)
+            pos = jnp.clip(pos, 0, s - 1)  # (B, window)
+            take = lambda t: jnp.take_along_axis(
+                t, pos[:, :, None, None].astype(jnp.int32), axis=1)
+            k, v = take(k), take(v)
         if quantizer is None:
             return (k, v)
         kq = quantizer.encode(k, lnk, quantizer.config.k_norm)
@@ -372,8 +398,9 @@ def forward_prefill(
 
         body_fn = jax.checkpoint(body) if remat else body
         x, kv = common.uscan(body_fn, cstr(x), (params["layers"], nk, nv))
-        logits = lm_logits(params, cfg, x[:, -1:])[:, 0]
-        return PrefillResult(logits, kv, x[:, -1])
+        x_last = _gather_last(x, last_index)
+        logits = lm_logits(params, cfg, x_last)[:, 0]
+        return PrefillResult(logits, kv, x_last[:, 0])
 
     if cfg.family == "hybrid_ssm":
         n_groups = cfg.num_layers // cfg.attn_every
@@ -401,8 +428,9 @@ def forward_prefill(
 
         x, (kv, states) = common.uscan(
             group_body, cstr(x), (params["mamba"], nk, nv))
-        logits = lm_logits(params, cfg, x[:, -1:])[:, 0]
-        return PrefillResult(logits, kv, x[:, -1], states)
+        x_last = _gather_last(x, last_index)
+        logits = lm_logits(params, cfg, x_last)[:, 0]
+        return PrefillResult(logits, kv, x_last[:, 0], states)
 
     if cfg.family == "xlstm":
 
@@ -433,7 +461,10 @@ def forward_prefill(
             return cstr(h), (mstates, sfinal)
 
         x, states = common.uscan(group_body, cstr(x), params["groups"])
-        logits = lm_logits(params, cfg, x[:, -1:])[:, 0]
-        return PrefillResult(logits, None, x[:, -1], states)
+        # NOTE: last_index only fixes the logits gather here; the recurrent
+        # states have processed any padding (ragged xlstm is not exact)
+        x_last = _gather_last(x, last_index)
+        logits = lm_logits(params, cfg, x_last)[:, 0]
+        return PrefillResult(logits, None, x_last[:, 0], states)
 
     raise ValueError(f"prefill not defined for family {cfg.family}")

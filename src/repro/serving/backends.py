@@ -1,0 +1,222 @@
+"""Pluggable attention backends: the single dispatch point for the decode
+hot loop.
+
+A backend owns one cache representation and the four operations serving
+needs from it:
+
+    init_cache(batch, seq_len)                  fresh layer-stacked cache
+    cache_from_prefill(kv_stack, lengths, ...)  wrap prefill scan outputs
+    append(layer_cache, k, v, nk, nv, lengths)  write one token per sequence
+    attend(q, layer_cache, nk, nv, n_valid)     masked attention over cache
+    physical_bytes(cache)                       payload bytes (compression)
+
+Three implementations:
+
+    raw          bf16 cache, exact attention (reference / baseline)
+    quant-xla    TurboAngle cache, pure-XLA Hadamard-domain attention —
+                 dequantized K/V materialize in HBM (portable fallback)
+    quant-pallas TurboAngle cache, fused Pallas flash-decode kernel —
+                 dequantizes in VMEM, never materializes y-domain K/V;
+                 this is the path that actually banks the compression
+                 bandwidth win
+
+Selection: `RunConfig.backend` ("auto" | "raw" | "quant-xla" |
+"quant-pallas"). "auto" resolves from the run's quant settings and
+`ModelConfig.use_pallas`. Backends are frozen dataclasses so they hash/eq
+cleanly as jit closure constants.
+
+All lengths are per-sequence (B,) vectors; scalars broadcast, so uniform
+batches need no special casing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.cache import kvcache
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core.quantizer import KVQuantizer
+from repro.kernels.qattn import ops as qattn_ops
+
+BACKEND_NAMES = ("raw", "quant-xla", "quant-pallas")
+
+
+def _clamp_pad(cfg: ModelConfig, pad_to):
+    """Sliding-window caches never need more than `window` ring slots."""
+    if pad_to is not None and cfg.sliding_window is not None:
+        return min(pad_to, cfg.sliding_window)
+    return pad_to
+
+
+@runtime_checkable
+class AttentionBackend(Protocol):
+    """What `serving.decode` / `serving.engine` require of a backend."""
+
+    name: str
+    cfg: ModelConfig
+    quantizer: Optional[KVQuantizer]
+
+    def init_cache(self, batch: int, seq_len: int): ...
+
+    def cache_from_prefill(self, kv_stack, lengths, pad_to=None): ...
+
+    def append(self, layer_cache, new_k, new_v, nk, nv, lengths): ...
+
+    def attend(self, q, layer_cache, nk, nv, n_valid): ...
+
+    def physical_bytes(self, cache) -> int: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class RawBackend:
+    """bf16/fp32 cache — the exactness baseline."""
+
+    cfg: ModelConfig
+    dtype: jnp.dtype = jnp.bfloat16
+    name: str = "raw"
+    quantizer: Optional[KVQuantizer] = None
+
+    def init_cache(self, batch: int, seq_len: int):
+        return kvcache.init_raw_cache(self.cfg, batch, seq_len, self.dtype)
+
+    def cache_from_prefill(self, kv_stack, lengths, pad_to=None):
+        # prefill emits K/V in compute dtype (often f32); store at the
+        # cache dtype so the footprint matches what init_cache allocates
+        kv_stack = jax.tree.map(lambda a: a.astype(self.dtype), kv_stack)
+        return kvcache.cache_from_prefill(kv_stack, lengths, False,
+                                          pad_to=_clamp_pad(self.cfg, pad_to))
+
+    def append(self, layer_cache, new_k, new_v, nk, nv, lengths):
+        layer_k, layer_v = layer_cache
+        return kvcache.append_raw(layer_k, layer_v, new_k, new_v, lengths,
+                                  self.cfg.sliding_window)
+
+    def attend(self, q, layer_cache, nk, nv, n_valid):
+        layer_k, layer_v = layer_cache
+        return kvcache.attend_raw_cache(q, layer_k, layer_v, n_valid,
+                                        self.cfg)
+
+    def physical_bytes(self, cache) -> int:
+        return kvcache.cache_physical_bytes(cache)
+
+
+@dataclasses.dataclass(frozen=True)
+class _QuantBackendBase:
+    cfg: ModelConfig
+    quantizer: KVQuantizer = None  # required; default only for field order
+
+    def __post_init__(self):
+        if self.quantizer is None:
+            raise ValueError(f"{self.name} backend requires a KVQuantizer")
+
+    def init_cache(self, batch: int, seq_len: int):
+        return kvcache.init_quant_cache(self.cfg, self.quantizer, batch,
+                                        seq_len)
+
+    def cache_from_prefill(self, kv_stack, lengths, pad_to=None):
+        return kvcache.cache_from_prefill(kv_stack, lengths, True,
+                                          pad_to=_clamp_pad(self.cfg, pad_to))
+
+    def append(self, layer_cache, new_k, new_v, nk, nv, lengths):
+        layer_kq, layer_vq = layer_cache
+        qz = self.quantizer
+        new_kq = qz.encode(new_k, nk, qz.config.k_norm)
+        new_vq = qz.encode(new_v, nv, qz.config.v_norm)
+        window = self.cfg.sliding_window
+        return (
+            kvcache.append_quant(layer_kq, new_kq, lengths, window),
+            kvcache.append_quant(layer_vq, new_vq, lengths, window),
+        )
+
+    def physical_bytes(self, cache) -> int:
+        return kvcache.cache_physical_bytes(cache)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantXLABackend(_QuantBackendBase):
+    """TurboAngle cache, pure-XLA attention (y-domain K/V hit HBM).
+
+    y_dtype: precision of the materialized dequantized K/V. bf16 halves the
+    HBM traffic this fallback pays; float32 matches quant-pallas bit-for-bit
+    (the kernel always dequantizes in f32 VMEM) and is what parity tests use.
+    """
+
+    name: str = "quant-xla"
+    y_dtype: jnp.dtype = jnp.bfloat16
+
+    def attend(self, q, layer_cache, nk, nv, n_valid):
+        layer_kq, layer_vq = layer_cache
+        return kvcache.attend_quant_cache(
+            q, layer_kq, layer_vq, nk, nv, n_valid, self.cfg, self.quantizer,
+            y_dtype=self.y_dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPallasBackend(_QuantBackendBase):
+    """TurboAngle cache, fused Pallas flash-decode (in-VMEM dequant).
+
+    interpret=None resolves at call time: compiled on TPU, interpreter
+    everywhere else (CPU CI still exercises the same kernel body).
+    """
+
+    name: str = "quant-pallas"
+    interpret: Optional[bool] = None
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.quantizer.config.storage == "bitpack":
+            raise ValueError(
+                "quant-pallas reads uint8 codes directly; bitpack storage "
+                "is only supported by the quant-xla backend")
+
+    def attend(self, q, layer_cache, nk, nv, n_valid):
+        layer_kq, layer_vq = layer_cache
+        interpret = self.interpret
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return qattn_ops.attend_quant_cache_op(
+            q, layer_kq, layer_vq, nk, nv, n_valid, self.cfg,
+            self.quantizer, interpret=interpret)
+
+
+def get_backend(
+    name: str,
+    cfg: ModelConfig,
+    quantizer: Optional[KVQuantizer] = None,
+    *,
+    dtype=jnp.bfloat16,
+    interpret: Optional[bool] = None,
+) -> AttentionBackend:
+    """Construct a backend by name. Quant backends require a quantizer."""
+    if name == "raw":
+        return RawBackend(cfg, dtype=dtype)
+    if name == "quant-xla":
+        return QuantXLABackend(cfg, quantizer)
+    if name == "quant-pallas":
+        return QuantPallasBackend(cfg, quantizer, interpret=interpret)
+    raise ValueError(f"unknown backend {name!r}; expected {BACKEND_NAMES}")
+
+
+def default_backend(cfg: ModelConfig,
+                    quantizer: Optional[KVQuantizer]) -> AttentionBackend:
+    """Legacy-compatible resolution from a bare (cfg, quantizer) pair."""
+    if quantizer is None:
+        return RawBackend(cfg)
+    if cfg.use_pallas and quantizer.config.storage != "bitpack":
+        return QuantPallasBackend(cfg, quantizer)
+    return QuantXLABackend(cfg, quantizer)
+
+
+def from_run(run: RunConfig,
+             quantizer: Optional[KVQuantizer]) -> AttentionBackend:
+    """Resolve `RunConfig.backend` ("auto" defers to quant/use_pallas)."""
+    name = run.backend
+    if name == "auto":
+        return default_backend(run.model, quantizer)
+    if name != "raw" and quantizer is None:
+        raise ValueError(
+            f"backend {name!r} needs quantization enabled (run.quant)")
+    return get_backend(name, run.model, quantizer)

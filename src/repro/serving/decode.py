@@ -1,9 +1,15 @@
-"""Single-token decode steps for every family, over raw or quantized caches.
+"""Single-token decode steps for every family, over a pluggable attention
+backend.
 
 The decode step is the serving hot loop: it reads the whole KV cache once per
 token (memory-bound at long context — exactly what TurboAngle compresses) and
-appends the new token's quantized K/V in-place (buffer donation keeps it
-allocation-free across steps).
+appends the new token's (possibly quantized) K/V in-place (buffer donation
+keeps it allocation-free across steps).
+
+All cache interaction goes through ONE dispatch point — an
+`AttentionBackend` from `repro.serving.backends` (raw bf16, quant-xla, or
+quant-pallas). Lengths are per-sequence (B,) vectors, so ragged batches
+decode correctly: each row appends at its own slot and masks its own tail.
 """
 from __future__ import annotations
 
@@ -12,11 +18,11 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.cache import kvcache
-from repro.cache.kvcache import QuantKVCache, RawKVCache
 from repro.configs.base import ModelConfig
 from repro.core.quantizer import KVQuantizer
 from repro.models import attention, common, mlp, moe, ssm, transformer, xlstm
+from repro.serving import backends as backends_lib
+from repro.serving.backends import AttentionBackend
 
 
 class DecodeState(NamedTuple):
@@ -26,41 +32,29 @@ class DecodeState(NamedTuple):
     states: Any  # recurrent states (hybrid/xlstm) or None
 
 
+def _resolve_backend(cfg: ModelConfig, backend: Optional[AttentionBackend],
+                     quantizer: Optional[KVQuantizer]) -> AttentionBackend:
+    if backend is not None:
+        return backend
+    return backends_lib.default_backend(cfg, quantizer)
+
+
 def _attn_decode(
     layer_attn_params,
     x: jax.Array,  # (B, 1, D) pre-normed input
-    position: jax.Array,  # () int32 absolute position of this token
+    positions: jax.Array,  # (B, 1) absolute position of this token per row
     layer_cache: tuple,
     nk: jax.Array,
     nv: jax.Array,
-    length: jax.Array,
+    lengths: jax.Array,  # (B,) tokens already cached per sequence
     cfg: ModelConfig,
-    qz: Optional[KVQuantizer],
+    backend: AttentionBackend,
 ):
     """Attention sublayer at decode time. Returns (out (B,1,D), new cache)."""
     b = x.shape[0]
-    positions = jnp.broadcast_to(position, (b, 1))
     q, k, v = attention.project_qkv(layer_attn_params, x, positions, cfg)
-    n_valid = length + 1  # includes the token being appended
-
-    if qz is None:
-        layer_k, layer_v = layer_cache
-        layer_k, layer_v = kvcache.append_raw(
-            layer_k, layer_v, k, v, length, cfg.sliding_window)
-        out = kvcache.attend_raw_cache(q, layer_k, layer_v, n_valid, cfg)
-        new_cache = (layer_k, layer_v)
-    else:
-        layer_kq, layer_vq = layer_cache
-        new_kq = qz.encode(k, nk, qz.config.k_norm)
-        new_vq = qz.encode(v, nv, qz.config.v_norm)
-        layer_kq = kvcache.append_quant(layer_kq, new_kq, length,
-                                        cfg.sliding_window)
-        layer_vq = kvcache.append_quant(layer_vq, new_vq, length,
-                                        cfg.sliding_window)
-        out = kvcache.attend_quant_cache(
-            q, layer_kq, layer_vq, nk, nv, n_valid, cfg, qz)
-        new_cache = (layer_kq, layer_vq)
-
+    new_cache = backend.append(layer_cache, k, v, nk, nv, lengths)
+    out = backend.attend(q, new_cache, nk, nv, lengths + 1)
     out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim).astype(x.dtype)
     return jnp.einsum("bsk,kd->bsd", out, layer_attn_params["wo"]), new_cache
 
@@ -72,19 +66,25 @@ def decode_step(
     tokens: jax.Array,  # (B, 1) int32
     *,
     quantizer: Optional[KVQuantizer] = None,
+    backend: Optional[AttentionBackend] = None,
     param_constraint=None,
     constraint=None,
 ) -> tuple[jax.Array, DecodeState]:
-    """One decode step -> (logits (B, V), new DecodeState)."""
+    """One decode step -> (logits (B, V), new DecodeState).
+
+    `backend` is the attention-backend dispatch point; when omitted it is
+    derived from (cfg.use_pallas, quantizer) for backward compatibility.
+    """
     x = transformer.embed_inputs(params, cfg, {"tokens": tokens})
-    qz = quantizer
+    be = _resolve_backend(cfg, backend, quantizer)
+    qz = be.quantizer
     pcstr = param_constraint if param_constraint is not None else (lambda t: t)
     cstr = constraint if constraint is not None else (lambda t, kind="residual": t)
 
     if cfg.family == "decoder":
         cache = state.cache
-        length = cache.length
-        position = length
+        lengths = cache.lengths
+        positions = lengths[:, None]  # (B, 1) — each row at its own position
         nk, nv = transformer._layer_bins(qz, cfg.num_layers)
 
         def body(carry, xs):
@@ -93,7 +93,7 @@ def decode_step(
             h, new_c = _attn_decode(
                 layer_params["attn"],
                 common.rms_norm(carry, layer_params["norm1"], cfg.norm_eps),
-                position, (ck, cv), lnk, lnv, length, cfg, qz,
+                positions, (ck, cv), lnk, lnv, lengths, cfg, be,
             )
             xx = common.radd(carry, h)
             inner = common.rms_norm(xx, layer_params["norm2"], cfg.norm_eps)
@@ -107,14 +107,14 @@ def decode_step(
 
         x, new_kv = common.uscan(
             body, x, (params["layers"], cache.k, cache.v, nk, nv))
-        new_cache = type(cache)(k=new_kv[0], v=new_kv[1], length=length + 1)
+        new_cache = type(cache)(k=new_kv[0], v=new_kv[1], lengths=lengths + 1)
         logits = transformer.lm_logits(params, cfg, x)[:, 0]
         return logits, DecodeState(cache=new_cache, states=None)
 
     if cfg.family == "hybrid_ssm":
         cache = state.cache
-        length = cache.length
-        position = length
+        lengths = cache.lengths
+        positions = lengths[:, None]
         n_groups = cfg.num_layers // cfg.attn_every
         nk, nv = transformer._layer_bins(qz, n_groups)
         shared = params["shared_attn"]
@@ -135,14 +135,14 @@ def decode_step(
             a, new_c = _attn_decode(
                 shared["attn"],
                 common.rms_norm(h, shared["norm"], cfg.norm_eps),
-                position, (ck, cv), lnk, lnv, length, cfg, qz,
+                positions, (ck, cv), lnk, lnv, lengths, cfg, be,
             )
             return common.radd(h, a), (new_c, new_states)
 
         x, (new_kv, new_states) = common.uscan(
             group_body, x,
             (params["mamba"], cache.k, cache.v, nk, nv, state.states))
-        new_cache = type(cache)(k=new_kv[0], v=new_kv[1], length=length + 1)
+        new_cache = type(cache)(k=new_kv[0], v=new_kv[1], lengths=lengths + 1)
         logits = transformer.lm_logits(params, cfg, x)[:, 0]
         return logits, DecodeState(cache=new_cache, states=new_states)
 
@@ -177,17 +177,23 @@ def init_decode_state(
     seq_len: int,
     *,
     quantizer: Optional[KVQuantizer] = None,
-    prefilled: int = 0,
+    backend: Optional[AttentionBackend] = None,
+    prefilled=0,
     dtype=jnp.bfloat16,
 ) -> DecodeState:
-    """Fresh decode state with an empty (or logically `prefilled`) cache."""
+    """Fresh decode state with an empty (or logically `prefilled`) cache.
+
+    `prefilled` may be an int (uniform batch) or a (B,) vector (ragged).
+    """
     cache = None
     if cfg.has_kv_cache:
-        if quantizer is None:
-            cache = kvcache.init_raw_cache(cfg, batch, seq_len, dtype)
-        else:
-            cache = kvcache.init_quant_cache(cfg, quantizer, batch, seq_len)
-        cache = cache._replace(length=jnp.asarray(prefilled, jnp.int32))
+        be = _resolve_backend(cfg, backend, quantizer)
+        if isinstance(be, backends_lib.RawBackend) and be.dtype != dtype:
+            be = backends_lib.RawBackend(cfg, dtype=dtype)
+        cache = be.init_cache(batch, seq_len)
+        from repro.cache.kvcache import per_seq_lengths
+
+        cache = cache._replace(lengths=per_seq_lengths(prefilled, batch))
     states = None
     if cfg.family == "hybrid_ssm":
         n_groups = cfg.num_layers // cfg.attn_every

@@ -1,0 +1,133 @@
+"""Sliding-window ring-buffer semantics: wraparound writes past the window
+boundary (slot = p % window) and mask correctness with per-sequence lengths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache import kvcache
+from repro.configs.base import ModelConfig
+from repro.core import mixedkv, rates
+from repro.core.quantizer import KVQuantizer, QuantizerConfig
+
+WINDOW = 8
+
+
+def _cfg(**kw):
+    base = dict(name="ring", family="decoder", num_layers=1, d_model=32,
+                num_heads=2, num_kv_heads=2, d_ff=32, vocab_size=16,
+                head_dim=16, sliding_window=WINDOW)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _tok(b, nkv, h, value):
+    return jnp.full((b, 1, nkv, h), float(value), jnp.float32)
+
+
+def test_append_raw_wraps_past_window_per_sequence():
+    cfg = _cfg()
+    b, nkv, h = 3, cfg.num_kv_heads, cfg.head_dim
+    layer_k = jnp.zeros((b, WINDOW, nkv, h), jnp.float32)
+    layer_v = jnp.zeros_like(layer_k)
+    # rows at absolute positions 3 (no wrap), 8 (wraps to 0), 13 (slot 5)
+    lengths = jnp.asarray([3, 8, 13], jnp.int32)
+    layer_k, layer_v = kvcache.append_raw(
+        layer_k, layer_v, _tok(b, nkv, h, 7), _tok(b, nkv, h, 9), lengths,
+        cfg.sliding_window)
+    k = np.asarray(layer_k)
+    v = np.asarray(layer_v)
+    for row, slot in ((0, 3), (1, 0), (2, 5)):
+        assert (k[row, slot] == 7).all(), (row, slot)
+        assert (v[row, slot] == 9).all(), (row, slot)
+        untouched = [s for s in range(WINDOW) if s != slot]
+        assert (k[row, untouched] == 0).all(), (row, slot)
+
+
+def test_append_quant_wraps_past_window_per_sequence():
+    cfg = _cfg()
+    qz = KVQuantizer(QuantizerConfig(
+        head_dim=cfg.head_dim, schedule=mixedkv.uniform(cfg.num_layers),
+        k_norm=rates.NORM_K8, v_norm=rates.NORM_V4_LOG))
+    b, nkv = 2, cfg.num_kv_heads
+    cache = kvcache.init_quant_cache(cfg, qz, b, WINDOW)
+    layer_kq = jax.tree.map(lambda a: a[0], cache.k)  # layer 0 slice
+    rng = np.random.default_rng(0)
+    new = qz.encode(
+        jnp.asarray(rng.normal(size=(b, 1, nkv, cfg.head_dim)), jnp.float32),
+        128, qz.config.k_norm)
+    lengths = jnp.asarray([WINDOW + 2, 4], jnp.int32)  # slots 2 and 4
+    out = kvcache.append_quant(layer_kq, new, lengths, cfg.sliding_window)
+    for row, slot in ((0, 2), (1, 4)):
+        np.testing.assert_array_equal(
+            np.asarray(out.indices[row, slot]),
+            np.asarray(new.indices[row, 0]))
+        np.testing.assert_array_equal(
+            np.asarray(out.norm_codes[row, slot]),
+            np.asarray(new.norm_codes[row, 0]))
+        untouched = [s for s in range(WINDOW) if s != slot]
+        assert (np.asarray(out.indices[row, untouched]) == 0).all()
+
+
+def test_score_mask_per_sequence_window():
+    # pre-wrap rows see only their filled slots; post-wrap rows see all
+    n_valid = jnp.asarray([3, WINDOW, WINDOW + 5], jnp.int32)
+    mask = np.asarray(kvcache._score_mask(WINDOW, n_valid, WINDOW))
+    assert mask.shape == (3, WINDOW)
+    assert mask[0].tolist() == [True] * 3 + [False] * (WINDOW - 3)
+    assert mask[1].all() and mask[2].all()
+    # scalar n_valid broadcasts (uniform batches keep working)
+    mask_u = np.asarray(kvcache._score_mask(WINDOW, jnp.asarray(5), WINDOW))
+    assert mask_u.shape == (1, WINDOW)
+    assert mask_u[0].tolist() == [True] * 5 + [False] * 3
+    # no-window path unchanged
+    mask_nw = np.asarray(
+        kvcache._score_mask(6, jnp.asarray([2, 6], jnp.int32), None))
+    assert mask_nw[0].tolist() == [True] * 2 + [False] * 4
+
+
+def test_wraparound_attention_matches_logical_window():
+    """After wrapping, attend over the ring == attention over the last
+    `window` tokens in logical order (softmax is permutation-invariant)."""
+    cfg = _cfg()
+    b, nkv, h = 1, cfg.num_kv_heads, cfg.head_dim
+    total = WINDOW + 5  # wraps 5 slots past the boundary
+    rng = np.random.default_rng(1)
+    ks = jnp.asarray(rng.normal(size=(total, nkv, h)), jnp.float32)
+    vs = jnp.asarray(rng.normal(size=(total, nkv, h)), jnp.float32)
+
+    layer_k = jnp.zeros((b, WINDOW, nkv, h), jnp.float32)
+    layer_v = jnp.zeros_like(layer_k)
+    lengths = jnp.zeros((b,), jnp.int32)
+    for p in range(total):
+        layer_k, layer_v = kvcache.append_raw(
+            layer_k, layer_v, ks[None, p:p + 1], vs[None, p:p + 1], lengths,
+            cfg.sliding_window)
+        lengths = lengths + 1
+
+    q = jnp.asarray(rng.normal(size=(b, 1, cfg.num_heads, h)), jnp.float32)
+    got = kvcache.attend_raw_cache(q, layer_k, layer_v, lengths, cfg)
+
+    # logical reference: last WINDOW tokens, stored in arrival order
+    last_k = ks[total - WINDOW:][None]
+    last_v = vs[total - WINDOW:][None]
+    cfg_nw = _cfg(sliding_window=None)
+    want = kvcache.attend_raw_cache(
+        q, last_k, last_v, jnp.asarray([WINDOW], jnp.int32), cfg_nw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_cache_physical_bytes_counts_payload_only(quantized):
+    cfg = _cfg(sliding_window=None)
+    if quantized:
+        qz = KVQuantizer(QuantizerConfig(
+            head_dim=cfg.head_dim, schedule=mixedkv.uniform(cfg.num_layers),
+            k_norm=rates.NORM_K8, v_norm=rates.NORM_V4_LOG))
+        cache = kvcache.init_quant_cache(cfg, qz, 4, 16)
+    else:
+        cache = kvcache.init_raw_cache(cfg, 4, 16, jnp.bfloat16)
+    total = sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(cache))
+    lengths_bytes = cache.lengths.size * cache.lengths.dtype.itemsize
+    assert kvcache.cache_physical_bytes(cache) == total - lengths_bytes
