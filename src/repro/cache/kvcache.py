@@ -72,26 +72,21 @@ def init_raw_cache(cfg: ModelConfig, batch: int, seq_len: int,
     )
 
 
-def _quantized_zeros(qz: KVQuantizer, lead: tuple, norm_bits) -> QuantizedKV:
+def _quantized_zeros(qz: KVQuantizer, lead: tuple, norm_cfg) -> QuantizedKV:
     c = qz.config
-    if c.storage == "bitpack":
-        from repro.core import packing
-
-        idx = jnp.zeros(
-            (*lead, packing.packed_words(c.n_pairs, c.index_width)), jnp.uint32
-        )
+    if c.resolved_storage == "bitpack":
+        idx = jnp.zeros((*lead, c.index_words), jnp.uint32)
     else:
+        # narrow container; widths > 8 bits fall back to uint16 (the
+        # storage_bits_per_code("uint8", bits > 8) == 16.0 accounting)
         idx = jnp.zeros((*lead, c.n_pairs), c.index_dtype())
-    if norm_bits is None:
-        return QuantizedKV(
-            idx,
-            jnp.zeros((*lead, c.n_pairs), jnp.float32),
-            jnp.zeros((*lead, 1), jnp.float32),
-            jnp.zeros((*lead, 1), jnp.float32),
-        )
+    if norm_cfg.bits is None:
+        nq = jnp.zeros((*lead, c.n_pairs), jnp.float32)
+    else:
+        nq = jnp.zeros((*lead, c.norm_code_width(norm_cfg)), jnp.uint8)
     return QuantizedKV(
         idx,
-        jnp.zeros((*lead, c.n_pairs), jnp.uint8),
+        nq,
         jnp.zeros((*lead, 1), jnp.float32),
         jnp.zeros((*lead, 1), jnp.float32),
     )
@@ -102,8 +97,8 @@ def init_quant_cache(cfg: ModelConfig, qz: KVQuantizer, batch: int,
     t = _cache_tmax(cfg, seq_len)
     lead = (cfg.num_attn_layers, batch, t, cfg.num_kv_heads)
     return QuantKVCache(
-        k=_quantized_zeros(qz, lead, qz.config.k_norm.bits),
-        v=_quantized_zeros(qz, lead, qz.config.v_norm.bits),
+        k=_quantized_zeros(qz, lead, qz.config.k_norm),
+        v=_quantized_zeros(qz, lead, qz.config.v_norm),
         lengths=jnp.zeros((batch,), jnp.int32),
     )
 

@@ -144,7 +144,7 @@ class QuantConfig:
     v_norm_bits: Optional[int] = 4
     v_norm_log: bool = True
     seed: int = 0
-    storage: str = "uint8"
+    storage: str = "auto"  # "auto" (-> bitpack) | "uint8" | "bitpack"
     hadamard_domain_attn: bool = True  # beyond-paper fused score path
 
     def build(self, head_dim: int, num_attn_layers: int) -> QuantizerConfig:

@@ -12,9 +12,13 @@ All entry points broadcast over arbitrary leading axes and accept `n_bins`
 as a python int or a traced array, so a single lax.scan body serves every
 layer of a per-layer MixedKV configuration.
 
-Physical storage: indices are narrowed to uint8/uint16 (schedule max width)
-or bit-packed to uint32 words; norm codes are narrowed to uint8. This is what
-makes the dry-run `memory_analysis()` show the compressed cache footprint.
+Physical storage: the default ("auto" -> "bitpack") packs angle indices into
+little-endian uint32 word streams at the schedule's max width and nibble-packs
+norm codes two-per-byte when they fit 4 bits; "uint8" keeps one narrow
+container (uint8/uint16) per code as a portable fallback. This is what makes
+the dry-run `memory_analysis()` show the compressed cache footprint — and,
+since the Pallas decode kernel unpacks the same word stream in VMEM, what the
+decode hot loop actually reads from HBM.
 """
 from __future__ import annotations
 
@@ -32,9 +36,11 @@ from repro.core.mixedkv import MixedKVSchedule
 class QuantizedKV(NamedTuple):
     """Compressed representation of a (..., d) tensor.
 
-    indices:    (..., d/2) narrow uint (or (..., words) uint32 if bitpacked)
-    norm_codes: (..., d/2) uint8 norm codes, or (..., d/2) f32 if norms are
-                kept in fp32 (angle-only reference config)
+    indices:    (..., words) uint32 bitstream (bitpack, the default) or
+                (..., d/2) narrow uint container codes ("uint8" storage)
+    norm_codes: (..., d/4) uint8 two-per-byte nibbles (bitpack + <=4-bit
+                norms), (..., d/2) uint8 codes, or (..., d/2) f32 if norms
+                are kept in fp32 (angle-only reference config)
     rmin/rmax:  (..., 1) f32 per-vector min-max (zeros if fp32 norms)
     """
 
@@ -51,7 +57,7 @@ class QuantizerConfig:
     k_norm: rates.NormConfig = rates.NORM_FP32
     v_norm: rates.NormConfig = rates.NORM_FP32
     seed: int = 0
-    storage: str = "uint8"  # "uint8" | "bitpack"
+    storage: str = "auto"  # "auto" | "uint8" | "bitpack"
 
     @property
     def d_pad(self) -> int:
@@ -65,8 +71,36 @@ class QuantizerConfig:
     def index_width(self) -> int:
         return self.schedule.max_bits()
 
+    @property
+    def resolved_storage(self) -> str:
+        """"auto" resolves to the packed word stream — it is readable by
+        every backend (the Pallas kernel unpacks in VMEM) and it is the
+        representation whose HBM traffic matches the paper's bit budget."""
+        if self.storage == "auto":
+            return "bitpack"
+        if self.storage not in ("uint8", "bitpack"):
+            raise ValueError(f"unknown storage mode {self.storage!r}")
+        return self.storage
+
+    @property
+    def index_words(self) -> int:
+        """Trailing dim of a bit-packed index stream (uint32 words)."""
+        return packing.packed_words(self.n_pairs, self.index_width)
+
     def index_dtype(self) -> jnp.dtype:
         return jnp.dtype(packing.narrow_dtype(self.index_width))
+
+    def norm_packed(self, norm_cfg: rates.NormConfig) -> bool:
+        """True when this config stores norm codes two-per-byte."""
+        return (self.resolved_storage == "bitpack"
+                and norm_cfg.bits is not None and norm_cfg.bits <= 4
+                and self.n_pairs % 2 == 0)
+
+    def norm_code_width(self, norm_cfg: rates.NormConfig) -> int:
+        """Trailing dim of the stored norm-code array."""
+        if self.norm_packed(norm_cfg):
+            return self.n_pairs // 2
+        return self.n_pairs
 
     def angle_bits(self) -> float:
         return self.schedule.angle_bits()
@@ -79,7 +113,8 @@ class QuantizerConfig:
 
     def physical_bits(self) -> float:
         return rates.schedule_physical_bits(
-            self.schedule, self.k_norm, self.v_norm, self.d_pad, self.storage
+            self.schedule, self.k_norm, self.v_norm, self.d_pad,
+            self.resolved_storage
         )
 
 
@@ -89,9 +124,7 @@ class KVQuantizer:
     def __init__(self, config: QuantizerConfig):
         self.config = config
         self.signs = fwht.make_signs(config.seed, config.d_pad)
-        if config.storage == "bitpack":
-            # bitstream length must tile into uint32 words
-            packing.packed_words(config.n_pairs, config.index_width)
+        config.resolved_storage  # validate the storage mode eagerly
 
     # -- layer-schedule plumbing ------------------------------------------
     def layer_bins(self) -> tuple[jax.Array, jax.Array]:
@@ -112,7 +145,7 @@ class KVQuantizer:
     ) -> QuantizedKV:
         code = angular.encode(self._pad(x), n_bins, self.signs)
         idx = code.indices
-        if self.config.storage == "bitpack":
+        if self.config.resolved_storage == "bitpack":
             idx = packing.pack_bits(idx, self.config.index_width)
         else:
             idx = idx.astype(self.config.index_dtype())
@@ -121,10 +154,14 @@ class KVQuantizer:
             return QuantizedKV(idx, code.norms, z, z)
         qn = norms.quantize_norms(code.norms, norm_cfg.bits,
                                   log_space=norm_cfg.log_space)
-        return QuantizedKV(idx, qn.codes.astype(jnp.uint8), qn.rmin, qn.rmax)
+        if self.config.norm_packed(norm_cfg):
+            nq = packing.pack_nibbles(qn.codes)
+        else:
+            nq = qn.codes.astype(jnp.uint8)
+        return QuantizedKV(idx, nq, qn.rmin, qn.rmax)
 
     def _indices_of(self, q: QuantizedKV) -> jax.Array:
-        if self.config.storage == "bitpack":
+        if self.config.resolved_storage == "bitpack":
             return packing.unpack_bits(
                 q.indices, self.config.index_width, self.config.n_pairs
             )
@@ -133,8 +170,11 @@ class KVQuantizer:
     def _norms_of(self, q: QuantizedKV, norm_cfg: rates.NormConfig) -> jax.Array:
         if norm_cfg.bits is None:
             return q.norm_codes  # already f32
+        codes = q.norm_codes
+        if self.config.norm_packed(norm_cfg):
+            codes = packing.unpack_nibbles(codes, self.config.n_pairs)
         return norms.dequantize_norms(
-            norms.QuantizedNorms(q.norm_codes.astype(jnp.int32), q.rmin, q.rmax),
+            norms.QuantizedNorms(codes.astype(jnp.int32), q.rmin, q.rmax),
             norm_cfg.bits,
             log_space=norm_cfg.log_space,
         )
@@ -192,7 +232,7 @@ def make_default_quantizer(
     k_norm: rates.NormConfig = rates.NORM_FP32,
     v_norm: rates.NormConfig = rates.NORM_FP32,
     seed: int = 0,
-    storage: str = "uint8",
+    storage: str = "auto",
 ) -> KVQuantizer:
     """Uniform-baseline (+optional early-boost) quantizer in one call."""
     from repro.core import mixedkv

@@ -11,7 +11,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.mixedkv import MixedKVSchedule
-from repro.core.packing import storage_bits_per_code
+from repro.core.packing import norm_storage_bits, storage_bits_per_code
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,7 +86,9 @@ def schedule_physical_bits(
     def norm_phys(cfg: NormConfig) -> float:
         if cfg.bits is None:
             return 16.0
-        return storage_bits_per_code(cfg.bits, storage) / 2.0 + 64.0 / d
+        # norm codes live in uint8 containers; bitpack packs them
+        # two-per-byte at nibble granularity (<=4-bit norms)
+        return norm_storage_bits(cfg.bits, storage) / 2.0 + 64.0 / d
 
     return angle_phys + (norm_phys(k_norm) + norm_phys(v_norm)) / 2.0
 

@@ -2,9 +2,16 @@
 
 One VMEM pass per (block_rows, d) tile: sign-flip -> FWHT butterflies ->
 pairwise polar decomposition -> uniform angle binning -> per-vector min/max
-norm quantization. The paper's GPU path runs these as separate kernels with
-HBM round-trips; on TPU the whole chain is elementwise/VPU work on a tile
-that never leaves VMEM, and atan2/sqrt use the transcendental unit.
+norm quantization -> (optionally) bit-packing. The paper's GPU path runs
+these as separate kernels with HBM round-trips; on TPU the whole chain is
+elementwise/VPU work on a tile that never leaves VMEM, and atan2/sqrt use
+the transcendental unit.
+
+With `storage="bitpack"` the kernel packs angle codes into the little-endian
+uint32 word stream (and <=4-bit norm codes two-per-byte) *before* the store,
+so the compressed representation is what is written back to HBM — the write
+side of the same bandwidth argument the qattn decode kernel makes on the
+read side.
 """
 from __future__ import annotations
 
@@ -15,13 +22,15 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.core import packing
 from repro.kernels.fwht.fwht import _fwht_tile
 
 TWO_PI = 2.0 * np.pi
 
 
 def encode_kernel(x_ref, s_ref, idx_ref, nq_ref, rmin_ref, rmax_ref, *,
-                  n_bins: int, norm_bits, norm_log: bool):
+                  n_bins: int, norm_bits, norm_log: bool, idx_bits,
+                  pack_norms: bool):
     rows, d = x_ref.shape
     y = x_ref[...].astype(jnp.float32) * s_ref[...].astype(jnp.float32)
     y = _fwht_tile(y) * (1.0 / np.sqrt(d))
@@ -31,7 +40,11 @@ def encode_kernel(x_ref, s_ref, idx_ref, nq_ref, rmin_ref, rmax_ref, *,
     theta = jnp.arctan2(odd, even)
     t = jnp.mod(theta, TWO_PI)
     k = jnp.floor(t * (n_bins / TWO_PI)).astype(jnp.int32)
-    idx_ref[...] = jnp.clip(k, 0, n_bins - 1).astype(idx_ref.dtype)
+    k = jnp.clip(k, 0, n_bins - 1)
+    if idx_bits is None:
+        idx_ref[...] = k.astype(idx_ref.dtype)
+    else:
+        idx_ref[...] = packing.pack_bits(k, idx_bits)
 
     if norm_bits is None:
         nq_ref[...] = r.astype(nq_ref.dtype)
@@ -44,7 +57,10 @@ def encode_kernel(x_ref, s_ref, idx_ref, nq_ref, rmin_ref, rmax_ref, *,
     vmax = jnp.max(v, axis=-1, keepdims=True)
     scale = jnp.maximum(vmax - vmin, 1e-12)
     q = jnp.clip(jnp.round((v - vmin) / scale * levels), 0.0, levels)
-    nq_ref[...] = q.astype(nq_ref.dtype)
+    if pack_norms:
+        nq_ref[...] = packing.pack_nibbles(q.astype(jnp.int32))
+    else:
+        nq_ref[...] = q.astype(nq_ref.dtype)
     rmin_ref[...] = vmin
     rmax_ref[...] = vmax
 
@@ -52,34 +68,65 @@ def encode_kernel(x_ref, s_ref, idx_ref, nq_ref, rmin_ref, rmax_ref, *,
 @functools.partial(
     jax.jit,
     static_argnames=("n_bins", "norm_bits", "norm_log", "block_rows",
-                     "interpret"),
+                     "storage", "idx_bits", "interpret"),
 )
 def encode(x: jax.Array, signs: jax.Array, *, n_bins: int,
            norm_bits=None, norm_log: bool = False, block_rows: int = 256,
-           interpret: bool = True):
-    """x: (rows, d) -> (idx i32 (rows, d/2), norm codes, rmin, rmax)."""
+           storage: str = "uint8", idx_bits=None, interpret: bool = True):
+    """x: (rows, d) -> (idx, norm codes, rmin, rmax).
+
+    storage="uint8" (default) keeps the historical layout: i32 angle codes
+    (rows, d/2) and i32/f32 norm codes (rows, d/2). storage="bitpack" emits
+    the packed cache representation: uint32 words (rows, words) at
+    `idx_bits` (default ceil(log2(n_bins))) and, when norm_bits <= 4,
+    two-per-byte uint8 nibbles (rows, d/4).
+    """
     rows, d = x.shape
     block_rows = min(block_rows, rows)
     grid = (pl.cdiv(rows, block_rows),)
     pairs = d // 2
-    nq_dtype = jnp.float32 if norm_bits is None else jnp.int32
+    if storage == "bitpack":
+        need = max(1, int(np.ceil(np.log2(n_bins))))
+        if idx_bits is None:
+            idx_bits = need
+        elif idx_bits < need:
+            # pack_bits silently drops high bits; schedule-max widths must
+            # be >= this call's codebook width
+            raise ValueError(
+                f"idx_bits={idx_bits} cannot hold n_bins={n_bins} codes "
+                f"(need >= {need})")
+        idx_shape, idx_dtype = packing.packed_words(pairs, idx_bits), jnp.uint32
+        pack_norms = norm_bits is not None and norm_bits <= 4 and pairs % 2 == 0
+    elif storage == "uint8":
+        idx_bits = None
+        idx_shape, idx_dtype = pairs, jnp.int32
+        pack_norms = False
+    else:
+        raise ValueError(f"unknown storage mode {storage!r}")
+    if norm_bits is None:
+        nq_shape, nq_dtype = pairs, jnp.float32
+    elif pack_norms:
+        nq_shape, nq_dtype = pairs // 2, jnp.uint8
+    else:
+        nq_shape, nq_dtype = pairs, jnp.int32
     return pl.pallas_call(
         functools.partial(encode_kernel, n_bins=n_bins, norm_bits=norm_bits,
-                          norm_log=norm_log),
+                          norm_log=norm_log, idx_bits=idx_bits,
+                          pack_norms=pack_norms),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
             pl.BlockSpec((d,), lambda i: (0,)),
         ],
         out_specs=[
-            pl.BlockSpec((block_rows, pairs), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, pairs), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, idx_shape), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, nq_shape), lambda i: (i, 0)),
             pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
             pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((rows, pairs), jnp.int32),
-            jax.ShapeDtypeStruct((rows, pairs), nq_dtype),
+            jax.ShapeDtypeStruct((rows, idx_shape), idx_dtype),
+            jax.ShapeDtypeStruct((rows, nq_shape), nq_dtype),
             jax.ShapeDtypeStruct((rows, 1), jnp.float32),
             jax.ShapeDtypeStruct((rows, 1), jnp.float32),
         ],

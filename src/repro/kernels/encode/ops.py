@@ -8,12 +8,13 @@ from repro.kernels.encode import encode as k
 
 def encode_op(x: jax.Array, signs: jax.Array, *, n_bins: int,
               norm_bits=None, norm_log: bool = False,
+              storage: str = "uint8", idx_bits=None,
               interpret: bool = True):
     lead = x.shape[:-1]
     d = x.shape[-1]
     idx, nq, rmin, rmax = k.encode(
         x.reshape(-1, d), signs, n_bins=n_bins, norm_bits=norm_bits,
-        norm_log=norm_log, interpret=interpret)
-    pairs = d // 2
-    return (idx.reshape(*lead, pairs), nq.reshape(*lead, pairs),
+        norm_log=norm_log, storage=storage, idx_bits=idx_bits,
+        interpret=interpret)
+    return (idx.reshape(*lead, idx.shape[-1]), nq.reshape(*lead, nq.shape[-1]),
             rmin.reshape(*lead, 1), rmax.reshape(*lead, 1))

@@ -47,16 +47,31 @@ def attend_quant_cache_op(
     scale = 1.0 / np.sqrt(h)
     q_rot = (qz.rotate_query(q[:, 0]) * scale).reshape(b, nkv, g, dp)
     kc, vc = qz.config.k_norm, qz.config.v_norm
+    if qz.config.resolved_storage == "bitpack":
+        # the kernel unpacks the uint32 word stream in VMEM — the packed
+        # payload is exactly what crosses HBM
+        k_idx, v_idx = layer_kq.indices, layer_vq.indices
+        idx_bits = qz.config.index_width
+    else:
+        # legacy container path: codes are widened to i32 before the kernel
+        # (the HBM stream the kernel reads is the widened array — measured
+        # by benchmarks/decode_bandwidth.py as the uint8-storage baseline)
+        k_idx = layer_kq.indices.astype(jnp.int32)
+        v_idx = layer_vq.indices.astype(jnp.int32)
+        idx_bits = None
     out_y = k.qattn(
         q_rot,
-        layer_kq.indices.astype(jnp.int32), layer_kq.norm_codes,
+        k_idx, layer_kq.norm_codes,
         layer_kq.rmin, layer_kq.rmax,
-        layer_vq.indices.astype(jnp.int32), layer_vq.norm_codes,
+        v_idx, layer_vq.norm_codes,
         layer_vq.rmin, layer_vq.rmax,
         n_valid,
         n_bins_k=n_bins_k, n_bins_v=n_bins_v,
+        idx_bits=idx_bits,
         k_bits=kc.bits, k_log=kc.log_space,
+        k_nq_packed=qz.config.norm_packed(kc),
         v_bits=vc.bits, v_log=vc.log_space,
+        v_nq_packed=qz.config.norm_packed(vc),
         interpret=interpret,
     )
     out = qz.unrotate_output(out_y)  # one inverse transform per query

@@ -8,21 +8,38 @@ the attention kernel; a separate dequant pass would write the f32 cache back
 to HBM and forfeit the entire win (exactly what the pure-XLA path does,
 measured in EXPERIMENTS.md §Perf).
 
+Bit-packed streams: the cache's default representation is a little-endian
+uint32 word stream (~3.5 angle bits/elem at K128) plus two-per-byte norm
+nibbles. The kernel reads those words directly and unpacks them in VMEM via
+the vectorized shift/or scheme of `core/packing.py` (plain VPU integer ops),
+so the HBM stream per step is the packed payload itself — the paper's bit
+budget is what physically moves. The legacy "uint8" container path is kept
+for comparison benchmarks (`idx_bits=None`).
+
 Beyond-paper fusion: scores are taken directly against Hadamard-domain keys
 (q.k == (HDq).(HDk)) and the weighted value sum is accumulated in the
 Hadamard domain — the inverse FWHT runs ONCE per query on the output instead
 of once per cached token (O(T d log d) -> O(d log d) reconstruction FLOPs).
 
+Layout note: inside the kernel, y-vectors live in split-half ("[even|odd]")
+order — pair p contributes columns p and p+pairs instead of 2p and 2p+1.
+Dot products are permutation-invariant, so the wrapper permutes the (tiny)
+query once per call and un-permutes the (tiny) output once per call; the
+hot loop then builds each (block_t, d_pad) tile with one concatenate
+instead of a strided stack/reshape interleave per step.
+
 Grid: (B, n_kv, T/block_t), accumulating online-softmax state in VMEM
-scratch across the sequential T dimension. Per-step VMEM: two uint8 code
-blocks + two f32 dequant tiles (block_t x d_pad) ~= 0.6 MiB at d_pad=128,
-block_t=512.
+scratch across the sequential T dimension. `block_t` defaults to a
+VMEM-budget-derived value (see `default_block_t`) instead of a hardcoded
+constant: the two f32 dequant tiles plus the packed code streams for a
+block must fit the budget with double-buffering headroom.
 
 Serving integration: `length` is a per-sequence (B,) vector (ragged batches)
 and the codebook sizes `n_bins_k`/`n_bins_v` are *runtime* scalars fed
 through a (1, 2) scalar block — they ride along the per-layer MixedKV scan
 as traced values, so one compiled kernel serves every layer of a mixed
-schedule. Only the norm format (bits/log) stays compile-time static.
+schedule. Only the storage geometry (index bits, norm format) is
+compile-time static.
 """
 from __future__ import annotations
 
@@ -33,35 +50,68 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.core import packing
+
 TWO_PI = 2.0 * np.pi
 NEG_INF = -1e30
 
+# VMEM spent on one grid step's cache tiles (dequant f32 tiles + code
+# streams), out of ~16 MiB/core; the rest is left for q/output blocks,
+# softmax scratch and the pipeline's double buffering.
+DEFAULT_VMEM_BUDGET = 4 * 1024 * 1024
 
-def _dequant_block(idx, nq, rmin, rmax, *, n_bins, bits, log):
-    """(bt, pairs) codes -> (bt, 2*pairs) y-domain block, f32.
 
-    n_bins may be a traced i32 scalar (read off the bins ref).
+def default_block_t(dp: int, row_stream_bytes: int,
+                    vmem_budget: int = DEFAULT_VMEM_BUDGET) -> int:
+    """Largest block_t whose per-step VMEM footprint fits the budget.
+
+    Per cache row a step holds: two f32 dequant tiles (K and V, dp each)
+    plus the packed/container code+norm streams (`row_stream_bytes`). The
+    factor 2 reserves double-buffering headroom for the next block's DMA.
+    Rounded down to a sublane-friendly multiple of 128, clamped to
+    [128, 2048].
     """
-    bt, pairs = idx.shape
-    if bits is None:
-        r = nq.astype(jnp.float32)
+    per_row = 2 * dp * 4 + row_stream_bytes
+    bt = vmem_budget // (2 * per_row)
+    return max(128, min(2048, (bt // 128) * 128))
+
+
+def _dequant_block(idx_raw, nq_raw, rmin, rmax, *, n_bins, bits, log,
+                   pairs, idx_bits, nq_packed):
+    """Stored codes -> (bt, 2*pairs) y-domain block, f32, split-half layout.
+
+    idx_raw: (bt, words) uint32 bitstream (idx_bits static) or (bt, pairs)
+    integer container codes (idx_bits None). nq_raw: (bt, pairs//2) nibble
+    bytes, (bt, pairs) uint8 codes, or (bt, pairs) f32 norms. n_bins may be
+    a traced i32 scalar (read off the bins ref).
+    """
+    if idx_bits is None:
+        idx = idx_raw.astype(jnp.int32)
     else:
+        idx = packing.unpack_bits(idx_raw, idx_bits, pairs)
+    if bits is None:
+        r = nq_raw.astype(jnp.float32)
+    else:
+        nq = packing.unpack_nibbles(nq_raw, pairs) if nq_packed else nq_raw
         levels = float(2**bits - 1)
         scale = jnp.maximum(rmax - rmin, 1e-12)
         v = nq.astype(jnp.float32) / levels * scale + rmin
         r = jnp.exp(v) if log else v
-    theta = (idx.astype(jnp.float32) + 0.5) * (
-        TWO_PI / jnp.asarray(n_bins, jnp.float32))
+    # bin-center angle folded into one multiply-add:
+    # (k + 0.5) * 2pi/n == k * s + 0.5 * s with s = 2pi/n
+    ang = TWO_PI / jnp.asarray(n_bins, jnp.float32)
+    theta = idx.astype(jnp.float32) * ang + 0.5 * ang
     even = r * jnp.cos(theta)
     odd = r * jnp.sin(theta)
-    return jnp.stack([even, odd], axis=-1).reshape(bt, pairs * 2)
+    return jnp.concatenate([even, odd], axis=-1)
 
 
 def qattn_kernel(
     len_ref, bins_ref, q_ref, kidx_ref, knq_ref, krmin_ref, krmax_ref,
     vidx_ref, vnq_ref, vrmin_ref, vrmax_ref, o_ref,
     m_scr, l_scr, acc_scr, *,
-    block_t: int, k_bits, k_log, v_bits, v_log,
+    block_t: int, pairs: int, idx_bits, k_bits, k_log, k_nq_packed,
+    v_bits, v_log, v_nq_packed,
 ):
     t_step = pl.program_id(2)
     n_steps = pl.num_programs(2)
@@ -72,7 +122,7 @@ def qattn_kernel(
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q = q_ref[0, 0]  # (g, dp) pre-rotated, pre-scaled
+    q = q_ref[0, 0]  # (g, dp) pre-rotated, pre-scaled, split-half layout
     length = len_ref[0, 0]  # this batch row's valid-token count
     n_bins_k = bins_ref[0, 0]
     n_bins_v = bins_ref[0, 1]
@@ -82,7 +132,8 @@ def qattn_kernel(
 
     y_k = _dequant_block(
         kidx_ref[0, :, 0], knq_ref[0, :, 0], krmin_ref[0, :, 0],
-        krmax_ref[0, :, 0], n_bins=n_bins_k, bits=k_bits, log=k_log)
+        krmax_ref[0, :, 0], n_bins=n_bins_k, bits=k_bits, log=k_log,
+        pairs=pairs, idx_bits=idx_bits, nq_packed=k_nq_packed)
     y_k = jnp.where(row_ok, y_k, 0.0)
     s = jax.lax.dot_general(
         q.astype(jnp.float32), y_k,
@@ -98,7 +149,8 @@ def qattn_kernel(
 
     y_v = _dequant_block(
         vidx_ref[0, :, 0], vnq_ref[0, :, 0], vrmin_ref[0, :, 0],
-        vrmax_ref[0, :, 0], n_bins=n_bins_v, bits=v_bits, log=v_log)
+        vrmax_ref[0, :, 0], n_bins=n_bins_v, bits=v_bits, log=v_log,
+        pairs=pairs, idx_bits=idx_bits, nq_packed=v_nq_packed)
     y_v = jnp.where(row_ok, y_v, 0.0)  # 0 * garbage-NaN would poison p@y_v
     pv = jax.lax.dot_general(p, y_v, (((1,), (0,)), ((), ())))  # (g, dp)
     acc_scr[...] = acc_scr[...] * corr + pv
@@ -109,14 +161,27 @@ def qattn_kernel(
                        / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _to_split_half(x: jax.Array) -> jax.Array:
+    """(..., dp) interleaved (even0, odd0, even1, ...) -> [evens | odds]."""
+    return jnp.concatenate([x[..., 0::2], x[..., 1::2]], axis=-1)
+
+
+def _from_split_half(x: jax.Array) -> jax.Array:
+    """Inverse of _to_split_half."""
+    dp = x.shape[-1]
+    pairs = dp // 2
+    return jnp.stack([x[..., :pairs], x[..., pairs:]],
+                     axis=-1).reshape(*x.shape[:-1], dp)
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("k_bits", "k_log", "v_bits", "v_log", "block_t",
-                     "interpret"),
+    static_argnames=("idx_bits", "k_bits", "k_log", "k_nq_packed", "v_bits",
+                     "v_log", "v_nq_packed", "block_t", "interpret"),
 )
 def qattn(
     q_rot: jax.Array,  # (B, nkv, G, Dp) f32, pre-scaled
-    k_idx: jax.Array,  # (B, T, nkv, pairs)
+    k_idx: jax.Array,  # (B, T, nkv, words) uint32 or (B, T, nkv, pairs) int
     k_nq: jax.Array,
     k_rmin: jax.Array,  # (B, T, nkv, 1)
     k_rmax: jax.Array,
@@ -128,16 +193,24 @@ def qattn(
     *,
     n_bins_k,  # int or traced i32 scalar (per-layer MixedKV scan value)
     n_bins_v,
+    idx_bits=None,  # static: packed index width; None -> container codes
     k_bits=None,
     k_log: bool = False,
+    k_nq_packed: bool = False,
     v_bits=None,
     v_log: bool = False,
-    block_t: int = 512,
+    v_nq_packed: bool = False,
+    block_t: int | None = None,
     interpret: bool = True,
 ) -> jax.Array:
     b, nkv, g, dp = q_rot.shape
     t = k_idx.shape[1]
     pairs = dp // 2
+    if block_t is None:
+        stream = sum(
+            a.shape[-1] * a.dtype.itemsize
+            for a in (k_idx, k_nq, v_idx, v_nq)) + 4 * 4  # + rmin/rmax pairs
+        block_t = default_block_t(dp, stream)
     block_t = min(block_t, t)
     grid = (b, nkv, pl.cdiv(t, block_t))
 
@@ -148,24 +221,27 @@ def qattn(
         jnp.asarray(n_bins_k, jnp.int32).reshape(()),
         jnp.asarray(n_bins_v, jnp.int32).reshape(()),
     ]).reshape(1, 2)
+    q_perm = _to_split_half(q_rot)
 
-    def kv_spec(last):
+    def kv_spec(arr):
+        last = arr.shape[-1]
         return pl.BlockSpec(
             (1, block_t, 1, last), lambda bi, ni, ti: (bi, ti, ni, 0))
 
     from jax.experimental.pallas import tpu as pltpu
 
-    return pl.pallas_call(
+    out_perm = pl.pallas_call(
         functools.partial(
-            qattn_kernel, block_t=block_t, k_bits=k_bits, k_log=k_log,
-            v_bits=v_bits, v_log=v_log),
+            qattn_kernel, block_t=block_t, pairs=pairs, idx_bits=idx_bits,
+            k_bits=k_bits, k_log=k_log, k_nq_packed=k_nq_packed,
+            v_bits=v_bits, v_log=v_log, v_nq_packed=v_nq_packed),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1), lambda bi, ni, ti: (bi, 0)),  # lengths (B,1)
             pl.BlockSpec((1, 2), lambda bi, ni, ti: (0, 0)),  # [n_k, n_v]
             pl.BlockSpec((1, 1, g, dp), lambda bi, ni, ti: (bi, ni, 0, 0)),
-            kv_spec(pairs), kv_spec(pairs), kv_spec(1), kv_spec(1),
-            kv_spec(pairs), kv_spec(pairs), kv_spec(1), kv_spec(1),
+            kv_spec(k_idx), kv_spec(k_nq), kv_spec(k_rmin), kv_spec(k_rmax),
+            kv_spec(v_idx), kv_spec(v_nq), kv_spec(v_rmin), kv_spec(v_rmax),
         ],
         out_specs=pl.BlockSpec((1, 1, g, dp),
                                lambda bi, ni, ti: (bi, ni, 0, 0)),
@@ -176,5 +252,6 @@ def qattn(
             pltpu.VMEM((g, dp), jnp.float32),
         ],
         interpret=interpret,
-    )(lengths, bins, q_rot, k_idx, k_nq, k_rmin,
+    )(lengths, bins, q_perm, k_idx, k_nq, k_rmin,
       k_rmax, v_idx, v_nq, v_rmin, v_rmax)
+    return _from_split_half(out_perm)

@@ -39,6 +39,10 @@ def main(argv=None):
                     choices=("auto",) + backends_lib.BACKEND_NAMES)
     ap.add_argument("--no-quant", action="store_true",
                     help="shorthand for --backend raw")
+    ap.add_argument("--storage", default="auto",
+                    choices=("auto", "uint8", "bitpack"),
+                    help="quantized cache representation (auto -> bitpack "
+                         "word streams; uint8 keeps one container per code)")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="stop a sequence when it samples this token")
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -55,7 +59,9 @@ def main(argv=None):
     if backend_name == "raw":
         run = dataclasses.replace(
             run, quant=dataclasses.replace(run.quant, enabled=False))
-    run = dataclasses.replace(run, model=cfg, backend=backend_name)
+    run = dataclasses.replace(
+        run, model=cfg, backend=backend_name,
+        quant=dataclasses.replace(run.quant, storage=args.storage))
     qz = steps_lib.make_quantizer(run)
     backend = backends_lib.from_run(run, qz)
 

@@ -9,6 +9,7 @@ needs from it:
     append(layer_cache, k, v, nk, nv, lengths)  write one token per sequence
     attend(q, layer_cache, nk, nv, n_valid)     masked attention over cache
     physical_bytes(cache)                       payload bytes (compression)
+    attend_stream_bytes(cache)                  bytes attend reads per step
 
 Three implementations:
 
@@ -16,9 +17,10 @@ Three implementations:
     quant-xla    TurboAngle cache, pure-XLA Hadamard-domain attention —
                  dequantized K/V materialize in HBM (portable fallback)
     quant-pallas TurboAngle cache, fused Pallas flash-decode kernel —
-                 dequantizes in VMEM, never materializes y-domain K/V;
-                 this is the path that actually banks the compression
-                 bandwidth win
+                 dequantizes in VMEM (including unpacking the bit-packed
+                 word stream), never materializes y-domain K/V; this is
+                 the path that actually banks the compression bandwidth
+                 win
 
 Selection: `RunConfig.backend` ("auto" | "raw" | "quant-xla" |
 "quant-pallas"). "auto" resolves from the run's quant settings and
@@ -69,6 +71,8 @@ class AttentionBackend(Protocol):
 
     def physical_bytes(self, cache) -> int: ...
 
+    def attend_stream_bytes(self, cache) -> int: ...
+
 
 @dataclasses.dataclass(frozen=True)
 class RawBackend:
@@ -100,6 +104,11 @@ class RawBackend:
                                         self.cfg)
 
     def physical_bytes(self, cache) -> int:
+        return kvcache.cache_physical_bytes(cache)
+
+    def attend_stream_bytes(self, cache) -> int:
+        """Cache bytes the attend path streams per decode step (= payload:
+        the raw K/V arrays are read as stored)."""
         return kvcache.cache_physical_bytes(cache)
 
 
@@ -134,6 +143,17 @@ class _QuantBackendBase:
     def physical_bytes(self, cache) -> int:
         return kvcache.cache_physical_bytes(cache)
 
+    def attend_stream_bytes(self, cache) -> int:
+        """Cache bytes the attend path streams per decode step.
+
+        For quant-xla this is the stored payload (indices + norm codes +
+        per-vector min/max); the path additionally materializes the
+        dequantized y-domain K/V in HBM at y_dtype — that extra traffic is
+        the reason the Pallas path exists and is reported separately by
+        `benchmarks/decode_bandwidth.py`.
+        """
+        return kvcache.cache_physical_bytes(cache)
+
 
 @dataclasses.dataclass(frozen=True)
 class QuantXLABackend(_QuantBackendBase):
@@ -158,19 +178,16 @@ class QuantXLABackend(_QuantBackendBase):
 class QuantPallasBackend(_QuantBackendBase):
     """TurboAngle cache, fused Pallas flash-decode (in-VMEM dequant).
 
+    Reads the cache in whatever representation the quantizer stores —
+    bit-packed uint32 word streams (the default; unpacked in VMEM inside
+    the kernel) or legacy uint8/uint16 containers.
+
     interpret=None resolves at call time: compiled on TPU, interpreter
     everywhere else (CPU CI still exercises the same kernel body).
     """
 
     name: str = "quant-pallas"
     interpret: Optional[bool] = None
-
-    def __post_init__(self):
-        super().__post_init__()
-        if self.quantizer.config.storage == "bitpack":
-            raise ValueError(
-                "quant-pallas reads uint8 codes directly; bitpack storage "
-                "is only supported by the quant-xla backend")
 
     def attend(self, q, layer_cache, nk, nv, n_valid):
         layer_kq, layer_vq = layer_cache
@@ -180,6 +197,21 @@ class QuantPallasBackend(_QuantBackendBase):
         return qattn_ops.attend_quant_cache_op(
             q, layer_kq, layer_vq, nk, nv, n_valid, self.cfg,
             self.quantizer, interpret=interpret)
+
+    def attend_stream_bytes(self, cache) -> int:
+        """Cache bytes the kernel streams from HBM per decode step.
+
+        Bit-packed storage feeds the uint32 word stream straight into the
+        kernel, so this equals the stored payload. The legacy uint8
+        container path widens angle codes to i32 before the pallas_call —
+        the widened array is what actually crosses HBM, and that is what
+        gets counted (it is the honest baseline the packed path beats).
+        """
+        stored = kvcache.cache_physical_bytes(cache)
+        if self.quantizer.config.resolved_storage == "bitpack":
+            return stored
+        widen = 4 - cache.k.indices.dtype.itemsize
+        return stored + widen * (cache.k.indices.size + cache.v.indices.size)
 
 
 def get_backend(
@@ -205,7 +237,7 @@ def default_backend(cfg: ModelConfig,
     """Legacy-compatible resolution from a bare (cfg, quantizer) pair."""
     if quantizer is None:
         return RawBackend(cfg)
-    if cfg.use_pallas and quantizer.config.storage != "bitpack":
+    if cfg.use_pallas:
         return QuantPallasBackend(cfg, quantizer)
     return QuantXLABackend(cfg, quantizer)
 

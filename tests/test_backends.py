@@ -141,15 +141,32 @@ def test_backend_selection():
         backends_lib.get_backend("nope", cfg)
 
 
-def test_pallas_backend_rejects_bitpack():
+def test_pallas_backend_accepts_bitpack_and_matches_xla():
+    """quant-pallas reads the packed word stream directly (in-kernel
+    unpack); parity with quant-xla at f32 y_dtype within 1e-3."""
     cfg = _cfg()
-    # 256-bin schedule -> 8-bit codes, so 16 pairs tile into uint32 words
     qz = KVQuantizer(QuantizerConfig(
         head_dim=cfg.head_dim,
-        schedule=mixedkv.uniform(cfg.num_layers, 256, 256),
-        k_norm=rates.NORM_K8, v_norm=rates.NORM_K8, storage="bitpack"))
-    with pytest.raises(ValueError):
-        backends_lib.QuantPallasBackend(cfg, qz, interpret=True)
+        schedule=mixedkv.uniform(cfg.num_layers),
+        k_norm=rates.NORM_K8, v_norm=rates.NORM_V4_LOG, storage="bitpack"))
+    xla = backends_lib.QuantXLABackend(cfg, qz, y_dtype=jnp.float32)
+    pallas = backends_lib.QuantPallasBackend(cfg, qz, interpret=True)
+    b, t = 2, 24
+    rng = np.random.default_rng(12)
+    k = jnp.asarray(rng.normal(size=(b, t, cfg.num_kv_heads, cfg.head_dim)),
+                    jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, t, cfg.num_kv_heads, cfg.head_dim)),
+                    jnp.float32)
+    q = jnp.asarray(rng.normal(size=(b, 1, cfg.num_heads, cfg.head_dim)),
+                    jnp.float32)
+    cache = (qz.encode(k, 128, qz.config.k_norm),
+             qz.encode(v, 64, qz.config.v_norm))
+    assert cache[0].indices.dtype == jnp.uint32
+    n_valid = jnp.asarray([13, 24], jnp.int32)
+    got = pallas.attend(q, cache, 128, 64, n_valid)
+    want = xla.attend(q, cache, 128, 64, n_valid)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
 
 
 # ------------------------------------------------- ragged decode ----------

@@ -1,0 +1,296 @@
+"""Bit-packed cache representation, end-to-end.
+
+Covers the packed word stream as the first-class cache layout: bitwise
+parity of the Pallas kernel between packed and container storage (packing
+is lossless, so the in-kernel unpack must reproduce the exact same dequant
+arithmetic), ring-buffer wraparound appends on packed caches, physical-byte
+accounting against `storage_bits_per_code`, the uint16 container fallback
+for >8-bit widths, and the encode kernel's in-kernel packing.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache import kvcache
+from repro.configs.base import ModelConfig
+from repro.core import fwht as core_fwht
+from repro.core import mixedkv, packing, rates
+from repro.core.quantizer import KVQuantizer, QuantizerConfig
+from repro.kernels.encode import ops as enc_ops
+from repro.kernels.qattn import qattn as qattn_k
+from repro.serving import backends as backends_lib
+
+
+def _cfg(**kw):
+    base = dict(name="bp", family="decoder", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                head_dim=32)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _qz(cfg, storage, k_norm=rates.NORM_K8, v_norm=rates.NORM_V4_LOG,
+        schedule=None):
+    return KVQuantizer(QuantizerConfig(
+        head_dim=cfg.head_dim,
+        schedule=schedule or mixedkv.uniform(cfg.num_layers),
+        k_norm=k_norm, v_norm=v_norm, storage=storage))
+
+
+# ------------------------------------------------ storage resolution ------
+def test_auto_storage_resolves_to_bitpack():
+    cfg = _cfg()
+    qz = _qz(cfg, "auto")
+    assert qz.config.resolved_storage == "bitpack"
+    q = qz.encode(jnp.ones((2, 3, cfg.head_dim)), 128, qz.config.k_norm)
+    assert q.indices.dtype == jnp.uint32
+    # K128 -> 7-bit width; 16 pairs * 7 = 112 bits -> 4 words (tail-padded)
+    assert q.indices.shape[-1] == packing.packed_words(16, 7) == 4
+    with pytest.raises(ValueError):
+        KVQuantizer(dataclasses.replace(qz.config, storage="nope"))
+
+
+def test_norm_nibble_packing_shapes():
+    cfg = _cfg(head_dim=64)  # 32 pairs
+    qz = _qz(cfg, "bitpack")
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 5, 64)),
+                    jnp.float32)
+    qk = qz.encode(x, 128, qz.config.k_norm)  # 8-bit norms: one per byte
+    qv = qz.encode(x, 64, qz.config.v_norm)  # 4-bit norms: two per byte
+    assert qk.norm_codes.shape[-1] == 32 and qk.norm_codes.dtype == jnp.uint8
+    assert qv.norm_codes.shape[-1] == 16 and qv.norm_codes.dtype == jnp.uint8
+    # lossless round-trip through the packed representation
+    np.testing.assert_allclose(
+        np.asarray(qz.decode(qv, 64, qz.config.v_norm)),
+        np.asarray(_qz(cfg, "uint8").decode(
+            _qz(cfg, "uint8").encode(x, 64, qz.config.v_norm), 64,
+            qz.config.v_norm)))
+
+
+# ------------------------------------------------ kernel parity -----------
+@pytest.mark.parametrize("norm", [
+    pytest.param((rates.NORM_FP32, rates.NORM_FP32), id="fp32"),
+    pytest.param((rates.NORM_K8, rates.NORM_V4_LOG), id="k8v4log"),
+])
+def test_packed_vs_container_kernel_bitwise_identical(norm):
+    """Packing is lossless and the kernel's unpack prologue feeds the exact
+    same dequant arithmetic -> interpret-mode outputs must be bit-identical
+    between storage="bitpack" and storage="uint8"."""
+    k_norm, v_norm = norm
+    cfg = _cfg(head_dim=64)
+    qz_bp = _qz(cfg, "bitpack", k_norm, v_norm)
+    qz_u8 = _qz(cfg, "uint8", k_norm, v_norm)
+    b, t = 2, 40
+    rng = np.random.default_rng(1)
+    k = jnp.asarray(rng.normal(size=(b, t, cfg.num_kv_heads, cfg.head_dim)),
+                    jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, t, cfg.num_kv_heads, cfg.head_dim)),
+                    jnp.float32)
+    q = jnp.asarray(rng.normal(size=(b, 1, cfg.num_heads, cfg.head_dim)),
+                    jnp.float32)
+    n_valid = jnp.asarray([17, 40], jnp.int32)
+    outs = {}
+    for qz in (qz_bp, qz_u8):
+        be = backends_lib.QuantPallasBackend(cfg, qz, interpret=True)
+        cache = (qz.encode(k, 128, k_norm), qz.encode(v, 64, v_norm))
+        outs[qz.config.resolved_storage] = np.asarray(
+            be.attend(q, cache, 128, 64, n_valid))
+    np.testing.assert_array_equal(outs["bitpack"], outs["uint8"])
+
+
+def test_packed_kernel_traced_bins_mixed_schedule():
+    """Packed storage through a traced per-layer MixedKV scan (one compiled
+    kernel, runtime n_bins) matches quant-xla."""
+    cfg = _cfg(head_dim=64)
+    sched = mixedkv.early_boost(cfg.num_layers, 1, 256, 128)
+    qz = _qz(cfg, "bitpack", rates.NORM_K8, rates.NORM_V4_LOG, schedule=sched)
+    xla = backends_lib.QuantXLABackend(cfg, qz, y_dtype=jnp.float32)
+    pallas = backends_lib.QuantPallasBackend(cfg, qz, interpret=True)
+    b, t = 2, 24
+    rng = np.random.default_rng(2)
+    k = jnp.asarray(rng.normal(size=(b, t, cfg.num_kv_heads, cfg.head_dim)),
+                    jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, t, cfg.num_kv_heads, cfg.head_dim)),
+                    jnp.float32)
+    q = jnp.asarray(rng.normal(size=(b, 1, cfg.num_heads, cfg.head_dim)),
+                    jnp.float32)
+    n_valid = jnp.asarray([9, 24], jnp.int32)
+    nk, nv = qz.layer_bins()
+
+    def per_layer(nk_l, nv_l):
+        cache = (qz.encode(k, nk_l, qz.config.k_norm),
+                 qz.encode(v, nv_l, qz.config.v_norm))
+        return (pallas.attend(q, cache, nk_l, nv_l, n_valid),
+                xla.attend(q, cache, nk_l, nv_l, n_valid))
+
+    got, want = jax.lax.map(lambda ab: per_layer(*ab), (nk, nv))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------ ring-buffer append ------
+@pytest.mark.parametrize("storage", ["uint8", "bitpack"])
+def test_append_quant_ring_wraparound(storage):
+    window = 8
+    cfg = _cfg(sliding_window=window, num_layers=1, head_dim=16)
+    qz = _qz(cfg, storage)
+    b = 2
+    cache = kvcache.init_quant_cache(cfg, qz, b, window)
+    layer_kq = jax.tree.map(lambda a: a[0], cache.k)
+    rng = np.random.default_rng(3)
+    new = qz.encode(
+        jnp.asarray(rng.normal(size=(b, 1, cfg.num_kv_heads, cfg.head_dim)),
+                    jnp.float32), 128, qz.config.k_norm)
+    lengths = jnp.asarray([window + 2, 4], jnp.int32)  # slots 2 and 4
+    out = kvcache.append_quant(layer_kq, new, lengths, window)
+    for row, slot in ((0, 2), (1, 4)):
+        np.testing.assert_array_equal(
+            np.asarray(out.indices[row, slot]),
+            np.asarray(new.indices[row, 0]))
+        np.testing.assert_array_equal(
+            np.asarray(out.norm_codes[row, slot]),
+            np.asarray(new.norm_codes[row, 0]))
+        untouched = [s for s in range(window) if s != slot]
+        assert (np.asarray(out.indices[row, untouched]) == 0).all()
+
+
+@pytest.mark.parametrize("storage", ["uint8", "bitpack"])
+def test_ring_decode_wraparound_pallas_matches_xla(storage):
+    """Appending past the window with packed codes, then attending via the
+    kernel, agrees with the XLA path (regression for packed ring writes)."""
+    window = 8
+    cfg = _cfg(sliding_window=window, num_layers=1, head_dim=32)
+    qz = _qz(cfg, storage)
+    b, total = 1, window + 5
+    rng = np.random.default_rng(4)
+    cache = kvcache.init_quant_cache(cfg, qz, b, window)
+    layer_kq = jax.tree.map(lambda a: a[0], cache.k)
+    layer_vq = jax.tree.map(lambda a: a[0], cache.v)
+    lengths = jnp.zeros((b,), jnp.int32)
+    for p in range(total):
+        kk = jnp.asarray(rng.normal(size=(b, 1, cfg.num_kv_heads,
+                                          cfg.head_dim)), jnp.float32)
+        vv = jnp.asarray(rng.normal(size=(b, 1, cfg.num_kv_heads,
+                                          cfg.head_dim)), jnp.float32)
+        layer_kq = kvcache.append_quant(
+            layer_kq, qz.encode(kk, 128, qz.config.k_norm), lengths, window)
+        layer_vq = kvcache.append_quant(
+            layer_vq, qz.encode(vv, 64, qz.config.v_norm), lengths, window)
+        lengths = lengths + 1
+    q = jnp.asarray(rng.normal(size=(b, 1, cfg.num_heads, cfg.head_dim)),
+                    jnp.float32)
+    pallas = backends_lib.QuantPallasBackend(cfg, qz, interpret=True)
+    xla = backends_lib.QuantXLABackend(cfg, qz, y_dtype=jnp.float32)
+    got = pallas.attend(q, (layer_kq, layer_vq), 128, 64, lengths)
+    want = xla.attend(q, (layer_kq, layer_vq), 128, 64, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------ physical accounting -----
+@pytest.mark.parametrize("head_dim", [32, 64, 128])
+def test_cache_physical_bytes_matches_bit_budget(head_dim):
+    """Packed payload == storage_bits_per_code accounting, within one uint32
+    word of tail padding per stored vector."""
+    cfg = _cfg(head_dim=head_dim, num_layers=2)
+    qz = _qz(cfg, "bitpack")
+    batch, t = 2, 16
+    cache = kvcache.init_quant_cache(cfg, qz, batch, t)
+    n_vec = cfg.num_layers * batch * t * cfg.num_kv_heads
+    pairs = qz.config.n_pairs
+    width = qz.config.index_width
+
+    def payload_bits(qkv, norm_cfg):
+        arrs = [qkv.indices, qkv.norm_codes, qkv.rmin, qkv.rmax]
+        return sum(a.size * a.dtype.itemsize for a in arrs) * 8 / n_vec
+
+    # per-vector bit budget: angle + norm + min/max
+    for qkv, norm_cfg in ((cache.k, qz.config.k_norm),
+                          (cache.v, qz.config.v_norm)):
+        want = (pairs * width
+                + pairs * packing.norm_storage_bits(norm_cfg.bits, "bitpack")
+                + 64)
+        got = payload_bits(qkv, norm_cfg)
+        assert want <= got <= want + 32, (head_dim, want, got)
+    # and the bits/elem rate function agrees with the allocated arrays at
+    # word-aligned geometries (d=128: 64 pairs * 7 bits = 14 exact words)
+    if head_dim == 128:
+        total_bits = (kvcache.cache_physical_bytes(cache) * 8
+                      / (n_vec * 2 * qz.config.d_pad))
+        assert abs(total_bits - qz.config.physical_bits()) < 1e-9
+
+
+def test_bitpack_cache_smaller_than_uint8_cache():
+    cfg = _cfg(head_dim=128)
+    b_u8 = kvcache.cache_physical_bytes(
+        kvcache.init_quant_cache(cfg, _qz(cfg, "uint8"), 2, 64))
+    b_bp = kvcache.cache_physical_bytes(
+        kvcache.init_quant_cache(cfg, _qz(cfg, "bitpack"), 2, 64))
+    # per vector at d=128: K 56+64+8=128B vs 64+64+8=136B,
+    # V 56+32+8=96B vs 136B -> 224/272
+    assert b_bp == (224 / 272) * b_u8, (b_bp, b_u8)
+
+
+# ------------------------------------------------ uint16 fallback ---------
+def test_uint8_storage_wide_width_uses_uint16_fallback():
+    """storage="uint8" with a >8-bit schedule width allocates uint16
+    containers — pinning that storage_bits_per_code's 16.0 report and the
+    actual allocation agree (they used to agree only by accident)."""
+    cfg = _cfg(head_dim=64)
+    sched = mixedkv.uniform(cfg.num_layers, 1024, 512)  # 10-bit width
+    qz = _qz(cfg, "uint8", schedule=sched)
+    assert packing.storage_bits_per_code(qz.config.index_width,
+                                         "uint8") == 16.0
+    cache = kvcache.init_quant_cache(cfg, qz, 2, 8)
+    assert cache.k.indices.dtype == jnp.uint16
+    q = qz.encode(jnp.ones((2, 3, cfg.head_dim)), 1024, qz.config.k_norm)
+    assert q.indices.dtype == jnp.uint16
+    # decode round-trips through the wide container
+    x = jnp.asarray(np.random.default_rng(5).normal(size=(2, 3, 64)),
+                    jnp.float32)
+    x_hat = qz.decode(qz.encode(x, 1024, qz.config.k_norm), 1024,
+                      qz.config.k_norm)
+    assert float(jnp.mean((x - x_hat) ** 2) / jnp.mean(x ** 2)) < 0.01
+    # widths beyond the uint16 container must be rejected, not misreported
+    with pytest.raises(ValueError):
+        packing.storage_bits_per_code(17, "uint8")
+
+
+# ------------------------------------------------ encode kernel -----------
+@pytest.mark.parametrize("norm", [(None, False), (8, False), (4, True)])
+def test_encode_kernel_packs_in_kernel(norm):
+    """Packed encode-kernel outputs == pack(container outputs), bitwise."""
+    bits, log = norm
+    d, n_bins = 64, 128
+    signs = core_fwht.make_signs(0, d)
+    x = jnp.asarray(np.random.default_rng(6).normal(size=(2, 33, d)),
+                    jnp.float32)
+    u_idx, u_nq, u_rmin, u_rmax = enc_ops.encode_op(
+        x, signs, n_bins=n_bins, norm_bits=bits, norm_log=log)
+    p_idx, p_nq, p_rmin, p_rmax = enc_ops.encode_op(
+        x, signs, n_bins=n_bins, norm_bits=bits, norm_log=log,
+        storage="bitpack")
+    assert p_idx.dtype == jnp.uint32
+    np.testing.assert_array_equal(
+        np.asarray(p_idx), np.asarray(packing.pack_bits(u_idx, 7)))
+    if bits is not None and bits <= 4:
+        np.testing.assert_array_equal(
+            np.asarray(p_nq), np.asarray(packing.pack_nibbles(u_nq)))
+    else:
+        np.testing.assert_array_equal(np.asarray(p_nq), np.asarray(u_nq))
+    np.testing.assert_array_equal(np.asarray(p_rmin), np.asarray(u_rmin))
+    np.testing.assert_array_equal(np.asarray(p_rmax), np.asarray(u_rmax))
+
+
+# ------------------------------------------------ block_t default ---------
+def test_default_block_t_scales_with_vmem_budget():
+    bt = qattn_k.default_block_t(128, 160)
+    assert bt % 128 == 0 and 128 <= bt <= 2048
+    # bigger budget -> no smaller block; tiny budget clamps at the floor
+    assert qattn_k.default_block_t(128, 160, 8 << 20) >= bt
+    assert qattn_k.default_block_t(128, 160, 1024) == 128
+    # wider streams shrink the block at a fixed budget
+    assert qattn_k.default_block_t(128, 4096) <= bt

@@ -122,8 +122,42 @@ def test_bitpack_roundtrip(bits, rows, seed):
 def test_pack_density():
     codes = jnp.zeros((4, 64), jnp.int32)
     assert packing.pack_bits(codes, 7).shape[-1] == 14  # 64*7/32
+    # non-word-aligned streams tail-pad the last word (<= 31 bits/vector)
+    assert packing.packed_words(63, 7) == 14  # ceil(441/32)
+    assert packing.packed_words(16, 7) == 4  # head_dim 32 geometry
     with pytest.raises(ValueError):
-        packing.packed_words(63, 7)
+        packing.packed_words(64, 0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bits=st.sampled_from([2, 3, 4, 5, 6, 7, 8]),
+    m=st.sampled_from([8, 16, 30, 63, 64]),
+    seed=st.integers(min_value=0, max_value=1 << 30),
+)
+def test_bitpack_roundtrip_with_tail_padding(bits, m, seed):
+    """Round-trip for every angle width incl. streams that straddle and
+    tail-pad the last uint32 word."""
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 2**bits, size=(3, m)), jnp.int32)
+    words = packing.pack_bits(codes, bits)
+    assert words.shape == (3, packing.packed_words(m, bits))
+    out = packing.unpack_bits(words, bits, m)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([8, 16, 64]),
+    seed=st.integers(min_value=0, max_value=1 << 30),
+)
+def test_nibble_roundtrip(m, seed):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 16, size=(5, m)), jnp.int32)
+    packed = packing.pack_nibbles(codes)
+    assert packed.shape == (5, m // 2) and packed.dtype == jnp.uint8
+    out = packing.unpack_nibbles(packed, m)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))
 
 
 # -------------------------------------------------------------- schedules --
