@@ -55,8 +55,29 @@ def _cache_tmax(cfg: ModelConfig, seq_len: int) -> int:
     return seq_len
 
 
+def _check_lengths(arr, upper: Optional[int] = None, what: str = "lengths"):
+    """Eager validation of a lengths value when it is concrete.
+
+    Negative lengths (and lengths past the cache capacity, when `upper` is
+    known) used to flow silently into `_score_mask` / `_insert_slots` and
+    produce all-masked rows or clamped writes. Traced values (inside jit'd
+    decode loops) cannot be inspected and pass through unchecked — callers
+    with concrete inputs (engine entry points, direct API use) get a clear
+    error instead.
+    """
+    if isinstance(arr, jax.core.Tracer):
+        return
+    a = np.asarray(arr)
+    if a.size and a.min() < 0:
+        raise ValueError(f"{what} must be non-negative, got min {a.min()}")
+    if upper is not None and a.size and a.max() > upper:
+        raise ValueError(
+            f"{what} exceed the cache capacity {upper} (max {a.max()})")
+
+
 def per_seq_lengths(lengths, batch: int) -> jax.Array:
     """Normalize an int / () / (B,) lengths value to a (B,) int32 vector."""
+    _check_lengths(lengths)
     arr = jnp.asarray(lengths, jnp.int32)
     return jnp.broadcast_to(arr.reshape(-1) if arr.ndim else arr, (batch,))
 
@@ -104,7 +125,8 @@ def init_quant_cache(cfg: ModelConfig, qz: KVQuantizer, batch: int,
 
 
 def cache_from_prefill(kv_stack, lengths, quantized: bool,
-                       pad_to: int | None = None) -> tuple:
+                       pad_to: int | None = None,
+                       window: int | None = None) -> tuple:
     """Wrap forward_prefill's scan outputs into a cache struct.
 
     kv_stack is the (K, V) tuple of layer-stacked QuantizedKV (quantized) or
@@ -115,9 +137,20 @@ def cache_from_prefill(kv_stack, lengths, quantized: bool,
     token axis to the serving capacity so decode steps have slots to append
     into (dynamic_update_slice clamps out-of-range starts, which would
     silently overwrite the last cached token otherwise).
+
+    `window` is the model's sliding window (if any): ring caches legitimately
+    track absolute lengths past their slot count, so the capacity check only
+    applies to dense (window-less) caches. Concrete negative or
+    beyond-capacity lengths raise a ValueError instead of silently producing
+    all-masked rows / clamped appends.
     """
     k, v = kv_stack
     batch = jax.tree.leaves(k)[0].shape[1]
+    cur_t = jax.tree.leaves(k)[0].shape[2]
+    capacity = None
+    if window is None:
+        capacity = cur_t if pad_to is None else max(cur_t, pad_to)
+    _check_lengths(lengths, upper=capacity, what="prefill lengths")
 
     def grow(t):
         cur = t.shape[2]

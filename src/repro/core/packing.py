@@ -135,6 +135,32 @@ def norm_storage_bits(bits: int, mode: str) -> float:
     return 8.0
 
 
+def token_payload_bytes(n_pairs: int, index_bits: int,
+                        norm_bits: int | None, mode: str = "bitpack") -> int:
+    """Physical payload bytes one stored token row occupies for ONE of K or V.
+
+    Sums the actual array widths the cache allocates: the packed uint32 word
+    stream (or narrow container codes), the norm-code bytes (nibble-packed
+    when they fit), and the per-vector f32 min/max pair. fp32 norms
+    (norm_bits None) store n_pairs f32 values and no min/max payload is
+    *added* — the cache still allocates the (…, 1) rmin/rmax arrays, counted
+    here so the number matches `cache_physical_bytes` exactly. This is the
+    unit the page-pool sizing math (serving/pages.py, ARCHITECTURE.md) is
+    built on.
+    """
+    if mode == "bitpack":
+        idx = 4 * packed_words(n_pairs, index_bits)
+    else:
+        idx = n_pairs * np.dtype(narrow_dtype(index_bits)).itemsize
+    if norm_bits is None:
+        nrm = 4 * n_pairs  # fp32 norms
+    elif mode == "bitpack" and norm_bits <= 4 and n_pairs % 2 == 0:
+        nrm = n_pairs // 2  # two-per-byte nibbles
+    else:
+        nrm = n_pairs  # one uint8 per code
+    return idx + nrm + 8  # + f32 rmin/rmax
+
+
 def narrow_dtype(bits: int) -> np.dtype:
     """Smallest unsigned container dtype for b-bit codes."""
     if bits <= 8:

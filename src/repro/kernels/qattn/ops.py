@@ -34,6 +34,7 @@ def attend_quant_cache_op(
     qz: KVQuantizer,
     *,
     interpret: bool = True,
+    block_t: int | None = None,
 ) -> jax.Array:
     b, _, nq, h = q.shape
     nkv, g = cfg.num_kv_heads, cfg.q_per_kv
@@ -72,7 +73,57 @@ def attend_quant_cache_op(
         k_nq_packed=qz.config.norm_packed(kc),
         v_bits=vc.bits, v_log=vc.log_space,
         v_nq_packed=qz.config.norm_packed(vc),
+        block_t=block_t,
         interpret=interpret,
     )
     out = qz.unrotate_output(out_y)  # one inverse transform per query
+    return out.reshape(b, 1, nq, h)
+
+
+def paged_attend_quant_cache_op(
+    q: jax.Array,  # (B, 1, nq, h) RoPE'd query, logical head dim
+    layer_kq: QuantizedKV,  # (P, page_size, n_kv, ...) one layer's pool
+    layer_vq: QuantizedKV,
+    n_bins_k,  # int or traced i32 scalar
+    n_bins_v,
+    page_table: jax.Array,  # (B, max_pages) int32
+    lengths: jax.Array,  # (B,) int32
+    cfg: ModelConfig,
+    qz: KVQuantizer,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Paged mirror of `attend_quant_cache_op`: the kernel resolves each
+    grid step's K/V block through the scalar-prefetched page table instead
+    of assuming contiguous ring layout. Sliding windows are a contiguous-
+    cache concept (ring slots); the paged pool rejects them at init."""
+    b, _, nq, h = q.shape
+    nkv, g = cfg.num_kv_heads, cfg.q_per_kv
+    dp = qz.config.d_pad
+    scale = 1.0 / np.sqrt(h)
+    q_rot = (qz.rotate_query(q[:, 0]) * scale).reshape(b, nkv, g, dp)
+    kc, vc = qz.config.k_norm, qz.config.v_norm
+    if qz.config.resolved_storage == "bitpack":
+        k_idx, v_idx = layer_kq.indices, layer_vq.indices
+        idx_bits = qz.config.index_width
+    else:
+        k_idx = layer_kq.indices.astype(jnp.int32)
+        v_idx = layer_vq.indices.astype(jnp.int32)
+        idx_bits = None
+    out_y = k.paged_qattn(
+        q_rot,
+        k_idx, layer_kq.norm_codes,
+        layer_kq.rmin, layer_kq.rmax,
+        v_idx, layer_vq.norm_codes,
+        layer_vq.rmin, layer_vq.rmax,
+        page_table, lengths,
+        n_bins_k=n_bins_k, n_bins_v=n_bins_v,
+        idx_bits=idx_bits,
+        k_bits=kc.bits, k_log=kc.log_space,
+        k_nq_packed=qz.config.norm_packed(kc),
+        v_bits=vc.bits, v_log=vc.log_space,
+        v_nq_packed=qz.config.norm_packed(vc),
+        interpret=interpret,
+    )
+    out = qz.unrotate_output(out_y)
     return out.reshape(b, 1, nq, h)

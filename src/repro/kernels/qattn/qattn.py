@@ -126,34 +126,43 @@ def qattn_kernel(
     length = len_ref[0, 0]  # this batch row's valid-token count
     n_bins_k = bins_ref[0, 0]
     n_bins_v = bins_ref[0, 1]
-    row_pos = t_step * block_t + jax.lax.broadcasted_iota(
-        jnp.int32, (block_t, 1), 0)
-    row_ok = row_pos < length  # (bt, 1); also kills OOB-padding garbage rows
 
-    y_k = _dequant_block(
-        kidx_ref[0, :, 0], knq_ref[0, :, 0], krmin_ref[0, :, 0],
-        krmax_ref[0, :, 0], n_bins=n_bins_k, bits=k_bits, log=k_log,
-        pairs=pairs, idx_bits=idx_bits, nq_packed=k_nq_packed)
-    y_k = jnp.where(row_ok, y_k, 0.0)
-    s = jax.lax.dot_general(
-        q.astype(jnp.float32), y_k,
-        (((1,), (1,)), ((), ())))  # (g, bt)
-    s = jnp.where(row_ok.reshape(1, block_t), s, NEG_INF)
+    # Blocks entirely past this row's frontier contribute exactly nothing
+    # (masked scores are NEG_INF -> p == 0, m unchanged), so skip their
+    # dequant + dots outright: ragged batches then cost each row ITS OWN
+    # context, not the batch maximum. Output is bit-for-bit identical with
+    # or without the skip. (The DMA for the block still runs — this saves
+    # compute, not bandwidth.)
+    @pl.when(t_step * block_t < length)
+    def _work():
+        row_pos = t_step * block_t + jax.lax.broadcasted_iota(
+            jnp.int32, (block_t, 1), 0)
+        row_ok = row_pos < length  # also kills OOB-padding garbage rows
 
-    m_prev = m_scr[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-    p = jnp.exp(s - m_new)
-    corr = jnp.exp(m_prev - m_new)
-    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
-    m_scr[...] = m_new
+        y_k = _dequant_block(
+            kidx_ref[0, :, 0], knq_ref[0, :, 0], krmin_ref[0, :, 0],
+            krmax_ref[0, :, 0], n_bins=n_bins_k, bits=k_bits, log=k_log,
+            pairs=pairs, idx_bits=idx_bits, nq_packed=k_nq_packed)
+        y_k = jnp.where(row_ok, y_k, 0.0)
+        s = jax.lax.dot_general(
+            q.astype(jnp.float32), y_k,
+            (((1,), (1,)), ((), ())))  # (g, bt)
+        s = jnp.where(row_ok.reshape(1, block_t), s, NEG_INF)
 
-    y_v = _dequant_block(
-        vidx_ref[0, :, 0], vnq_ref[0, :, 0], vrmin_ref[0, :, 0],
-        vrmax_ref[0, :, 0], n_bins=n_bins_v, bits=v_bits, log=v_log,
-        pairs=pairs, idx_bits=idx_bits, nq_packed=v_nq_packed)
-    y_v = jnp.where(row_ok, y_v, 0.0)  # 0 * garbage-NaN would poison p@y_v
-    pv = jax.lax.dot_general(p, y_v, (((1,), (0,)), ((), ())))  # (g, dp)
-    acc_scr[...] = acc_scr[...] * corr + pv
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        m_scr[...] = m_new
+
+        y_v = _dequant_block(
+            vidx_ref[0, :, 0], vnq_ref[0, :, 0], vrmin_ref[0, :, 0],
+            vrmax_ref[0, :, 0], n_bins=n_bins_v, bits=v_bits, log=v_log,
+            pairs=pairs, idx_bits=idx_bits, nq_packed=v_nq_packed)
+        y_v = jnp.where(row_ok, y_v, 0.0)  # 0 * garbage NaN would poison p@y_v
+        pv = jax.lax.dot_general(p, y_v, (((1,), (0,)), ((), ())))  # (g, dp)
+        acc_scr[...] = acc_scr[...] * corr + pv
 
     @pl.when(t_step == n_steps - 1)
     def _fin():
@@ -254,4 +263,163 @@ def qattn(
         interpret=interpret,
     )(lengths, bins, q_perm, k_idx, k_nq, k_rmin,
       k_rmax, v_idx, v_nq, v_rmin, v_rmax)
+    return _from_split_half(out_perm)
+
+
+# ============================================================ paged =========
+def paged_qattn_kernel(
+    pt_ref, len_ref, bins_ref, q_ref, kidx_ref, knq_ref, krmin_ref,
+    krmax_ref, vidx_ref, vnq_ref, vrmin_ref, vrmax_ref, o_ref,
+    m_scr, l_scr, acc_scr, *,
+    page_size: int, pairs: int, idx_bits, k_bits, k_log, k_nq_packed,
+    v_bits, v_log, v_nq_packed,
+):
+    """qattn over a paged pool: identical online-softmax body, but the K/V
+    block for grid step p is whatever physical page `pt[b, p]` names — the
+    gather happens in the BlockSpec index_map (scalar-prefetched page table),
+    so the DMA engine streams exactly the pages the slot owns.
+
+    With page_size == block_t and pages filled in logical order, the
+    accumulation sequence is bit-for-bit the contiguous kernel's: extra
+    fully-masked trailing pages contribute exp(-inf - m) == 0 to l/acc and
+    leave m unchanged (pinned by the paged-vs-contiguous parity tests).
+    """
+    b_i = pl.program_id(0)
+    p_step = pl.program_id(2)
+    n_steps = pl.num_programs(2)
+
+    @pl.when(p_step == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]  # (g, dp) pre-rotated, pre-scaled, split-half layout
+    length = len_ref[b_i]
+    n_bins_k = bins_ref[0]
+    n_bins_v = bins_ref[1]
+
+    # Per-page work bound: a page past this slot's frontier contributes
+    # exactly nothing, so skip its dequant + dots — each slot costs its own
+    # live page count (derived per-page valid counts), which is what lets
+    # short requests ride alongside a long-context slot without paying its
+    # width. Bit-for-bit identical to computing the masked page.
+    @pl.when(p_step * page_size < length)
+    def _work():
+        row_pos = p_step * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (page_size, 1), 0)
+        row_ok = row_pos < length  # per-page valid count, as a mask
+
+        y_k = _dequant_block(
+            kidx_ref[0, :, 0], knq_ref[0, :, 0], krmin_ref[0, :, 0],
+            krmax_ref[0, :, 0], n_bins=n_bins_k, bits=k_bits, log=k_log,
+            pairs=pairs, idx_bits=idx_bits, nq_packed=k_nq_packed)
+        y_k = jnp.where(row_ok, y_k, 0.0)
+        s = jax.lax.dot_general(
+            q.astype(jnp.float32), y_k,
+            (((1,), (1,)), ((), ())))  # (g, ps)
+        s = jnp.where(row_ok.reshape(1, page_size), s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        m_scr[...] = m_new
+
+        y_v = _dequant_block(
+            vidx_ref[0, :, 0], vnq_ref[0, :, 0], vrmin_ref[0, :, 0],
+            vrmax_ref[0, :, 0], n_bins=n_bins_v, bits=v_bits, log=v_log,
+            pairs=pairs, idx_bits=idx_bits, nq_packed=v_nq_packed)
+        y_v = jnp.where(row_ok, y_v, 0.0)
+        pv = jax.lax.dot_general(p, y_v, (((1,), (0,)), ((), ())))  # (g, dp)
+        acc_scr[...] = acc_scr[...] * corr + pv
+
+    @pl.when(p_step == n_steps - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("idx_bits", "k_bits", "k_log", "k_nq_packed", "v_bits",
+                     "v_log", "v_nq_packed", "interpret"),
+)
+def paged_qattn(
+    q_rot: jax.Array,  # (B, nkv, G, Dp) f32, pre-scaled
+    k_idx: jax.Array,  # (P, ps, nkv, words) uint32 — ONE layer's pool
+    k_nq: jax.Array,
+    k_rmin: jax.Array,  # (P, ps, nkv, 1)
+    k_rmax: jax.Array,
+    v_idx: jax.Array,
+    v_nq: jax.Array,
+    v_rmin: jax.Array,
+    v_rmax: jax.Array,
+    page_table: jax.Array,  # (B, max_pages) int32 physical page ids
+    lengths: jax.Array,  # (B,) int32 valid tokens per slot
+    *,
+    n_bins_k,  # int or traced i32 scalar
+    n_bins_v,
+    idx_bits=None,
+    k_bits=None,
+    k_log: bool = False,
+    k_nq_packed: bool = False,
+    v_bits=None,
+    v_log: bool = False,
+    v_nq_packed: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    """Flash-decode over the paged pool. The block size IS the page size —
+    one grid step streams one physical page per (slot, kv-head)."""
+    b, nkv, g, dp = q_rot.shape
+    page_size = k_idx.shape[1]
+    mp = page_table.shape[1]
+    pairs = dp // 2
+    grid = (b, nkv, mp)
+
+    bins = jnp.stack([
+        jnp.asarray(n_bins_k, jnp.int32).reshape(()),
+        jnp.asarray(n_bins_v, jnp.int32).reshape(()),
+    ])
+    q_perm = _to_split_half(q_rot)
+
+    def pool_spec(arr):
+        last = arr.shape[-1]
+        return pl.BlockSpec(
+            (1, page_size, 1, last),
+            lambda bi, ni, pi, pt, lens, bins_: (pt[bi, pi], 0, ni, 0))
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # page_table, lengths, bins
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dp),
+                         lambda bi, ni, pi, *_: (bi, ni, 0, 0)),
+            pool_spec(k_idx), pool_spec(k_nq),
+            pool_spec(k_rmin), pool_spec(k_rmax),
+            pool_spec(v_idx), pool_spec(v_nq),
+            pool_spec(v_rmin), pool_spec(v_rmax),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dp),
+                               lambda bi, ni, pi, *_: (bi, ni, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dp), jnp.float32),
+        ],
+    )
+    out_perm = pl.pallas_call(
+        functools.partial(
+            paged_qattn_kernel, page_size=page_size, pairs=pairs,
+            idx_bits=idx_bits, k_bits=k_bits, k_log=k_log,
+            k_nq_packed=k_nq_packed, v_bits=v_bits, v_log=v_log,
+            v_nq_packed=v_nq_packed),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, nkv, g, dp), jnp.float32),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32), bins,
+      q_perm, k_idx, k_nq, k_rmin, k_rmax, v_idx, v_nq, v_rmin, v_rmax)
     return _from_split_half(out_perm)

@@ -7,6 +7,12 @@ through a pluggable attention backend, report memory/compression stats.
 Ragged batches: --prompt-lens 64,48,32,20 gives each row its own prompt
 length (right-padded internally); per-sequence EOS (--eos-id) stops rows
 independently and the whole loop exits early once every row is done.
+
+Paged continuous batching: --paged serves the same prompts through the
+page-pool scheduler (`repro.serving.scheduler`) — requests are admitted into
+decode slots mid-flight, evicted on EOS/budget with their pages freed
+immediately, and per-request latency/throughput stats are reported.
+Requires a quantized backend and a window-less config (e.g. qwen3-0.6b).
 """
 from __future__ import annotations
 
@@ -23,6 +29,8 @@ from repro.launch import steps as steps_lib
 from repro.models import transformer
 from repro.serving import backends as backends_lib
 from repro.serving import engine
+from repro.serving import pages as pages_lib
+from repro.serving import scheduler as scheduler_lib
 
 
 def main(argv=None):
@@ -43,6 +51,18 @@ def main(argv=None):
                     choices=("auto", "uint8", "bitpack"),
                     help="quantized cache representation (auto -> bitpack "
                          "word streams; uint8 keeps one container per code)")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the paged continuous-batching "
+                         "scheduler instead of the static batch engine")
+    ap.add_argument("--slots", type=int, default=2,
+                    help="paged: concurrent decode slots")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged: tokens per physical page")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="paged: pool size (0 -> sized to the trace)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="paged: tokens per chunked-prefill call "
+                         "(multiple of --page-size)")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="stop a sequence when it samples this token")
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -79,6 +99,9 @@ def main(argv=None):
         tokens[i, :n] = rng.integers(0, cfg.vocab_size, n)
     prompts = jnp.asarray(tokens)
 
+    if args.paged:
+        return _serve_paged(args, cfg, qz, backend, params, tokens, lens)
+
     result = engine.generate(
         params, cfg, backend, prompts, prompt_lengths,
         max_new_tokens=args.gen,
@@ -110,6 +133,46 @@ def main(argv=None):
             print(f"rates: angle {qz.config.angle_bits():.2f} b/elem, "
                   f"end-to-end {qz.config.total_bits():.2f} b/elem "
                   f"(physical {qz.config.physical_bits():.2f})")
+    return 0
+
+
+def _serve_paged(args, cfg, qz, backend, params, tokens, lens):
+    """Run the prompt set through the continuous-batching scheduler."""
+    requests = [
+        scheduler_lib.Request(rid=i, tokens=tokens[i, :n].astype(np.int32),
+                              max_new_tokens=args.gen)
+        for i, n in enumerate(lens)
+    ]
+    chunk = args.prefill_chunk
+    max_context = -(-max(lens) // chunk) * chunk + args.gen
+    num_pages = args.num_pages
+    if num_pages <= 0:
+        per_req = pages_lib.pages_for_tokens(
+            -(-max(lens) // chunk) * chunk + args.gen, args.page_size)
+        num_pages = 1 + per_req * max(args.slots, 1) * 2
+    sched = scheduler_lib.SchedulerConfig(
+        num_slots=args.slots, page_size=args.page_size,
+        num_pages=num_pages, max_context=max_context,
+        prefill_chunk=chunk, eos_id=args.eos_id,
+        sampling=engine.SamplingConfig(
+            temperature=args.temperature, top_k=args.top_k,
+            top_p=args.top_p))
+    eng = scheduler_lib.PagedServingEngine(params, cfg, backend, sched)
+    results, stats = eng.run(requests, rng=jax.random.PRNGKey(args.seed))
+    print(f"backend: {backend.name} (paged); slots={args.slots} "
+          f"page_size={args.page_size} pool={num_pages - 1} pages; "
+          f"decode steps: {stats['decode_steps']}")
+    for r in results:
+        print(f"  req {r.rid}: prompt {r.prompt_len:4d} tok -> generated "
+              f"{len(r.tokens):3d} tok in {r.latency_s * 1e3:7.1f} ms "
+              f"(ttft {r.ttft_s * 1e3:6.1f} ms): {r.tokens[:12]}")
+    print(f"aggregate: {stats['tokens_per_sec']:.1f} tok/s, "
+          f"p50 latency {stats['latency_p50_s'] * 1e3:.1f} ms, "
+          f"p99 {stats['latency_p99_s'] * 1e3:.1f} ms")
+    pool_mb = stats["pool_bytes"] / 1e6
+    page_kb = pages_lib.page_payload_bytes(qz, cfg, args.page_size) / 1e3
+    print(f"pool-resident payload: {pool_mb:.2f} MB "
+          f"({page_kb:.2f} kB/page x {stats['pages_total']} pages)")
     return 0
 
 

@@ -166,6 +166,20 @@ def _fake_quant_hook(quantizer: Optional[KVQuantizer]):
 
 
 # ============================================================ forward ======
+def ffn_residual(layer_params, x, cfg: ModelConfig, cstr=None) -> jax.Array:
+    """Post-attention half of a decoder block: norm2 -> MoE/MLP -> residual.
+
+    Shared by every decoder-layer body (full forward, prefill, decode step,
+    paged decode, chunked prefill) so the block math lives in one place.
+    """
+    cstr = cstr if cstr is not None else (lambda t, kind="residual": t)
+    inner = common.rms_norm(x, layer_params["norm2"], cfg.norm_eps)
+    if cfg.moe_experts:
+        return common.radd(
+            x, moe.moe_block(layer_params["moe"], inner, cfg, cstr))
+    return common.radd(x, mlp.mlp_block(layer_params["mlp"], inner, cfg, cstr))
+
+
 def _decoder_layer(
     params, x, positions, cfg: ModelConfig, nk, nv, fake_hook, *, causal,
     cstr=None
@@ -182,13 +196,7 @@ def _decoder_layer(
         ),
         cstr=cstr,
     )
-    x = common.radd(x, h)
-    inner = common.rms_norm(x, params["norm2"], cfg.norm_eps)
-    if cfg.moe_experts:
-        x = common.radd(x, moe.moe_block(params["moe"], inner, cfg, cstr))
-    else:
-        x = common.radd(x, mlp.mlp_block(params["mlp"], inner, cfg, cstr))
-    return x
+    return ffn_residual(params, common.radd(x, h), cfg, cstr)
 
 
 def forward(
@@ -386,14 +394,7 @@ def forward_prefill(
                 common.rms_norm(carry, layer_params["norm1"], cfg.norm_eps),
                 positions, cfg, causal=True, cstr=cstr,
             )
-            xx = common.radd(carry, h)
-            inner = common.rms_norm(xx, layer_params["norm2"], cfg.norm_eps)
-            if cfg.moe_experts:
-                xx = common.radd(
-                    xx, moe.moe_block(layer_params["moe"], inner, cfg, cstr))
-            else:
-                xx = common.radd(
-                    xx, mlp.mlp_block(layer_params["mlp"], inner, cfg, cstr))
+            xx = ffn_residual(layer_params, common.radd(carry, h), cfg, cstr)
             return cstr(xx), encode_kv(k, v, lnk, lnv)
 
         body_fn = jax.checkpoint(body) if remat else body

@@ -11,6 +11,18 @@ needs from it:
     physical_bytes(cache)                       payload bytes (compression)
     attend_stream_bytes(cache)                  bytes attend reads per step
 
+The quantized backends additionally serve the paged pool
+(serving/pages.py; driven by the continuous-batching scheduler):
+
+    init_paged_cache(num_pages, page_size, batch, max_pages)
+    paged_append(layer_cache, k, v, nk, nv, page_table, lengths, active)
+    paged_attend(q, layer_cache, nk, nv, page_table, lengths)
+
+quant-pallas resolves the page-table indirection inside the kernel
+(scalar-prefetched table feeding the BlockSpec index_map); quant-xla
+materializes the gather and runs the dense attend — its bitwise equality
+with a contiguous cache makes it the parity oracle for the kernel path.
+
 Three implementations:
 
     raw          bf16 cache, exact attention (reference / baseline)
@@ -42,6 +54,7 @@ from repro.cache import kvcache
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core.quantizer import KVQuantizer
 from repro.kernels.qattn import ops as qattn_ops
+from repro.serving import pages as pages_lib
 
 BACKEND_NAMES = ("raw", "quant-xla", "quant-pallas")
 
@@ -91,7 +104,8 @@ class RawBackend:
         # cache dtype so the footprint matches what init_cache allocates
         kv_stack = jax.tree.map(lambda a: a.astype(self.dtype), kv_stack)
         return kvcache.cache_from_prefill(kv_stack, lengths, False,
-                                          pad_to=_clamp_pad(self.cfg, pad_to))
+                                          pad_to=_clamp_pad(self.cfg, pad_to),
+                                          window=self.cfg.sliding_window)
 
     def append(self, layer_cache, new_k, new_v, nk, nv, lengths):
         layer_k, layer_v = layer_cache
@@ -127,7 +141,8 @@ class _QuantBackendBase:
 
     def cache_from_prefill(self, kv_stack, lengths, pad_to=None):
         return kvcache.cache_from_prefill(kv_stack, lengths, True,
-                                          pad_to=_clamp_pad(self.cfg, pad_to))
+                                          pad_to=_clamp_pad(self.cfg, pad_to),
+                                          window=self.cfg.sliding_window)
 
     def append(self, layer_cache, new_k, new_v, nk, nv, lengths):
         layer_kq, layer_vq = layer_cache
@@ -153,6 +168,45 @@ class _QuantBackendBase:
         `benchmarks/decode_bandwidth.py`.
         """
         return kvcache.cache_physical_bytes(cache)
+
+    # ---- paged pool (serving/pages.py layout) --------------------------
+    def init_paged_cache(self, num_pages: int, page_size: int, batch: int,
+                         max_pages: int) -> pages_lib.PagedKVCache:
+        return pages_lib.init_paged_cache(
+            self.cfg, self.quantizer, num_pages, page_size, batch, max_pages)
+
+    def paged_append(self, layer_cache, new_k, new_v, nk, nv, page_table,
+                     lengths, active):
+        """Encode one token per slot and scatter it through the page table.
+
+        layer_cache is one layer's (K, V) pool slice — arrays
+        (P, page_size, n_kv, ...). Inactive slots write the reserved trash
+        page (see serving/pages.py)."""
+        layer_kq, layer_vq = layer_cache
+        qz = self.quantizer
+        ps = layer_kq.indices.shape[1]
+        new_kq = qz.encode(new_k, nk, qz.config.k_norm)
+        new_vq = qz.encode(new_v, nv, qz.config.v_norm)
+        return (
+            pages_lib.append_token_pages(layer_kq, new_kq, page_table,
+                                         lengths, active, ps),
+            pages_lib.append_token_pages(layer_vq, new_vq, page_table,
+                                         lengths, active, ps),
+        )
+
+    def paged_attend(self, q, layer_cache, nk, nv, page_table, lengths):
+        """XLA fallback indirection: materialize the contiguous
+        (B, max_pages*ps, ...) gather, then run the dense quant attend.
+        Bitwise-identical to a contiguous cache of the same width (parity
+        oracle for the kernel path)."""
+        layer_kq, layer_vq = layer_cache
+        ps = layer_kq.indices.shape[1]
+        dense_k = pages_lib.gather_pages(layer_kq, page_table, ps)
+        dense_v = pages_lib.gather_pages(layer_vq, page_table, ps)
+        y_dtype = getattr(self, "y_dtype", jnp.float32)
+        return kvcache.attend_quant_cache(
+            q, dense_k, dense_v, nk, nv, lengths, self.cfg, self.quantizer,
+            y_dtype=y_dtype)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -184,10 +238,16 @@ class QuantPallasBackend(_QuantBackendBase):
 
     interpret=None resolves at call time: compiled on TPU, interpreter
     everywhere else (CPU CI still exercises the same kernel body).
+
+    block_t overrides the kernel's VMEM-derived token-block size; setting
+    it to a paged engine's page_size makes the contiguous kernel's
+    accumulation order bit-for-bit the paged kernel's (parity tests and
+    the serve-throughput baseline use this).
     """
 
     name: str = "quant-pallas"
     interpret: Optional[bool] = None
+    block_t: Optional[int] = None
 
     def attend(self, q, layer_cache, nk, nv, n_valid):
         layer_kq, layer_vq = layer_cache
@@ -196,7 +256,7 @@ class QuantPallasBackend(_QuantBackendBase):
             interpret = jax.default_backend() != "tpu"
         return qattn_ops.attend_quant_cache_op(
             q, layer_kq, layer_vq, nk, nv, n_valid, self.cfg,
-            self.quantizer, interpret=interpret)
+            self.quantizer, interpret=interpret, block_t=self.block_t)
 
     def attend_stream_bytes(self, cache) -> int:
         """Cache bytes the kernel streams from HBM per decode step.
@@ -212,6 +272,18 @@ class QuantPallasBackend(_QuantBackendBase):
             return stored
         widen = 4 - cache.k.indices.dtype.itemsize
         return stored + widen * (cache.k.indices.size + cache.v.indices.size)
+
+    def paged_attend(self, q, layer_cache, nk, nv, page_table, lengths):
+        """Page-table indirection inside the kernel: each grid step's K/V
+        block resolves through the scalar-prefetched page table, streaming
+        only the pages each slot owns — no contiguous materialization."""
+        layer_kq, layer_vq = layer_cache
+        interpret = self.interpret
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return qattn_ops.paged_attend_quant_cache_op(
+            q, layer_kq, layer_vq, nk, nv, page_table, lengths, self.cfg,
+            self.quantizer, interpret=interpret)
 
 
 def get_backend(

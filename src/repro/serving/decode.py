@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.quantizer import KVQuantizer
-from repro.models import attention, common, mlp, moe, ssm, transformer, xlstm
+from repro.models import attention, common, ssm, transformer, xlstm
 from repro.serving import backends as backends_lib
 from repro.serving.backends import AttentionBackend
 
@@ -95,14 +95,8 @@ def decode_step(
                 common.rms_norm(carry, layer_params["norm1"], cfg.norm_eps),
                 positions, (ck, cv), lnk, lnv, lengths, cfg, be,
             )
-            xx = common.radd(carry, h)
-            inner = common.rms_norm(xx, layer_params["norm2"], cfg.norm_eps)
-            if cfg.moe_experts:
-                xx = common.radd(
-                    xx, moe.moe_block(layer_params["moe"], inner, cfg, cstr))
-            else:
-                xx = common.radd(
-                    xx, mlp.mlp_block(layer_params["mlp"], inner, cfg, cstr))
+            xx = transformer.ffn_residual(
+                layer_params, common.radd(carry, h), cfg, cstr)
             return xx, new_c
 
         x, new_kv = common.uscan(
@@ -169,6 +163,64 @@ def decode_step(
         return logits, DecodeState(cache=None, states=new_states)
 
     raise ValueError(f"decode not defined for family {cfg.family}")
+
+
+def decode_step_paged(
+    params,
+    cfg: ModelConfig,
+    cache,  # pages.PagedKVCache
+    tokens: jax.Array,  # (B, 1) int32 — one per decode slot
+    active: jax.Array,  # (B,) bool — slots currently serving a request
+    *,
+    backend: AttentionBackend,
+) -> tuple[jax.Array, object]:
+    """One decode step over the paged pool -> (logits (B, V), new cache).
+
+    The continuous-batching hot loop: every slot advances one token, with
+    the page table resolving each slot's scattered physical pages. Inactive
+    slots still execute (masked to the trash page / garbage logits the
+    scheduler ignores) so the step stays a single fixed-shape executable
+    while requests come and go mid-flight.
+    """
+    if cfg.family != "decoder":
+        raise ValueError(
+            f"paged decode is defined for family 'decoder', not "
+            f"{cfg.family!r}")
+    from repro.serving import pages as pages_lib
+
+    x = transformer.embed_inputs(params, cfg, {"tokens": tokens})
+    qz = backend.quantizer
+    lengths = cache.lengths
+    page_table = cache.page_table
+    positions = lengths[:, None]  # (B, 1) — each slot at its own position
+    nk, nv = transformer._layer_bins(qz, cfg.num_layers)
+
+    def body(carry, xs):
+        layer_params, ck, cv, lnk, lnv = xs
+        b = carry.shape[0]
+        q, k, v = attention.project_qkv(
+            layer_params["attn"],
+            common.rms_norm(carry, layer_params["norm1"], cfg.norm_eps),
+            positions, cfg)
+        new_c = backend.paged_append(
+            (ck, cv), k, v, lnk, lnv, page_table, lengths, active)
+        out = backend.paged_attend(
+            q, new_c, lnk, lnv, page_table, lengths + 1)
+        out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim
+                          ).astype(carry.dtype)
+        h = jnp.einsum("bsk,kd->bsd", out, layer_params["attn"]["wo"])
+        xx = transformer.ffn_residual(layer_params, common.radd(carry, h),
+                                      cfg)
+        return xx, new_c
+
+    x, new_kv = common.uscan(
+        body, x, (params["layers"], cache.k, cache.v, nk, nv))
+    new_lengths = jnp.where(active, lengths + 1, lengths)
+    new_cache = pages_lib.PagedKVCache(
+        k=new_kv[0], v=new_kv[1], page_table=page_table,
+        lengths=new_lengths)
+    logits = transformer.lm_logits(params, cfg, x)[:, 0]
+    return logits, new_cache
 
 
 def init_decode_state(

@@ -24,6 +24,7 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer
@@ -162,6 +163,19 @@ def generate(
     if prompt_lengths is None:
         prompt_lengths = jnp.full((b,), s_max, jnp.int32)
     prompt_lengths = jnp.asarray(prompt_lengths, jnp.int32)
+    if prompt_lengths.shape != (b,):
+        raise ValueError(
+            f"prompt_lengths must be shape ({b},), got "
+            f"{prompt_lengths.shape}")
+    lens_np = np.asarray(prompt_lengths)
+    if lens_np.min() < 1:
+        raise ValueError(
+            f"prompt_lengths must be >= 1 (a row needs at least one real "
+            f"token to sample from), got min {lens_np.min()}")
+    if lens_np.max() > s_max:
+        raise ValueError(
+            f"prompt_lengths exceed the prompt width {s_max} "
+            f"(max {lens_np.max()})")
     if cfg.family != "decoder" and bool(
             jnp.any(prompt_lengths != s_max)):
         # recurrent states (mamba / xlstm) process pad tokens during a

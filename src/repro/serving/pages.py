@@ -1,0 +1,240 @@
+"""Paged quantized KV cache: a global pool of fixed-size token pages.
+
+Angular quantization is random-access by construction — every token row is a
+fixed number of packed bits with no calibration state — so the compressed
+payload can live in non-contiguous fixed-size pages exactly like a raw
+vLLM-style block cache (the property FibQuant calls out as the enabler for
+paged compressed caches). This module provides the two halves:
+
+  * device side — `PagedKVCache`: layer-stacked pool arrays
+    `(L, P, page_size, n_kv, ...)` holding the *packed* payload (angle words
+    + norm nibbles + per-vector min/max), a `(B, max_pages)` page table of
+    physical page ids per decode slot, and per-slot `lengths`. Pages are
+    shared across layers: physical page p holds the same token range in
+    every layer, so the page table stays `O(B * max_pages)` instead of
+    growing with depth.
+
+  * host side — `PageAllocator`: the free-list control plane the scheduler
+    drives between jit'd steps. Allocation state never enters jit; the
+    device only ever sees the page table the allocator produced.
+
+Physical page 0 is reserved as the *trash page*: inactive decode slots in a
+running batch still execute the (masked) append scatter, and pointing their
+writes at page 0 keeps them from stomping live pages without a branch in the
+hot loop. The allocator therefore hands out ids 1..P-1.
+
+Per-page valid counts are derived, not stored: page j of a slot holds
+`clip(length - j*page_size, 0, page_size)` valid tokens (`page_valid_counts`)
+— masking in the attend paths uses the slot length directly, identical math
+to the contiguous cache's `_score_mask`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache import kvcache
+from repro.configs.base import ModelConfig
+from repro.core import packing
+from repro.core.quantizer import KVQuantizer, QuantizedKV
+
+
+class PagedKVCache(NamedTuple):
+    """Device-side paged pool + per-slot indirection.
+
+    k/v:        QuantizedKV pools, arrays (L, P, page_size, n_kv, ...)
+    page_table: (B, max_pages) int32 physical page ids (0 = unused/trash;
+                entries past a slot's allocation are masked via lengths)
+    lengths:    (B,) int32 — valid tokens per decode slot
+    """
+
+    k: QuantizedKV
+    v: QuantizedKV
+    page_table: jax.Array
+    lengths: jax.Array
+
+
+def pages_for_tokens(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold n_tokens (ceil; 0 tokens still costs 0 pages)."""
+    if n_tokens < 0:
+        raise ValueError(f"n_tokens must be >= 0, got {n_tokens}")
+    return -(-n_tokens // page_size)
+
+
+def page_payload_bytes(qz: KVQuantizer, cfg: ModelConfig,
+                       page_size: int) -> int:
+    """Payload bytes ONE physical page occupies across all layers (K + V)."""
+    c = qz.config
+    per_tok = (
+        packing.token_payload_bytes(
+            c.n_pairs, c.index_width,
+            c.k_norm.bits, c.resolved_storage)
+        + packing.token_payload_bytes(
+            c.n_pairs, c.index_width,
+            c.v_norm.bits, c.resolved_storage))
+    return cfg.num_attn_layers * cfg.num_kv_heads * page_size * per_tok
+
+
+def init_paged_cache(cfg: ModelConfig, qz: KVQuantizer, num_pages: int,
+                     page_size: int, batch: int,
+                     max_pages: int) -> PagedKVCache:
+    """Zero-filled pool + empty page tables.
+
+    `batch` is the number of decode slots, `max_pages` the page-table width
+    (the longest context any one slot may reach, in pages).
+    """
+    if cfg.sliding_window is not None:
+        raise ValueError(
+            "paged caches do not implement ring-buffer sliding windows; "
+            "use the contiguous cache for windowed configs")
+    if num_pages < 2:
+        raise ValueError(f"num_pages must be >= 2 (page 0 is reserved), "
+                         f"got {num_pages}")
+    lead = (cfg.num_attn_layers, num_pages, page_size, cfg.num_kv_heads)
+    return PagedKVCache(
+        k=kvcache._quantized_zeros(qz, lead, qz.config.k_norm),
+        v=kvcache._quantized_zeros(qz, lead, qz.config.v_norm),
+        page_table=jnp.zeros((batch, max_pages), jnp.int32),
+        lengths=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def cache_physical_bytes(cache: PagedKVCache) -> int:
+    """Pool-resident payload bytes (page table / lengths bookkeeping
+    excluded, mirroring the contiguous `cache_physical_bytes`)."""
+    return kvcache.cache_physical_bytes((cache.k, cache.v))
+
+
+def write_prompt_pages(pool: QuantizedKV, codes: QuantizedKV,
+                       page_ids: jax.Array, page_size: int) -> QuantizedKV:
+    """Scatter a prefill chunk's quantized codes into pool pages.
+
+    pool arrays: (L, P, page_size, n_kv, X); codes arrays: (L, C, n_kv, X)
+    with C == len(page_ids) * page_size (the scheduler pads prompts to a
+    whole number of pages; tail slots hold encoded padding that stays masked
+    until decode overwrites it — the same invariant as the dense engine).
+    """
+    n = page_ids.shape[0]
+
+    def put(pool_a, codes_a):
+        l = pool_a.shape[0]
+        resh = codes_a.reshape(l, n, page_size, *codes_a.shape[2:])
+        return pool_a.at[:, page_ids].set(resh.astype(pool_a.dtype))
+
+    return jax.tree.map(put, pool, codes)
+
+
+def append_token_pages(layer_pool: QuantizedKV, new_q: QuantizedKV,
+                       page_table: jax.Array, lengths: jax.Array,
+                       active: jax.Array, page_size: int) -> QuantizedKV:
+    """Write one token per decode slot at (page_table[i, len//ps], len%ps).
+
+    Operates on ONE layer's pool slice (the decode step scans layers with
+    the pool as scan xs): layer_pool arrays (P, ps, n_kv, X), new_q arrays
+    (B, 1, n_kv, X). Inactive slots are redirected to the reserved trash
+    page 0 so the scatter stays branch-free.
+    """
+    b = page_table.shape[0]
+    page_idx = jnp.clip(lengths // page_size, 0, page_table.shape[1] - 1)
+    phys = page_table[jnp.arange(b), page_idx]  # (B,)
+    phys = jnp.where(active, phys, 0)
+    offset = jnp.where(active, lengths % page_size, 0)
+
+    def put(pool_a, new_a):
+        return pool_a.at[phys, offset].set(new_a[:, 0].astype(pool_a.dtype))
+
+    return jax.tree.map(put, layer_pool, new_q)
+
+
+def gather_pages(pool: QuantizedKV, page_table: jax.Array,
+                 page_size: int) -> QuantizedKV:
+    """Materialize a contiguous (B, max_pages*ps, n_kv, X) view of one
+    layer's pool via the page table — the quant-xla fallback's indirection
+    (the Pallas kernel gathers per-page in its index_map instead and never
+    materializes this)."""
+    b, mp = page_table.shape
+
+    def take(pool_a):  # (P, ps, n_kv, X)
+        g = pool_a[page_table]  # (B, mp, ps, n_kv, X)
+        return g.reshape(b, mp * page_size, *pool_a.shape[2:])
+
+    return jax.tree.map(take, pool)
+
+
+def per_page_valid(length: int, max_pages: int, page_size: int) -> np.ndarray:
+    """(max_pages,) valid-token count per logical page of one slot."""
+    j = np.arange(max_pages)
+    return np.clip(int(length) - j * page_size, 0, page_size).astype(np.int64)
+
+
+class PageAllocator:
+    """Host-side free-list allocator over physical pages 1..P-1.
+
+    The scheduler calls this between jit'd steps; nothing here touches
+    device memory. Frees push onto the list tail and allocations pop from
+    it (LIFO), so recently freed pages are reused first — the property the
+    alloc-after-free tests pin (warm pages stay warm).
+    """
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError(
+                f"num_pages must be >= 2 (page 0 is reserved), "
+                f"got {num_pages}")
+        self.num_pages = num_pages
+        self.reset()
+
+    def reset(self) -> None:
+        # ascending ids at the tail so the first-ever allocation starts at
+        # page 1 (pop from the end)
+        self._free = list(range(self.num_pages - 1, 0, -1))
+        self._owned: dict[object, list[int]] = {}
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_live(self) -> int:
+        return sum(len(p) for p in self._owned.values())
+
+    def live_pages(self, owner=None) -> list[int]:
+        if owner is not None:
+            return list(self._owned.get(owner, ()))
+        return [p for pages in self._owned.values() for p in pages]
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int, owner) -> np.ndarray:
+        """Take n pages for `owner`; raises when the pool is exhausted (the
+        scheduler checks `can_alloc` first — running dry mid-admission is a
+        bug, not backpressure)."""
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} pages")
+        if n > len(self._free):
+            raise RuntimeError(
+                f"page pool exhausted: need {n}, have {len(self._free)} "
+                f"free of {self.num_pages - 1}")
+        got = [self._free.pop() for _ in range(n)]
+        self._owned.setdefault(owner, []).extend(got)
+        return np.asarray(got, np.int32)
+
+    def free(self, owner) -> int:
+        """Release every page owned by `owner`; returns how many."""
+        pages = self._owned.pop(owner, [])
+        self._free.extend(pages)
+        return len(pages)
+
+    def check_conservation(self) -> None:
+        """Free + live must partition pages 1..P-1 with no duplicates."""
+        live = self.live_pages()
+        seen = self._free + live
+        if len(seen) != len(set(seen)):
+            raise AssertionError("page aliasing: a page is on two lists")
+        if set(seen) != set(range(1, self.num_pages)):
+            raise AssertionError(
+                f"page leak: {len(seen)} accounted of {self.num_pages - 1}")

@@ -1,0 +1,466 @@
+"""Continuous-batching serving engine over the paged quantized KV cache.
+
+The static engine (`serving/engine.py`) runs one batch to completion: short
+requests strand their slot until the longest request drains, and nothing new
+is admitted mid-flight. This engine keeps a fixed set of decode *slots* and
+a global page pool, and drives three host-side control-plane moves between
+jit'd device steps:
+
+  admission   — when a slot and enough pages are free, the next queued
+                request is admitted: its pages are allocated, its prompt is
+                prefilled in fixed-size chunks (each chunk one jit call that
+                attends over the raw K/V prefix with `q_offset`, exactly the
+                math of full causal prefill), and the quantized chunk codes
+                are scattered into its pages.
+  decode      — ONE fixed-shape jit step advances every active slot one
+                token through `decode_step_paged` (page-table indirection in
+                the attention path; inactive slots are masked to the trash
+                page and their logits ignored).
+  eviction    — a slot finishing (EOS or its token budget) frees its pages
+                back to the allocator immediately and the slot becomes
+                admissible in the same scheduler tick.
+
+All device shapes are static: (num_slots, max_pages) page table, fixed page
+pool, fixed prefill chunk. The page table / lengths / active mask live as
+host numpy and are shipped per step (tiny); the pool arrays stay on device
+and are donated through every step.
+
+Token parity: with greedy sampling the per-request tokens are identical to
+the static engine's (chunk attention is the same causal math; the paged
+Pallas kernel accumulates bit-for-bit like the contiguous kernel at
+block_t == page_size) — pinned by tests/test_scheduler.py and gated by
+benchmarks/serve_throughput.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common, transformer
+from repro.serving import decode as decoding
+from repro.serving import engine as engine_lib
+from repro.serving import pages as pages_lib
+from repro.serving.backends import AttentionBackend
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One serving request. `arrival` is seconds relative to trace start
+    (0.0 = already queued); `max_new_tokens` caps generation (EOS may end
+    it earlier)."""
+
+    rid: int
+    tokens: np.ndarray  # (plen,) int32 prompt
+    max_new_tokens: int
+    arrival: float = 0.0
+
+    def __post_init__(self):
+        if len(self.tokens) < 1:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.rid}: max_new_tokens < 1")
+
+
+class RequestResult(NamedTuple):
+    rid: int
+    tokens: np.ndarray  # generated ids (includes the EOS if one fired)
+    prompt_len: int
+    ttft_s: float  # arrival -> first token
+    latency_s: float  # arrival -> last token
+    admitted_s: float  # arrival -> admission (queueing delay)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    num_slots: int = 4
+    page_size: int = 16
+    num_pages: int = 256  # physical pages incl. the reserved trash page
+    max_context: int = 1024  # longest prompt+generation any slot may reach
+    prefill_chunk: int = 32  # tokens per chunked-prefill jit call
+    max_burst: int = 8  # decode steps fused per device dispatch
+    eos_id: Optional[int] = None
+    sampling: engine_lib.SamplingConfig = engine_lib.SamplingConfig()
+
+    def __post_init__(self):
+        if self.prefill_chunk % self.page_size:
+            raise ValueError(
+                f"prefill_chunk ({self.prefill_chunk}) must be a multiple "
+                f"of page_size ({self.page_size}) so chunk writes land on "
+                f"page boundaries")
+        if self.max_burst < 1:
+            raise ValueError(f"max_burst must be >= 1, got {self.max_burst}")
+
+    @property
+    def max_pages(self) -> int:
+        return pages_lib.pages_for_tokens(self.max_context, self.page_size)
+
+
+class _Slot:
+    """Host-side state of one decode slot's in-flight request."""
+
+    def __init__(self, req: Request, first_token: int, t_admit: float,
+                 t_first: float):
+        self.req = req
+        self.generated = [int(first_token)]
+        self.t_admit = t_admit
+        self.t_first = t_first
+
+
+class PagedServingEngine:
+    """Continuous-batching engine; see module docstring for the loop."""
+
+    def __init__(self, params, cfg: ModelConfig,
+                 backend: AttentionBackend, sched: SchedulerConfig):
+        if cfg.family != "decoder":
+            raise ValueError(
+                f"paged serving is defined for family 'decoder', not "
+                f"{cfg.family!r}")
+        if cfg.sliding_window is not None:
+            raise ValueError(
+                "paged serving does not implement ring-buffer sliding "
+                "windows (pages are absolute-position tiles)")
+        if backend.quantizer is None:
+            raise ValueError(
+                "paged serving stores packed quantized pages; use a quant "
+                "backend (quant-pallas / quant-xla)")
+        self.params = params
+        self.cfg = cfg
+        self.backend = backend
+        self.sched = sched
+        self.allocator = pages_lib.PageAllocator(sched.num_pages)
+        self.pool = backend.init_paged_cache(
+            sched.num_pages, sched.page_size, sched.num_slots,
+            sched.max_pages)
+        # host-side control plane (shipped per step; tiny)
+        s = sched.num_slots
+        self.page_table = np.zeros((s, sched.max_pages), np.int32)
+        self.lengths = np.zeros((s,), np.int32)
+        self.active = np.zeros((s,), bool)
+        self.next_tok = np.zeros((s,), np.int32)
+        self.slots: list[Optional[_Slot]] = [None] * s
+        self._decode_fn = self._build_decode()
+        self._prefill_fns: dict[int, object] = {}  # bucket width -> jit fn
+
+    # ------------------------------------------------------------ builders --
+    def _build_decode(self):
+        """Burst decode: up to `k_steps` (<= max_burst) decode steps fused
+        into ONE device dispatch — a jitted while_loop whose body is
+        `decode_step_paged`. Slots that hit their budget (or EOS) mid-burst
+        freeze on device (active mask) and stop appending; the host picks
+        the burst length as min(remaining budget) over active slots, so in
+        the common case no slot idles inside a burst. This amortizes the
+        per-step dispatch the host-driven control plane would otherwise pay
+        per token (the static engine's fused loop pays it once per batch).
+
+        The host slices the page table to the pages actually live (bucketed
+        to powers of two, capped at max_pages — `_live_table_width`) before
+        each call, so the kernel's grid — and therefore the decode cost —
+        scales with the batch's real context, not the engine-wide maximum.
+        jit specializes one trace per sliced width, O(log max_pages) total.
+        """
+        cfg, backend, sc = self.cfg, self.backend, self.sched.sampling
+        s = self.sched.num_slots
+        max_burst = self.sched.max_burst
+        eos = self.sched.eos_id
+
+        def run(params, pool_k, pool_v, page_table, lengths, active,
+                tokens, remaining, k_steps, rng):
+            out0 = jnp.full((s, max_burst), -1, jnp.int32)
+            emitted0 = jnp.zeros((s,), jnp.int32)
+
+            def cond(c):
+                return (c[0] < k_steps) & jnp.any(c[4])
+
+            def body(c):
+                step, pk, pv, lens, act, toks, emitted, out, rng = c
+                rng, sub = jax.random.split(rng)
+                cache = pages_lib.PagedKVCache(pk, pv, page_table, lens)
+                logits, new_cache = decoding.decode_step_paged(
+                    params, cfg, cache, toks[:, None], act, backend=backend)
+                nxt = engine_lib.sample_tokens(sub, logits, sc)
+                nxt = jnp.where(act, nxt, toks)
+                out = jax.lax.dynamic_update_slice(
+                    out, jnp.where(act, nxt, -1)[:, None], (0, step))
+                emitted = emitted + act.astype(jnp.int32)
+                done = emitted >= remaining
+                if eos is not None:
+                    done = done | (act & (nxt == eos))
+                return (step + 1, new_cache.k, new_cache.v,
+                        new_cache.lengths, act & ~done, nxt, emitted, out,
+                        rng)
+
+            init = (jnp.asarray(0, jnp.int32), pool_k, pool_v, lengths,
+                    active, tokens, emitted0, out0, rng)
+            fin = jax.lax.while_loop(cond, body, init)
+            return fin[1], fin[2], fin[6], fin[7]  # pool_k, pool_v, emitted, out
+
+        return jax.jit(run, donate_argnums=(1, 2))
+
+    def _live_table_width(self, k: int) -> int:
+        """Page-table columns a k-step burst can touch, bucketed to the next
+        power of two (so at most O(log max_pages) decode variants compile)."""
+        ps = self.sched.page_size
+        longest = int(self.lengths[self.active].max()) + k
+        need = max(1, pages_lib.pages_for_tokens(longest, ps))
+        mp = 1
+        while mp < need:
+            mp *= 2
+        return min(mp, self.sched.max_pages)
+
+    def _prefill_fn(self, width: int):
+        """Chunked prefill for prompts bucketed to `width` tokens — ONE
+        device dispatch per admission.
+
+        An outer lax.scan walks the prompt's chunks: chunk c embeds tokens
+        [cC, cC+C), appends its raw K/V into a carried
+        (L, 1, width, n_kv, h) buffer, and attends causally over the buffer
+        with q_offset = cC — token t sees exactly keys [0, t], the same set
+        as full-width prefill, so the math (and the quantized codes
+        scattered into the chunk's pool pages, also in-jit) matches the
+        static engine. The request's first token is sampled in-jit from
+        the last valid position. One compile per bucket width.
+        """
+        if width in self._prefill_fns:
+            return self._prefill_fns[width]
+        cfg, qz = self.cfg, self.backend.quantizer
+        chunk = self.sched.prefill_chunk
+        ps = self.sched.page_size
+        sc = self.sched.sampling
+        n_chunks = width // chunk
+        nk, nv = transformer._layer_bins(qz, cfg.num_layers)
+
+        def one_chunk(params, tokens_c, chunk_idx, buf_k, buf_v):
+            x = transformer.embed_inputs(params, cfg, {"tokens": tokens_c})
+            offset = chunk_idx * chunk
+            positions = offset + jnp.arange(chunk)[None, :]
+
+            def body(carry, xs):
+                layer_params, bk, bv, lnk, lnv = xs
+                q, k, v = attention.project_qkv(
+                    layer_params["attn"],
+                    common.rms_norm(carry, layer_params["norm1"],
+                                    cfg.norm_eps),
+                    positions, cfg)
+                bk = jax.lax.dynamic_update_slice_in_dim(
+                    bk, k.astype(bk.dtype), offset, axis=1)
+                bv = jax.lax.dynamic_update_slice_in_dim(
+                    bv, v.astype(bv.dtype), offset, axis=1)
+                out = attention.blockwise_attention(
+                    q, bk, bv, causal=True, q_offset=offset)
+                out = out.reshape(1, chunk, cfg.num_heads * cfg.head_dim)
+                h = jnp.einsum("bsk,kd->bsd", out,
+                               layer_params["attn"]["wo"])
+                xx = transformer.ffn_residual(
+                    layer_params, common.radd(carry, h), cfg)
+                ck = qz.encode(k, lnk, qz.config.k_norm)
+                cv = qz.encode(v, lnv, qz.config.v_norm)
+                return xx, (bk, bv, ck, cv)
+
+            x, (nbk, nbv, ck, cv) = common.uscan(
+                body, x, (params["layers"], buf_k, buf_v, nk, nv))
+            return x, nbk, nbv, ck, cv
+
+        def run(params, tokens, page_groups, last_off, rng,
+                pool_k, pool_v):
+            # tokens (n_chunks, C); page_groups (n_chunks, C/ps) page ids
+            dt = jnp.dtype(cfg.compute_dtype)
+            buf_shape = (cfg.num_layers, 1, width, cfg.num_kv_heads,
+                         cfg.head_dim)
+            buf0 = (jnp.zeros(buf_shape, dt), jnp.zeros(buf_shape, dt))
+
+            def chunk_body(carry, xs):
+                (bk, bv), (pk, pv) = carry[:2], carry[2:]
+                tok_c, cidx, ids = xs
+                x, bk, bv, ck, cv = one_chunk(params, tok_c[None], cidx,
+                                              bk, bv)
+                ck = jax.tree.map(lambda a: a[:, 0], ck)  # drop batch=1
+                cv = jax.tree.map(lambda a: a[:, 0], cv)
+                pk = pages_lib.write_prompt_pages(pk, ck, ids, ps)
+                pv = pages_lib.write_prompt_pages(pv, cv, ids, ps)
+                return (bk, bv, pk, pv), x
+
+            (_, _, pool_k, pool_v), xs = jax.lax.scan(
+                chunk_body, (*buf0, pool_k, pool_v),
+                (tokens, jnp.arange(n_chunks, dtype=jnp.int32),
+                 page_groups))
+            # sample the first token in-jit from the last valid position
+            # (always inside the final chunk: buckets are ceil(plen/C)*C)
+            x_final = xs[n_chunks - 1]  # (1, C, D)
+            x_last = jax.lax.dynamic_slice_in_dim(x_final, last_off, 1,
+                                                  axis=1)
+            logits = transformer.lm_logits(params, cfg, x_last)[:, 0]
+            tok = engine_lib.sample_tokens(rng, logits, sc)
+            return tok, pool_k, pool_v
+
+        fn = jax.jit(run, donate_argnums=(5, 6))
+        self._prefill_fns[width] = fn
+        return fn
+
+    # ------------------------------------------------------------ admission --
+    def _pages_needed(self, req: Request) -> tuple[int, int]:
+        chunk = self.sched.prefill_chunk
+        width = -(-len(req.tokens) // chunk) * chunk  # bucketed prompt
+        span = max(width, len(req.tokens) + req.max_new_tokens)
+        return width, pages_lib.pages_for_tokens(span, self.sched.page_size)
+
+    def _admit(self, req: Request, slot: int, page_ids: np.ndarray,
+               width: int, rng: jax.Array, t_admit: float) -> None:
+        chunk = self.sched.prefill_chunk
+        ps = self.sched.page_size
+        plen = len(req.tokens)
+        n_chunks = width // chunk
+        pad = np.zeros((width,), np.int32)
+        pad[:plen] = req.tokens
+        pages_per_chunk = chunk // ps
+        last_off = (plen - 1) - (n_chunks - 1) * chunk
+        tok, pk, pv = self._prefill_fn(width)(
+            self.params, jnp.asarray(pad.reshape(n_chunks, chunk)),
+            jnp.asarray(page_ids[:n_chunks * pages_per_chunk].reshape(
+                n_chunks, pages_per_chunk)),
+            jnp.asarray(last_off, jnp.int32), rng, self.pool.k, self.pool.v)
+        self.pool = self.pool._replace(k=pk, v=pv)
+        first = int(tok[0])
+        row = np.zeros((self.sched.max_pages,), np.int32)
+        row[:len(page_ids)] = page_ids
+        self.page_table[slot] = row
+        self.lengths[slot] = plen
+        self.active[slot] = True
+        self.next_tok[slot] = first
+        self.slots[slot] = _Slot(req, first, t_admit,
+                                 time.perf_counter() - self._t0)
+
+    def _evict(self, slot: int, results: list, t_now: float) -> None:
+        st = self.slots[slot]
+        self.allocator.free(st.req.rid)
+        self.page_table[slot] = 0
+        self.lengths[slot] = 0
+        self.active[slot] = False
+        self.next_tok[slot] = 0
+        self.slots[slot] = None
+        results.append(RequestResult(
+            rid=st.req.rid,
+            tokens=np.asarray(st.generated, np.int32),
+            prompt_len=len(st.req.tokens),
+            ttft_s=st.t_first - st.req.arrival,
+            latency_s=t_now - st.req.arrival,
+            admitted_s=st.t_admit - st.req.arrival,
+        ))
+
+    def _finished(self, st: _Slot) -> bool:
+        if (self.sched.eos_id is not None
+                and st.generated[-1] == self.sched.eos_id):
+            return True
+        return len(st.generated) >= st.req.max_new_tokens
+
+    # ------------------------------------------------------------ main loop --
+    def run(self, requests: list[Request],
+            rng: Optional[jax.Array] = None) -> tuple[list[RequestResult],
+                                                      dict]:
+        """Serve a trace to completion. Returns (per-request results sorted
+        by rid, aggregate stats)."""
+        if rng is None:
+            rng = jax.random.PRNGKey(0)
+        for r in requests:
+            width, need = self._pages_needed(r)
+            if need > self.sched.num_pages - 1:
+                raise ValueError(
+                    f"request {r.rid} needs {need} pages; pool only has "
+                    f"{self.sched.num_pages - 1}")
+            if need > self.sched.max_pages:
+                # the chunk-bucketed prefill width also bounds the span:
+                # a prompt bucketed past max_context would overflow the
+                # page-table row even if plen + max_new fits
+                raise ValueError(
+                    f"request {r.rid} span (bucketed prompt {width} + "
+                    f"generation, {need} pages) exceeds max_context "
+                    f"{self.sched.max_context} ({self.sched.max_pages} "
+                    f"pages)")
+        pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        results: list[RequestResult] = []
+        self._t0 = time.perf_counter()
+        steps = 0
+        while pending or self.active.any():
+            now = time.perf_counter() - self._t0
+            # --- admission: FCFS while a slot + pages are available
+            while pending and pending[0].arrival <= now:
+                free_slots = [i for i in range(self.sched.num_slots)
+                              if not self.active[i]]
+                if not free_slots:
+                    break
+                req = pending[0]
+                width, need = self._pages_needed(req)
+                if not self.allocator.can_alloc(need):
+                    break  # FCFS head-of-line: wait for an eviction
+                pending.pop(0)
+                ids = self.allocator.alloc(need, req.rid)
+                rng, sub = jax.random.split(rng)
+                slot = free_slots[0]
+                self._admit(req, slot, ids, width, sub, now)
+                st = self.slots[slot]
+                if self._finished(st):  # budget 1 or instant EOS
+                    self._evict(slot, results,
+                                time.perf_counter() - self._t0)
+            if not self.active.any():
+                if pending:  # idle until the next arrival
+                    wait = pending[0].arrival - (time.perf_counter()
+                                                 - self._t0)
+                    if wait > 0:
+                        time.sleep(min(wait, 0.01))
+                continue
+            # --- one decode burst: k fused steps, k = min remaining budget
+            remaining = np.ones((self.sched.num_slots,), np.int32)
+            for i in range(self.sched.num_slots):
+                if self.active[i]:
+                    st = self.slots[i]
+                    remaining[i] = (st.req.max_new_tokens
+                                    - len(st.generated))
+            k = int(min(self.sched.max_burst,
+                        remaining[self.active].min()))
+            mp = self._live_table_width(k)
+            rng, sub = jax.random.split(rng)
+            pk, pv, emitted, out = self._decode_fn(
+                self.params, self.pool.k, self.pool.v,
+                jnp.asarray(self.page_table[:, :mp]),
+                jnp.asarray(self.lengths),
+                jnp.asarray(self.active), jnp.asarray(self.next_tok),
+                jnp.asarray(remaining), jnp.asarray(k, jnp.int32), sub)
+            self.pool = self.pool._replace(k=pk, v=pv)
+            emitted = np.asarray(emitted)
+            out = np.asarray(out)
+            steps += int(emitted.max(initial=0))
+            t_now = time.perf_counter() - self._t0
+            for i in range(self.sched.num_slots):
+                if not self.active[i] or emitted[i] == 0:
+                    continue
+                n = int(emitted[i])
+                self.lengths[i] += n  # each fed token's KV was appended
+                self.next_tok[i] = out[i, n - 1]
+                self.slots[i].generated.extend(int(t) for t in out[i, :n])
+                if self._finished(self.slots[i]):
+                    self._evict(i, results, t_now)
+        wall = time.perf_counter() - self._t0
+        self.allocator.check_conservation()
+        results.sort(key=lambda r: r.rid)
+        total_new = int(sum(len(r.tokens) for r in results))
+        lat = np.asarray([r.latency_s for r in results] or [0.0])
+        ttft = np.asarray([r.ttft_s for r in results] or [0.0])
+        stats = {
+            "num_requests": len(results),
+            "decode_steps": steps,
+            "wall_s": wall,
+            "new_tokens": total_new,
+            "tokens_per_sec": total_new / max(wall, 1e-9),
+            "latency_p50_s": float(np.percentile(lat, 50)),
+            "latency_p99_s": float(np.percentile(lat, 99)),
+            "ttft_p50_s": float(np.percentile(ttft, 50)),
+            "pool_bytes": pages_lib.cache_physical_bytes(self.pool),
+            "pages_total": self.sched.num_pages - 1,
+            "page_size": self.sched.page_size,
+        }
+        return results, stats
