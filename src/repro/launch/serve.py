@@ -13,6 +13,11 @@ page-pool scheduler (`repro.serving.scheduler`) — requests are admitted into
 decode slots mid-flight, evicted on EOS/budget with their pages freed
 immediately, and per-request latency/throughput stats are reported.
 Requires a quantized backend and a window-less config (e.g. qwen3-0.6b).
+
+Prefix caching: --paged --prefix-cache share --shared-prefix 256 gives every
+prompt a common 256-token "system prompt"; the first request prefills it
+once, and every later request maps those packed pages by reference
+(copy-on-write, refcount-tracked) and prefills only its own suffix.
 """
 from __future__ import annotations
 
@@ -63,6 +68,21 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="paged: tokens per chunked-prefill call "
                          "(multiple of --page-size)")
+    ap.add_argument("--prefix-cache", default="off",
+                    choices=scheduler_lib.PREFIX_MODES,
+                    help="paged: copy-on-write prefix caching. 'share' "
+                         "maps already-served prompt prefixes into new "
+                         "requests' page tables and prefills only the "
+                         "suffix; 'cold' uses the same prefill numerics "
+                         "without sharing (the parity baseline); 'off' "
+                         "matches the static engine bit-for-bit")
+    ap.add_argument("--prefix-pages", type=int, default=128,
+                    help="paged: LRU bound on pages the prefix trie may "
+                         "pin (only with --prefix-cache share)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many common random tokens to every "
+                         "prompt (a synthetic system prompt, to exercise "
+                         "--prefix-cache share)")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="stop a sequence when it samples this token")
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -89,14 +109,19 @@ def main(argv=None):
         lens = [int(x) for x in args.prompt_lens.split(",")]
     else:
         lens = [args.prompt_len] * args.batch
+    if args.shared_prefix:
+        lens = [n + args.shared_prefix for n in lens]
     batch, s_max = len(lens), max(lens)
     prompt_lengths = jnp.asarray(lens, jnp.int32)
 
     params, _ = transformer.init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(args.seed)
+    shared = rng.integers(0, cfg.vocab_size, args.shared_prefix)
     tokens = np.zeros((batch, s_max), np.int32)
     for i, n in enumerate(lens):
-        tokens[i, :n] = rng.integers(0, cfg.vocab_size, n)
+        tokens[i, :args.shared_prefix] = shared
+        tokens[i, args.shared_prefix:n] = rng.integers(
+            0, cfg.vocab_size, n - args.shared_prefix)
     prompts = jnp.asarray(tokens)
 
     if args.paged:
@@ -150,13 +175,17 @@ def _serve_paged(args, cfg, qz, backend, params, tokens, lens):
         per_req = pages_lib.pages_for_tokens(
             -(-max(lens) // chunk) * chunk + args.gen, args.page_size)
         num_pages = 1 + per_req * max(args.slots, 1) * 2
+    prefix_pages = args.prefix_pages
+    if args.prefix_cache == "share":
+        prefix_pages = min(prefix_pages, max(1, (num_pages - 1) // 2))
     sched = scheduler_lib.SchedulerConfig(
         num_slots=args.slots, page_size=args.page_size,
         num_pages=num_pages, max_context=max_context,
         prefill_chunk=chunk, eos_id=args.eos_id,
         sampling=engine.SamplingConfig(
             temperature=args.temperature, top_k=args.top_k,
-            top_p=args.top_p))
+            top_p=args.top_p),
+        prefix_cache=args.prefix_cache, prefix_pages=prefix_pages)
     eng = scheduler_lib.PagedServingEngine(params, cfg, backend, sched)
     results, stats = eng.run(requests, rng=jax.random.PRNGKey(args.seed))
     print(f"backend: {backend.name} (paged); slots={args.slots} "
@@ -168,7 +197,14 @@ def _serve_paged(args, cfg, qz, backend, params, tokens, lens):
               f"(ttft {r.ttft_s * 1e3:6.1f} ms): {r.tokens[:12]}")
     print(f"aggregate: {stats['tokens_per_sec']:.1f} tok/s, "
           f"p50 latency {stats['latency_p50_s'] * 1e3:.1f} ms, "
-          f"p99 {stats['latency_p99_s'] * 1e3:.1f} ms")
+          f"p99 {stats['latency_p99_s'] * 1e3:.1f} ms; prefill "
+          f"{stats['prefill_tokens_computed']} tok in "
+          f"{stats['prefill_chunks']} chunks")
+    if "prefix" in stats:
+        px = stats["prefix"]
+        print(f"prefix cache: {px['hits']} hits / {px['misses']} misses, "
+              f"{px['hit_tokens']} prompt tokens served from shared pages "
+              f"({px['nodes']} pages pinned, bound {px['max_pages']})")
     pool_mb = stats["pool_bytes"] / 1e6
     page_kb = pages_lib.page_payload_bytes(qz, cfg, args.page_size) / 1e3
     print(f"pool-resident payload: {pool_mb:.2f} MB "

@@ -68,23 +68,54 @@ def _clamp_pad(cfg: ModelConfig, pad_to):
 
 @runtime_checkable
 class AttentionBackend(Protocol):
-    """What `serving.decode` / `serving.engine` require of a backend."""
+    """What `serving.decode` / `serving.engine` require of a backend.
+
+    A backend owns one cache representation end to end; the engine never
+    inspects cache internals, only threads the opaque value between these
+    methods. All methods must be jit-traceable (they run inside the decode
+    while_loop) except the two byte-accounting queries, which run host-side
+    for reporting.
+    """
 
     name: str
     cfg: ModelConfig
     quantizer: Optional[KVQuantizer]
 
-    def init_cache(self, batch: int, seq_len: int): ...
+    def init_cache(self, batch: int, seq_len: int):
+        """Fresh zero-length layer-stacked cache for `batch` sequences of
+        up to `seq_len` cached tokens each."""
+        ...
 
-    def cache_from_prefill(self, kv_stack, lengths, pad_to=None): ...
+    def cache_from_prefill(self, kv_stack, lengths, pad_to=None):
+        """Wrap the prefill scan's layer-stacked K/V (already quantized
+        for quant backends) into this backend's cache, right-padded to
+        `pad_to` tokens; `lengths` is the (B,) valid-token vector."""
+        ...
 
-    def append(self, layer_cache, new_k, new_v, nk, nv, lengths): ...
+    def append(self, layer_cache, new_k, new_v, nk, nv, lengths):
+        """Write one new token's K/V per sequence at each row's own slot
+        `lengths[i]` (ring slot for windowed configs); `nk`/`nv` are the
+        layer's codebook sizes (ignored by the raw backend). Returns the
+        updated layer cache."""
+        ...
 
-    def attend(self, q, layer_cache, nk, nv, n_valid): ...
+    def attend(self, q, layer_cache, nk, nv, n_valid):
+        """Masked attention of (B, 1, n_heads, head_dim) queries over the
+        first `n_valid[i]` cached tokens of each row. Returns
+        (B, 1, n_heads, head_dim) outputs in f32."""
+        ...
 
-    def physical_bytes(self, cache) -> int: ...
+    def physical_bytes(self, cache) -> int:
+        """Stored payload bytes (what compression ratios are measured on;
+        bookkeeping arrays excluded)."""
+        ...
 
-    def attend_stream_bytes(self, cache) -> int: ...
+    def attend_stream_bytes(self, cache) -> int:
+        """Bytes the attend path actually reads from HBM per decode step —
+        the decode-bandwidth number (`benchmarks/decode_bandwidth.py`);
+        differs from `physical_bytes` when a path widens or
+        re-materializes data."""
+        ...
 
 
 @dataclasses.dataclass(frozen=True)

@@ -173,6 +173,7 @@ def decode_step_paged(
     active: jax.Array,  # (B,) bool — slots currently serving a request
     *,
     backend: AttentionBackend,
+    write_mask: Optional[jax.Array] = None,  # (B,) bool — slot may append
 ) -> tuple[jax.Array, object]:
     """One decode step over the paged pool -> (logits (B, V), new cache).
 
@@ -181,6 +182,15 @@ def decode_step_paged(
     slots still execute (masked to the trash page / garbage logits the
     scheduler ignores) so the step stays a single fixed-shape executable
     while requests come and go mid-flight.
+
+    `write_mask` is the copy-on-write append guard: a slot whose mask entry
+    is False keeps attending and advancing its length, but its K/V append
+    is redirected to the reserved trash page. The scheduler computes the
+    mask host-side from allocator refcounts (a slot owns its frontier page
+    exclusively <=> refcount == 1); in correct operation every active
+    slot's entry is True — the mask exists so a refcount bug corrupts only
+    the misbehaving slot's own stream, never a page another request (or
+    the prefix trie) is reading.
     """
     if cfg.family != "decoder":
         raise ValueError(
@@ -192,6 +202,7 @@ def decode_step_paged(
     qz = backend.quantizer
     lengths = cache.lengths
     page_table = cache.page_table
+    may_write = active if write_mask is None else active & write_mask
     positions = lengths[:, None]  # (B, 1) — each slot at its own position
     nk, nv = transformer._layer_bins(qz, cfg.num_layers)
 
@@ -203,7 +214,7 @@ def decode_step_paged(
             common.rms_norm(carry, layer_params["norm1"], cfg.norm_eps),
             positions, cfg)
         new_c = backend.paged_append(
-            (ck, cv), k, v, lnk, lnv, page_table, lengths, active)
+            (ck, cv), k, v, lnk, lnv, page_table, lengths, may_write)
         out = backend.paged_attend(
             q, new_c, lnk, lnv, page_table, lengths + 1)
         out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim

@@ -158,7 +158,38 @@ def generate(
     pad_id: int = 0,
     rng: Optional[jax.Array] = None,
 ) -> GenerationResult:
-    """Generate continuations for a (possibly ragged) batch of prompts."""
+    """Generate continuations for a (possibly ragged) batch of prompts.
+
+    The static-batch entry point: one prefill over the padded batch, then
+    a jit-compiled `lax.while_loop` of single-token decode steps through
+    `backend` (raw / quant-xla / quant-pallas — see `serving.backends`).
+    The loop exits as soon as every row has emitted `eos_id`, so a batch
+    of short answers does not pay for `max_new_tokens` steps. For
+    continuous batching over a shared page pool use
+    `serving.scheduler.PagedServingEngine` instead.
+
+    Args:
+        params, cfg: model parameters and config (any generating family;
+            ragged prompts require `family == "decoder"`).
+        backend: the attention-backend dispatch point; its cache
+            representation decides memory footprint and decode bandwidth.
+        prompts: (B, S_max) int32 token ids, right-padded.
+        prompt_lengths: (B,) valid tokens per row; None means every row
+            uses the full width. Validated eagerly (>= 1, <= S_max).
+        max_new_tokens: decode-step budget per row.
+        sampling: temperature / top-k / top-p; temperature 0 is greedy.
+        eos_id: stop a row once it samples this id (None: never).
+        pad_id: filler written after a row's EOS in the output buffer.
+        rng: sampling key (defaults to PRNGKey(0) for reproducibility).
+
+    Returns:
+        GenerationResult with (B, max_new_tokens) tokens, per-row
+        generated counts (EOS included), executed step count, and the
+        final cache (for compression reporting).
+
+    Compiled executables are cached per (cfg, backend, sampling, widths)
+    signature, so repeated calls at the same shapes are dispatch-only.
+    """
     b, s_max = prompts.shape
     if prompt_lengths is None:
         prompt_lengths = jnp.full((b,), s_max, jnp.int32)

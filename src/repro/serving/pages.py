@@ -171,12 +171,31 @@ def per_page_valid(length: int, max_pages: int, page_size: int) -> np.ndarray:
 
 
 class PageAllocator:
-    """Host-side free-list allocator over physical pages 1..P-1.
+    """Host-side refcounted free-list allocator over physical pages 1..P-1.
 
     The scheduler calls this between jit'd steps; nothing here touches
     device memory. Frees push onto the list tail and allocations pop from
     it (LIFO), so recently freed pages are reused first — the property the
     alloc-after-free tests pin (warm pages stay warm).
+
+    Copy-on-write sharing (the prefix cache, `serving/prefix.py`) is built
+    on per-page reference counts:
+
+      * `alloc(n, owner)` hands out fresh pages at refcount 1 — `owner`
+        holds the only reference and may write the page.
+      * `share(pages, owner)` adds `owner` as one more reference to pages
+        some other owner already holds (refcount += 1 each). A page with
+        refcount > 1 is *immutable*: the scheduler's append guard redirects
+        any write aimed at it to the trash page and treats the attempt as
+        an invariant violation.
+      * `release(owner)` drops every reference `owner` holds; a page
+        returns to the free list only when its refcount hits zero.
+        `free` is the same operation under its historical name.
+
+    The conservation invariant (`check_conservation`, pinned by hypothesis
+    tests) generalizes the exclusive-ownership one: free pages + distinct
+    referenced pages partition 1..P-1, and every page's refcount equals
+    the number of owners holding it.
     """
 
     def __init__(self, num_pages: int):
@@ -188,10 +207,12 @@ class PageAllocator:
         self.reset()
 
     def reset(self) -> None:
+        """Return to the all-free state (every refcount zero)."""
         # ascending ids at the tail so the first-ever allocation starts at
         # page 1 (pop from the end)
         self._free = list(range(self.num_pages - 1, 0, -1))
         self._owned: dict[object, list[int]] = {}
+        self._refs: dict[int, int] = {}
 
     @property
     def num_free(self) -> int:
@@ -199,20 +220,32 @@ class PageAllocator:
 
     @property
     def num_live(self) -> int:
-        return sum(len(p) for p in self._owned.values())
+        """Distinct pages with refcount >= 1 (shared pages count once)."""
+        return len(self._refs)
+
+    @property
+    def total_refs(self) -> int:
+        """Sum of refcounts == sum of per-owner holdings."""
+        return sum(self._refs.values())
 
     def live_pages(self, owner=None) -> list[int]:
+        """Pages `owner` references (or every referenced page, duplicates
+        included when shared across owners, if `owner` is None)."""
         if owner is not None:
             return list(self._owned.get(owner, ()))
         return [p for pages in self._owned.values() for p in pages]
+
+    def refcount(self, page: int) -> int:
+        """Current reference count of one physical page (0 = free)."""
+        return self._refs.get(int(page), 0)
 
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
 
     def alloc(self, n: int, owner) -> np.ndarray:
-        """Take n pages for `owner`; raises when the pool is exhausted (the
-        scheduler checks `can_alloc` first — running dry mid-admission is a
-        bug, not backpressure)."""
+        """Take n fresh pages for `owner` at refcount 1; raises when the
+        pool is exhausted (the scheduler checks `can_alloc` first — running
+        dry mid-admission is a bug, not backpressure)."""
         if n < 0:
             raise ValueError(f"cannot allocate {n} pages")
         if n > len(self._free):
@@ -220,21 +253,71 @@ class PageAllocator:
                 f"page pool exhausted: need {n}, have {len(self._free)} "
                 f"free of {self.num_pages - 1}")
         got = [self._free.pop() for _ in range(n)]
+        for p in got:
+            self._refs[p] = 1
         self._owned.setdefault(owner, []).extend(got)
         return np.asarray(got, np.int32)
 
-    def free(self, owner) -> int:
-        """Release every page owned by `owner`; returns how many."""
-        pages = self._owned.pop(owner, [])
-        self._free.extend(pages)
-        return len(pages)
+    def share(self, pages, owner) -> None:
+        """Add `owner` as one more reference to already-live `pages`
+        (refcount += 1 each). Sharing a free page, or the same page twice
+        under one owner, is a caller bug and raises."""
+        pages = [int(p) for p in pages]
+        held = set(self._owned.get(owner, ()))
+        for p in pages:
+            if p not in self._refs:
+                raise ValueError(f"cannot share free page {p}")
+            if p in held:
+                raise ValueError(
+                    f"owner {owner!r} already references page {p}")
+            held.add(p)  # catch duplicates within this call too
+        for p in pages:
+            self._refs[p] += 1
+        self._owned.setdefault(owner, []).extend(pages)
+
+    def release(self, owner) -> int:
+        """Drop every reference `owner` holds; pages whose refcount hits
+        zero return to the free list. Returns how many pages were actually
+        freed (shared pages survive their co-owners)."""
+        return self._release(self._owned.pop(owner, []))
+
+    def release_pages(self, owner, pages) -> int:
+        """Drop `owner`'s references to a subset of its pages (the prefix
+        trie's LRU eviction path). Returns how many pages were freed."""
+        held = self._owned.get(owner, [])
+        for p in pages:
+            held.remove(int(p))  # raises if owner never held it
+        if not held:
+            self._owned.pop(owner, None)
+        return self._release([int(p) for p in pages])
+
+    def _release(self, pages: list) -> int:
+        freed = 0
+        for p in pages:
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                del self._refs[p]
+                self._free.append(p)
+                freed += 1
+        return freed
+
+    # historical name: exclusive-ownership callers say "free"
+    free = release
 
     def check_conservation(self) -> None:
-        """Free + live must partition pages 1..P-1 with no duplicates."""
-        live = self.live_pages()
-        seen = self._free + live
-        if len(seen) != len(set(seen)):
-            raise AssertionError("page aliasing: a page is on two lists")
-        if set(seen) != set(range(1, self.num_pages)):
+        """Free + referenced pages must partition 1..P-1, and every page's
+        refcount must equal the number of owners holding it."""
+        live = set(self._refs)
+        if live & set(self._free):
+            raise AssertionError("page aliasing: a page is free AND live")
+        if live | set(self._free) != set(range(1, self.num_pages)):
             raise AssertionError(
-                f"page leak: {len(seen)} accounted of {self.num_pages - 1}")
+                f"page leak: {len(live) + len(self._free)} accounted of "
+                f"{self.num_pages - 1}")
+        by_owner: dict[int, int] = {}
+        for pages in self._owned.values():
+            for p in pages:
+                by_owner[p] = by_owner.get(p, 0) + 1
+        if by_owner != self._refs:
+            raise AssertionError(
+                "refcount drift: per-owner holdings disagree with refs")

@@ -1,0 +1,280 @@
+"""Copy-on-write prefix cache: a host-side trie over token-id blocks.
+
+Real serving traffic is dominated by shared prefixes — system prompts,
+few-shot templates — and the paged pool (`serving/pages.py`) already gives
+every request position-independent indirection over fixed-size pages of
+*packed quantized* K/V payload. Angular quantization is calibration-free
+and deterministic, so two requests whose prompts share their first
+`k * page_size` tokens produce **bit-identical** page payloads for those
+blocks; there is no reason to encode (or store) them twice.
+
+This module is the control plane for that sharing:
+
+  * The trie is keyed on *token-id blocks* of exactly `page_size` tokens.
+    A node at depth j maps the prompt prefix `tokens[:j*page_size]` to the
+    physical page holding that block's packed payload. Only whole blocks
+    are cached — the payload of a partial page would be completed by a
+    different suffix per request, so it is never shareable.
+
+  * `match(tokens)` walks the trie from the root and returns the pages of
+    the longest fully-cached prefix. The scheduler maps them straight into
+    the new request's page table via `PageAllocator.share` (refcount += 1)
+    and chunk-prefills only the uncovered suffix.
+
+  * `insert(tokens, page_ids)` registers a freshly prefilled prompt's full
+    blocks. The trie takes its own reference on every page it holds
+    (owner `PrefixTrie.OWNER`), so a cached page survives the request that
+    produced it and is freed only when both the trie and every sharing
+    request have dropped it.
+
+  * The trie is LRU-bounded (`max_pages` pinned pages): inserting past the
+    bound evicts least-recently-used *leaf* nodes first — evicting an
+    interior node would orphan its descendants, since a prefix hit must be
+    contiguous from the root. Eviction releases the trie's reference; the
+    page itself is freed by the allocator only at refcount zero, so an
+    in-flight request sharing it is never pulled out from under.
+
+Copy-on-write invariant: a page reachable from the trie always has
+refcount >= 1 (the trie's own ref) plus one per sharing request, so any
+page with refcount > 1 must never be written. The scheduler enforces this
+with an owned-page write mask on the append path; by construction appends
+only ever target pages past a request's full-prompt blocks, so the mask is
+defense-in-depth, not a hot-path branch.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.serving.pages import PageAllocator
+
+
+class _Node:
+    __slots__ = ("page", "children", "stamp")
+
+    def __init__(self, page: int, stamp: int):
+        self.page = page
+        self.children: dict[bytes, _Node] = {}
+        self.stamp = stamp
+
+
+class PrefixTrie:
+    """LRU-bounded trie of page-size token blocks -> refcounted pages.
+
+    All methods run on the host between jit'd steps; the trie never touches
+    device memory — it only decides which physical page ids a new request's
+    page table starts with.
+    """
+
+    #: allocator owner key under which the trie holds its page references
+    OWNER = "__prefix_trie__"
+
+    def __init__(self, allocator: PageAllocator, page_size: int,
+                 max_pages: int):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if max_pages < 0:
+            raise ValueError(f"max_pages must be >= 0, got {max_pages}")
+        self.allocator = allocator
+        self.page_size = page_size
+        self.max_pages = max_pages
+        self._roots: dict[bytes, _Node] = {}
+        self._clock = 0
+        self.num_nodes = 0
+        # observability: the serve CLI / benchmark report these
+        self.hits = 0
+        self.misses = 0
+        self.hit_tokens = 0
+        self.evictions = 0
+
+    # ------------------------------------------------------------ internals --
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _blocks(self, tokens: np.ndarray):
+        """Full page-size blocks of a prompt as hashable byte keys."""
+        ps = self.page_size
+        toks = np.ascontiguousarray(np.asarray(tokens, np.int32))
+        for j in range(len(toks) // ps):
+            yield toks[j * ps:(j + 1) * ps].tobytes()
+
+    # ------------------------------------------------------------ lookup -----
+    def match(self, tokens: np.ndarray) -> np.ndarray:
+        """Pages of the longest fully-cached prefix of `tokens`.
+
+        Returns an (n,) int32 array of physical page ids covering tokens
+        `[0, n * page_size)`; empty when even the first block misses. Every
+        node on the hit path is touched for LRU purposes. The caller still
+        owns nothing — it must `PageAllocator.share` the result before
+        using it (the trie's own reference alone does not protect against
+        the trie evicting the node a moment later).
+
+        Matching does NOT bump the hit/miss counters: an admission may
+        re-match the same blocked request every scheduler tick under
+        backpressure, and may use fewer blocks than matched
+        (`usable_prefix_tokens`). Call `record` once per *served* request
+        with the tokens actually mapped from shared pages.
+        """
+        pages = []
+        level = self._roots
+        stamp = self._tick()
+        for key in self._blocks(tokens):
+            node = level.get(key)
+            if node is None:
+                break
+            node.stamp = stamp
+            pages.append(node.page)
+            level = node.children
+        return np.asarray(pages, np.int32)
+
+    def record(self, served_tokens: int) -> None:
+        """Account one admitted request: `served_tokens` prompt tokens were
+        actually served from shared pages (0 counts as a miss)."""
+        if served_tokens:
+            self.hits += 1
+            self.hit_tokens += served_tokens
+        else:
+            self.misses += 1
+
+    # ------------------------------------------------------------ insert -----
+    def insert(self, tokens: np.ndarray, page_ids: np.ndarray) -> int:
+        """Register a prefilled prompt's full blocks; returns nodes added.
+
+        `page_ids` are the prompt's logical pages in order (the request's
+        page-table row); only the first `len(tokens) // page_size` entries
+        — the full blocks — are eligible. Blocks already present keep
+        their existing page (first writer wins; the duplicate payload is
+        bit-identical anyway and stays owned by the inserting request
+        alone). Insertion stops early, best-effort, when the LRU bound
+        cannot make room — never evicting a node on the path just walked.
+        """
+        added = 0
+        level = self._roots
+        stamp = self._tick()
+        path_nodes: list[_Node] = []
+        for j, key in enumerate(self._blocks(tokens)):
+            node = level.get(key)
+            if node is None:
+                if self.num_nodes >= self.max_pages and \
+                        not self._evict_lru(protect=path_nodes):
+                    break  # bound reached and nothing evictable
+                page = int(page_ids[j])
+                self.allocator.share([page], self.OWNER)
+                node = _Node(page, stamp)
+                level[key] = node
+                self.num_nodes += 1
+                added += 1
+            else:
+                node.stamp = stamp
+            path_nodes.append(node)
+            level = node.children
+        return added
+
+    # ------------------------------------------------------------ eviction ---
+    def _leaves(self):
+        stack = [self._roots]
+        while stack:
+            level = stack.pop()
+            for key, node in level.items():
+                if node.children:
+                    stack.append(node.children)
+                else:
+                    yield level, key, node
+
+    def _evict_lru(self, protect: list) -> bool:
+        """Drop the least-recently-used leaf node; False when none exists
+        outside the protected path."""
+        protected = {id(n) for n in protect}
+        best = None
+        for level, key, node in self._leaves():
+            if id(node) in protected:
+                continue
+            if best is None or node.stamp < best[2].stamp:
+                best = (level, key, node)
+        if best is None:
+            return False
+        level, key, node = best
+        del level[key]
+        self.num_nodes -= 1
+        self.evictions += 1
+        self.allocator.release_pages(self.OWNER, [node.page])
+        return True
+
+    def evict_one(self) -> bool:
+        """Drop the single least-recently-used leaf (the scheduler's
+        pool-pressure reclamation hook). Returns False when the trie is
+        empty."""
+        return self._evict_lru(protect=[])
+
+    def clear(self) -> int:
+        """Release every cached page back toward the allocator; returns how
+        many the allocator actually freed (pages still shared by in-flight
+        requests survive until those release them)."""
+        freed = self.allocator.release(self.OWNER)
+        self._roots = {}
+        self.num_nodes = 0
+        return freed
+
+    def check_bound(self) -> None:
+        """num_nodes must track the tree AND respect the LRU bound."""
+        count = sum(1 for _ in self._iter_nodes())
+        if count != self.num_nodes:
+            raise AssertionError(
+                f"node-count drift: counted {count}, tracked "
+                f"{self.num_nodes}")
+        if self.num_nodes > self.max_pages:
+            raise AssertionError(
+                f"LRU bound violated: {self.num_nodes} nodes > "
+                f"{self.max_pages}")
+        held = len(self.allocator.live_pages(self.OWNER))
+        if held != self.num_nodes:
+            raise AssertionError(
+                f"ref drift: trie holds {held} page refs for "
+                f"{self.num_nodes} nodes")
+
+    def _iter_nodes(self):
+        stack = list(self._roots.values())
+        while stack:
+            node = stack.pop()
+            yield node
+            stack.extend(node.children.values())
+
+    def stats(self) -> dict:
+        return {
+            "nodes": self.num_nodes,
+            "max_pages": self.max_pages,
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_tokens": self.hit_tokens,
+            "evictions": self.evictions,
+        }
+
+
+def usable_prefix_tokens(n_hit_tokens: int, prompt_len: int,
+                         prefill_chunk: int) -> int:
+    """Tokens of a trie hit the chunked prefill can actually skip.
+
+    Three caps on top of the raw hit length:
+
+      * chunk alignment — the suffix prefill starts on a `prefill_chunk`
+        boundary (its q_offset / page-group layout is chunk-granular), so
+        the skip rounds down to whole chunks;
+      * at least one live chunk — the request's first token is sampled
+        from the last prompt position inside the final prefill chunk, so a
+        fully-cached prompt still recomputes its last chunk;
+      * power-of-two chunk counts — the suffix-prefill executable is
+        compiled per (suffix width, skip), so arbitrary skips would
+        multiply jit variants without bound in a long-running server.
+        Rounding the skip down to 0/1/2/4/... chunks caps the variants at
+        O(widths · log max_skip); a real fixed-length system prompt lands
+        in one bucket anyway, and the rounded-off blocks simply recompute.
+    """
+    if prompt_len < 1:
+        raise ValueError(f"prompt_len must be >= 1, got {prompt_len}")
+    cap = (prompt_len - 1) // prefill_chunk
+    chunks = min(n_hit_tokens // prefill_chunk, cap)
+    if chunks > 0:
+        chunks = 1 << (chunks.bit_length() - 1)  # floor to power of two
+    return chunks * prefill_chunk

@@ -11,7 +11,12 @@ jit'd device steps:
                 prefilled in fixed-size chunks (each chunk one jit call that
                 attends over the raw K/V prefix with `q_offset`, exactly the
                 math of full causal prefill), and the quantized chunk codes
-                are scattered into its pages.
+                are scattered into its pages. With the copy-on-write prefix
+                cache on (`SchedulerConfig.prefix_cache == "share"`), the
+                prompt first walks a trie of already-served token blocks
+                (`serving/prefix.py`): cached prefix pages are mapped into
+                the page table by reference (refcount += 1) and only the
+                uncovered suffix is prefilled.
   decode      — ONE fixed-shape jit step advances every active slot one
                 token through `decode_step_paged` (page-table indirection in
                 the attention path; inactive slots are masked to the trash
@@ -46,6 +51,7 @@ from repro.models import attention, common, transformer
 from repro.serving import decode as decoding
 from repro.serving import engine as engine_lib
 from repro.serving import pages as pages_lib
+from repro.serving import prefix as prefix_lib
 from repro.serving.backends import AttentionBackend
 
 
@@ -76,8 +82,36 @@ class RequestResult(NamedTuple):
     admitted_s: float  # arrival -> admission (queueing delay)
 
 
+#: `SchedulerConfig.prefix_cache` modes. "off" is the legacy raw-buffer
+#: chunked prefill (bitwise-identical to the static engine). "cold" swaps
+#: in the requantized-prefix prefill numerics (see `_prefill_fn`) WITHOUT a
+#: trie — every request computes its whole prompt; this is the no-sharing
+#: baseline the prefix benchmark compares against. "share" adds the
+#: copy-on-write prefix trie on top of the exact same numerics, so a trace
+#: served under "share" emits bitwise-identical greedy tokens to "cold"
+#: while skipping the prefill of every cached prefix block.
+PREFIX_MODES = ("off", "cold", "share")
+
+
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
+    """Static configuration of the continuous-batching engine.
+
+    num_slots:      concurrent decode slots (the fixed device batch).
+    page_size:      tokens per physical page (== paged-kernel block size).
+    num_pages:      physical pool size, including the reserved trash page 0.
+    max_context:    longest prompt+generation any one slot may reach; sets
+                    the page-table width (`max_pages`).
+    prefill_chunk:  tokens per chunked-prefill step (a multiple of
+                    page_size so chunk writes land on page boundaries).
+    max_burst:      decode steps fused into one device dispatch.
+    eos_id:         stop a request early when it samples this token.
+    sampling:       temperature / top-k / top-p (greedy at temperature 0).
+    prefix_cache:   "off" | "cold" | "share" — see `PREFIX_MODES`.
+    prefix_pages:   LRU bound on pages the prefix trie may pin (mode
+                    "share" only). The trie can never pin the whole pool.
+    """
+
     num_slots: int = 4
     page_size: int = 16
     num_pages: int = 256  # physical pages incl. the reserved trash page
@@ -86,6 +120,8 @@ class SchedulerConfig:
     max_burst: int = 8  # decode steps fused per device dispatch
     eos_id: Optional[int] = None
     sampling: engine_lib.SamplingConfig = engine_lib.SamplingConfig()
+    prefix_cache: str = "off"
+    prefix_pages: int = 128  # LRU bound on trie-pinned pages ("share" mode)
 
     def __post_init__(self):
         if self.prefill_chunk % self.page_size:
@@ -95,6 +131,20 @@ class SchedulerConfig:
                 f"page boundaries")
         if self.max_burst < 1:
             raise ValueError(f"max_burst must be >= 1, got {self.max_burst}")
+        if self.prefix_cache not in PREFIX_MODES:
+            raise ValueError(
+                f"prefix_cache must be one of {PREFIX_MODES}, got "
+                f"{self.prefix_cache!r}")
+        if self.prefix_cache == "share":
+            if self.prefix_pages < 1:
+                raise ValueError(
+                    f"prefix_pages must be >= 1 in share mode, got "
+                    f"{self.prefix_pages}")
+            if self.prefix_pages >= self.num_pages - 1:
+                raise ValueError(
+                    f"prefix_pages ({self.prefix_pages}) would let the trie "
+                    f"pin the whole pool ({self.num_pages - 1} usable "
+                    f"pages); leave headroom for live requests")
 
     @property
     def max_pages(self) -> int:
@@ -113,7 +163,21 @@ class _Slot:
 
 
 class PagedServingEngine:
-    """Continuous-batching engine; see module docstring for the loop."""
+    """Continuous-batching serving engine over the paged quantized pool.
+
+    Drives the admission / burst-decode / eviction loop described in the
+    module docstring. Construct once per (params, model config, backend,
+    scheduler config) and call `run` with a request trace; the engine and
+    its compiled executables are reusable across traces (the benchmark
+    replays the same trace several times on one engine).
+
+    With `sched.prefix_cache == "share"` the engine additionally keeps a
+    copy-on-write prefix trie (`serving/prefix.py`): admission maps the
+    pages of an already-served prompt prefix straight into the new
+    request's page table (refcount += 1 per page, no recompute, no copy)
+    and chunk-prefills only the uncovered suffix. See docs/serving.md for
+    the page/refcount lifecycle.
+    """
 
     def __init__(self, params, cfg: ModelConfig,
                  backend: AttentionBackend, sched: SchedulerConfig):
@@ -144,8 +208,14 @@ class PagedServingEngine:
         self.active = np.zeros((s,), bool)
         self.next_tok = np.zeros((s,), np.int32)
         self.slots: list[Optional[_Slot]] = [None] * s
+        self.trie: Optional[prefix_lib.PrefixTrie] = None
+        if sched.prefix_cache == "share":
+            self.trie = prefix_lib.PrefixTrie(
+                self.allocator, sched.page_size, sched.prefix_pages)
         self._decode_fn = self._build_decode()
-        self._prefill_fns: dict[int, object] = {}  # bucket width -> jit fn
+        # (suffix bucket width, skipped prefix tokens) -> jit fn
+        self._prefill_fns: dict[tuple[int, int], object] = {}
+        self._prefix_load_fns: dict[int, object] = {}  # prefix pages -> fn
 
     # ------------------------------------------------------------ builders --
     def _build_decode(self):
@@ -169,7 +239,7 @@ class PagedServingEngine:
         max_burst = self.sched.max_burst
         eos = self.sched.eos_id
 
-        def run(params, pool_k, pool_v, page_table, lengths, active,
+        def run(params, pool_k, pool_v, page_table, lengths, active, owned,
                 tokens, remaining, k_steps, rng):
             out0 = jnp.full((s, max_burst), -1, jnp.int32)
             emitted0 = jnp.zeros((s,), jnp.int32)
@@ -182,7 +252,8 @@ class PagedServingEngine:
                 rng, sub = jax.random.split(rng)
                 cache = pages_lib.PagedKVCache(pk, pv, page_table, lens)
                 logits, new_cache = decoding.decode_step_paged(
-                    params, cfg, cache, toks[:, None], act, backend=backend)
+                    params, cfg, cache, toks[:, None], act, backend=backend,
+                    write_mask=owned)
                 nxt = engine_lib.sample_tokens(sub, logits, sc)
                 nxt = jnp.where(act, nxt, toks)
                 out = jax.lax.dynamic_update_slice(
@@ -213,31 +284,80 @@ class PagedServingEngine:
             mp *= 2
         return min(mp, self.sched.max_pages)
 
-    def _prefill_fn(self, width: int):
-        """Chunked prefill for prompts bucketed to `width` tokens — ONE
-        device dispatch per admission.
+    def _owned_write_mask(self, k: int) -> np.ndarray:
+        """(num_slots,) append guard for a k-step burst: True iff every
+        page the slot's appends could touch is owned exclusively
+        (refcount == 1).
 
-        An outer lax.scan walks the prompt's chunks: chunk c embeds tokens
-        [cC, cC+C), appends its raw K/V into a carried
-        (L, 1, width, n_kv, h) buffer, and attends causally over the buffer
-        with q_offset = cC — token t sees exactly keys [0, t], the same set
-        as full-width prefill, so the math (and the quantized codes
-        scattered into the chunk's pool pages, also in-jit) matches the
-        static engine. The request's first token is sampled in-jit from
-        the last valid position. One compile per bucket width.
+        Shared prefix pages always cover whole prompt blocks and appends
+        start at the prompt frontier, so in correct operation every active
+        slot passes; a failure means refcount bookkeeping broke, and
+        rather than let the device silently write a page the trie (or
+        another request) is reading, the scheduler raises — the device
+        mask exists so *other* callers of `decode_step_paged` get the
+        trash-redirect containment instead of corruption.
         """
-        if width in self._prefill_fns:
-            return self._prefill_fns[width]
+        mask = np.ones((self.sched.num_slots,), bool)
+        if self.trie is None:
+            return mask  # nothing ever calls share: every page rc == 1
+        ps = self.sched.page_size
+        for i in range(self.sched.num_slots):
+            if not self.active[i]:
+                continue
+            lo = int(self.lengths[i]) // ps
+            hi = (int(self.lengths[i]) + k - 1) // ps
+            for j in range(lo, min(hi, self.sched.max_pages - 1) + 1):
+                page = int(self.page_table[i, j])
+                if page == 0 or self.allocator.refcount(page) != 1:
+                    mask[i] = False
+                    break
+        if not mask[self.active].all():
+            bad = [i for i in range(self.sched.num_slots)
+                   if self.active[i] and not mask[i]]
+            raise RuntimeError(
+                f"copy-on-write violation: slots {bad} would append into "
+                f"a page they do not own exclusively")
+        return mask
+
+    def _prefill_fn(self, width: int, skip: int):
+        """Chunked prefill for a `width`-token suffix after a `skip`-token
+        shared prefix — ONE device dispatch per admission.
+
+        An outer lax.scan walks the suffix's chunks: chunk c embeds tokens
+        [skip+cC, skip+cC+C), appends its raw K/V into a carried
+        (L, 1, skip+width, n_kv, h) buffer, and attends causally over the
+        buffer with q_offset = skip + cC — token t sees exactly keys
+        [0, t], the same set as full-width prefill — while the chunk's
+        quantized codes scatter into its pool pages in-jit. The request's
+        first token is sampled in-jit from the last valid position. One
+        compile per (suffix bucket, skip) pair.
+
+        Prefix modes ("cold"/"share") add one twist: after a chunk's codes
+        are written, its buffer slice is overwritten with the *decoded*
+        codes, so every cross-chunk attention reads the requantized K/V — a
+        deterministic function of the codes alone. A later request that
+        maps the same pages (bit-identical codes) and prefills only its
+        suffix therefore reproduces the cold run's suffix computation
+        bit-for-bit: that is the whole parity story of the prefix cache.
+        Within-chunk attention still reads the raw K/V in both runs (chunk
+        boundaries are deterministic, so the two paths agree on that too).
+        Mode "off" keeps the raw buffer everywhere, which is what makes the
+        scheduler bitwise-match the *static* engine instead.
+        """
+        key = (width, skip)
+        if key in self._prefill_fns:
+            return self._prefill_fns[key]
         cfg, qz = self.cfg, self.backend.quantizer
         chunk = self.sched.prefill_chunk
         ps = self.sched.page_size
         sc = self.sched.sampling
+        requant = self.sched.prefix_cache != "off"
         n_chunks = width // chunk
         nk, nv = transformer._layer_bins(qz, cfg.num_layers)
 
         def one_chunk(params, tokens_c, chunk_idx, buf_k, buf_v):
             x = transformer.embed_inputs(params, cfg, {"tokens": tokens_c})
-            offset = chunk_idx * chunk
+            offset = skip + chunk_idx * chunk
             positions = offset + jnp.arange(chunk)[None, :]
 
             def body(carry, xs):
@@ -260,19 +380,36 @@ class PagedServingEngine:
                     layer_params, common.radd(carry, h), cfg)
                 ck = qz.encode(k, lnk, qz.config.k_norm)
                 cv = qz.encode(v, lnv, qz.config.v_norm)
+                if requant:
+                    # cross-chunk attention must see decode(codes), the
+                    # same bits a prefix-sharing run reconstructs from the
+                    # pool — overwrite AFTER this chunk's own attention
+                    bk = jax.lax.dynamic_update_slice_in_dim(
+                        bk, qz.decode(ck, lnk, qz.config.k_norm
+                                      ).astype(bk.dtype), offset, axis=1)
+                    bv = jax.lax.dynamic_update_slice_in_dim(
+                        bv, qz.decode(cv, lnv, qz.config.v_norm
+                                      ).astype(bv.dtype), offset, axis=1)
                 return xx, (bk, bv, ck, cv)
 
             x, (nbk, nbv, ck, cv) = common.uscan(
                 body, x, (params["layers"], buf_k, buf_v, nk, nv))
             return x, nbk, nbv, ck, cv
 
-        def run(params, tokens, page_groups, last_off, rng,
-                pool_k, pool_v):
-            # tokens (n_chunks, C); page_groups (n_chunks, C/ps) page ids
+        def run(params, tokens, page_groups, last_off, prefix_k, prefix_v,
+                rng, pool_k, pool_v):
+            # tokens (n_chunks, C) suffix; page_groups (n_chunks, C/ps)
+            # SUFFIX page ids; prefix_k/v (L, 1, skip, n_kv, h) decoded
+            # shared-prefix K/V (zero-width when skip == 0)
             dt = jnp.dtype(cfg.compute_dtype)
-            buf_shape = (cfg.num_layers, 1, width, cfg.num_kv_heads,
+            sfx_shape = (cfg.num_layers, 1, width, cfg.num_kv_heads,
                          cfg.head_dim)
-            buf0 = (jnp.zeros(buf_shape, dt), jnp.zeros(buf_shape, dt))
+            buf0 = (
+                jnp.concatenate([prefix_k.astype(dt),
+                                 jnp.zeros(sfx_shape, dt)], axis=2),
+                jnp.concatenate([prefix_v.astype(dt),
+                                 jnp.zeros(sfx_shape, dt)], axis=2),
+            )
 
             def chunk_body(carry, xs):
                 (bk, bv), (pk, pv) = carry[:2], carry[2:]
@@ -298,34 +435,112 @@ class PagedServingEngine:
             tok = engine_lib.sample_tokens(rng, logits, sc)
             return tok, pool_k, pool_v
 
-        fn = jax.jit(run, donate_argnums=(5, 6))
-        self._prefill_fns[width] = fn
+        fn = jax.jit(run, donate_argnums=(7, 8))
+        self._prefill_fns[key] = fn
+        return fn
+
+    def _prefix_load_fn(self, n_pages: int):
+        """jit'd (page_ids, pool_k, pool_v) -> decoded (L, 1, n*ps, n_kv, h)
+        K/V of a shared prefix, for the suffix prefill's carried buffer.
+
+        This is the only prefix cost a sharing request pays: an O(S·d)
+        gather + dequant instead of the O(S·d²) transformer forward the
+        cold path runs. Decoding here and decoding inside the cold path's
+        requant overwrite see bit-identical codes (pool scatter is
+        lossless), which is what makes shared and cold runs emit identical
+        tokens. One compile per prefix page count.
+        """
+        if n_pages in self._prefix_load_fns:
+            return self._prefix_load_fns[n_pages]
+        cfg, qz = self.cfg, self.backend.quantizer
+        ps = self.sched.page_size
+        nk, nv = transformer._layer_bins(qz, cfg.num_layers)
+        dt = jnp.dtype(cfg.compute_dtype)
+
+        def load(page_ids, pool_k, pool_v):
+            def take(pool_a):  # (L, P, ps, n_kv, X) -> (L, 1, n*ps, ...)
+                g = pool_a[:, page_ids]
+                return g.reshape(pool_a.shape[0], 1, n_pages * ps,
+                                 *pool_a.shape[3:])
+
+            kq = jax.tree.map(take, pool_k)
+            vq = jax.tree.map(take, pool_v)
+
+            def body(carry, xs):
+                kq_l, vq_l, lnk, lnv = xs
+                bk = qz.decode(kq_l, lnk, qz.config.k_norm).astype(dt)
+                bv = qz.decode(vq_l, lnv, qz.config.v_norm).astype(dt)
+                return carry, (bk, bv)
+
+            _, (bk, bv) = jax.lax.scan(body, 0, (kq, vq, nk, nv))
+            return bk, bv
+
+        fn = jax.jit(load)
+        self._prefix_load_fns[n_pages] = fn
         return fn
 
     # ------------------------------------------------------------ admission --
     def _pages_needed(self, req: Request) -> tuple[int, int]:
+        """(bucketed prompt width, worst-case pages for the whole span) —
+        the reservation a cold admission makes (a prefix hit shrinks the
+        fresh allocation by the shared pages at admission time)."""
         chunk = self.sched.prefill_chunk
         width = -(-len(req.tokens) // chunk) * chunk  # bucketed prompt
         span = max(width, len(req.tokens) + req.max_new_tokens)
         return width, pages_lib.pages_for_tokens(span, self.sched.page_size)
 
-    def _admit(self, req: Request, slot: int, page_ids: np.ndarray,
-               width: int, rng: jax.Array, t_admit: float) -> None:
+    def _match_prefix(self, req: Request) -> tuple[np.ndarray, int]:
+        """Trie walk for admission: (shared page ids, tokens skipped).
+
+        The raw hit is capped to whole prefill chunks and to one chunk
+        short of the full prompt (`prefix.usable_prefix_tokens`); pages
+        beyond the cap stay in the trie but are not mapped."""
+        if self.trie is None:
+            return np.zeros((0,), np.int32), 0
+        hit = self.trie.match(req.tokens)
+        skip = prefix_lib.usable_prefix_tokens(
+            len(hit) * self.sched.page_size, len(req.tokens),
+            self.sched.prefill_chunk)
+        return hit[:skip // self.sched.page_size], skip
+
+    def _admit(self, req: Request, slot: int, shared_ids: np.ndarray,
+               fresh_ids: np.ndarray, skip: int, rng: jax.Array,
+               t_admit: float) -> None:
+        """Prefill the request's uncovered suffix and activate its slot.
+
+        `shared_ids` are the prefix pages mapped from the trie (already
+        refcounted to this request, covering tokens [0, skip)); `fresh_ids`
+        are exclusively-owned pages for the suffix + generation span. The
+        suffix prefill writes ONLY into fresh pages — a request never
+        scatters into a page it does not own exclusively.
+        """
         chunk = self.sched.prefill_chunk
         ps = self.sched.page_size
         plen = len(req.tokens)
+        width = -(-(plen - skip) // chunk) * chunk  # bucketed suffix
         n_chunks = width // chunk
         pad = np.zeros((width,), np.int32)
-        pad[:plen] = req.tokens
+        pad[:plen - skip] = req.tokens[skip:]
         pages_per_chunk = chunk // ps
-        last_off = (plen - 1) - (n_chunks - 1) * chunk
-        tok, pk, pv = self._prefill_fn(width)(
+        last_off = (plen - skip - 1) - (n_chunks - 1) * chunk
+        if skip:
+            pfx_k, pfx_v = self._prefix_load_fn(skip // ps)(
+                jnp.asarray(shared_ids), self.pool.k, self.pool.v)
+        else:
+            empty = (self.cfg.num_layers, 1, 0, self.cfg.num_kv_heads,
+                     self.cfg.head_dim)
+            pfx_k = pfx_v = jnp.zeros(empty, self.cfg.compute_dtype)
+        tok, pk, pv = self._prefill_fn(width, skip)(
             self.params, jnp.asarray(pad.reshape(n_chunks, chunk)),
-            jnp.asarray(page_ids[:n_chunks * pages_per_chunk].reshape(
+            jnp.asarray(fresh_ids[:n_chunks * pages_per_chunk].reshape(
                 n_chunks, pages_per_chunk)),
-            jnp.asarray(last_off, jnp.int32), rng, self.pool.k, self.pool.v)
+            jnp.asarray(last_off, jnp.int32), pfx_k, pfx_v, rng,
+            self.pool.k, self.pool.v)
         self.pool = self.pool._replace(k=pk, v=pv)
+        self._prefill_chunks += n_chunks
+        self._prefill_tokens += width
         first = int(tok[0])
+        page_ids = np.concatenate([shared_ids, fresh_ids]).astype(np.int32)
         row = np.zeros((self.sched.max_pages,), np.int32)
         row[:len(page_ids)] = page_ids
         self.page_table[slot] = row
@@ -334,8 +549,16 @@ class PagedServingEngine:
         self.next_tok[slot] = first
         self.slots[slot] = _Slot(req, first, t_admit,
                                  time.perf_counter() - self._t0)
+        if self.trie is not None:
+            # register every full prompt block (idempotent along the hit
+            # path; the trie takes its own page refs, LRU-bounded)
+            self.trie.insert(req.tokens, page_ids)
 
     def _evict(self, slot: int, results: list, t_now: float) -> None:
+        """Retire a finished request: drop its page references (exclusive
+        pages return to the free list immediately; prefix pages survive on
+        the trie's / other sharers' refcounts), clear the slot, and record
+        the result."""
         st = self.slots[slot]
         self.allocator.free(st.req.rid)
         self.page_table[slot] = 0
@@ -362,8 +585,25 @@ class PagedServingEngine:
     def run(self, requests: list[Request],
             rng: Optional[jax.Array] = None) -> tuple[list[RequestResult],
                                                       dict]:
-        """Serve a trace to completion. Returns (per-request results sorted
-        by rid, aggregate stats)."""
+        """Serve a request trace to completion.
+
+        Requests are admitted FCFS as their `arrival` times pass and a
+        decode slot plus enough pool pages free up; the call blocks until
+        every request has finished. Raises ValueError up-front for any
+        request whose worst-case span cannot fit the pool or the page
+        table, so admission can never OOM mid-flight.
+
+        Returns `(results, stats)`: per-request `RequestResult`s sorted by
+        rid, and an aggregate dict with wall/throughput/latency
+        percentiles, pool accounting, prefill work counters
+        (`prefill_chunks`, `prefill_tokens_computed`, `prefill_wall_s`),
+        and — in prefix-cache "share" mode — a `prefix` sub-dict with this
+        run's trie hits/misses/hit_tokens/evictions.
+
+        The engine is reusable: a second `run` on the same instance keeps
+        compiled executables and (in "share" mode) the populated prefix
+        trie, which is how repeated traces get warm-prefix service.
+        """
         if rng is None:
             rng = jax.random.PRNGKey(0)
         for r in requests:
@@ -384,6 +624,10 @@ class PagedServingEngine:
         pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
         results: list[RequestResult] = []
         self._t0 = time.perf_counter()
+        self._prefill_chunks = 0
+        self._prefill_tokens = 0
+        prefill_wall = 0.0
+        trie0 = self.trie.stats() if self.trie is not None else None
         steps = 0
         while pending or self.active.any():
             now = time.perf_counter() - self._t0
@@ -394,14 +638,28 @@ class PagedServingEngine:
                 if not free_slots:
                     break
                 req = pending[0]
-                width, need = self._pages_needed(req)
-                if not self.allocator.can_alloc(need):
+                _, need = self._pages_needed(req)
+                shared, skip = self._match_prefix(req)
+                # take the request's refs on the hit pages FIRST so trie
+                # reclamation below can never free them out from under it
+                self.allocator.share(shared, req.rid)
+                n_fresh = need - len(shared)
+                while (self.trie is not None
+                       and not self.allocator.can_alloc(n_fresh)
+                       and self.trie.evict_one()):
+                    pass  # reclaim cached-but-unused prefix pages
+                if not self.allocator.can_alloc(n_fresh):
+                    self.allocator.release(req.rid)
                     break  # FCFS head-of-line: wait for an eviction
                 pending.pop(0)
-                ids = self.allocator.alloc(need, req.rid)
+                if self.trie is not None:
+                    self.trie.record(skip)
+                fresh = self.allocator.alloc(n_fresh, req.rid)
                 rng, sub = jax.random.split(rng)
                 slot = free_slots[0]
-                self._admit(req, slot, ids, width, sub, now)
+                t_pf = time.perf_counter()
+                self._admit(req, slot, shared, fresh, skip, sub, now)
+                prefill_wall += time.perf_counter() - t_pf
                 st = self.slots[slot]
                 if self._finished(st):  # budget 1 or instant EOS
                     self._evict(slot, results,
@@ -423,12 +681,14 @@ class PagedServingEngine:
             k = int(min(self.sched.max_burst,
                         remaining[self.active].min()))
             mp = self._live_table_width(k)
+            owned = self._owned_write_mask(k)
             rng, sub = jax.random.split(rng)
             pk, pv, emitted, out = self._decode_fn(
                 self.params, self.pool.k, self.pool.v,
                 jnp.asarray(self.page_table[:, :mp]),
                 jnp.asarray(self.lengths),
-                jnp.asarray(self.active), jnp.asarray(self.next_tok),
+                jnp.asarray(self.active), jnp.asarray(owned),
+                jnp.asarray(self.next_tok),
                 jnp.asarray(remaining), jnp.asarray(k, jnp.int32), sub)
             self.pool = self.pool._replace(k=pk, v=pv)
             emitted = np.asarray(emitted)
@@ -462,5 +722,15 @@ class PagedServingEngine:
             "pool_bytes": pages_lib.cache_physical_bytes(self.pool),
             "pages_total": self.sched.num_pages - 1,
             "page_size": self.sched.page_size,
+            "prefill_chunks": self._prefill_chunks,
+            "prefill_tokens_computed": self._prefill_tokens,
+            "prefill_wall_s": prefill_wall,
         }
+        if self.trie is not None:
+            self.trie.check_bound()
+            t1 = self.trie.stats()
+            stats["prefix"] = dict(
+                t1, **{k: t1[k] - trie0[k]
+                       for k in ("hits", "misses", "hit_tokens",
+                                 "evictions")})
         return results, stats

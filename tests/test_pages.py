@@ -58,6 +58,9 @@ def test_allocator_no_aliasing_and_conservation(num_pages, seed):
             live[rid] = set(got.tolist())
         alloc.check_conservation()
         assert alloc.num_free + alloc.num_live == num_pages - 1
+        # without `share` every live page has exactly one reference
+        # (refcounted sharing itself is covered by tests/test_prefix.py)
+        assert alloc.total_refs == alloc.num_live
 
 
 def test_allocator_reuses_freed_pages_first():

@@ -1,0 +1,320 @@
+"""Copy-on-write prefix cache: allocator refcount properties (hypothesis),
+trie LRU bound, the owned-page append guard, and end-to-end bitwise parity
+of shared-prefix vs cold serving through both quant backends."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.core import mixedkv, rates
+from repro.core.quantizer import KVQuantizer, QuantizerConfig
+from repro.models import transformer
+from repro.serving import backends as backends_lib
+from repro.serving import decode as decoding
+from repro.serving import pages, prefix, scheduler
+
+
+def _cfg(**kw):
+    base = dict(name="pfx", family="decoder", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=128,
+                head_dim=32)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _qz(cfg, storage="bitpack"):
+    return KVQuantizer(QuantizerConfig(
+        head_dim=cfg.head_dim, schedule=mixedkv.uniform(cfg.num_layers),
+        k_norm=rates.NORM_K8, v_norm=rates.NORM_V4_LOG, storage=storage))
+
+
+# ------------------------------------------------ allocator refcounts ------
+@settings(max_examples=25, deadline=None)
+@given(num_pages=st.integers(4, 48), seed=st.integers(0, 10_000))
+def test_refcount_conservation_under_share_release(num_pages, seed):
+    """Random alloc/share/release interleavings: free + distinct live pages
+    always partition 1..P-1, Σ refcounts == Σ per-owner holdings, and a
+    page only returns to the free list at refcount zero."""
+    rng = np.random.default_rng(seed)
+    alloc = pages.PageAllocator(num_pages)
+    held: dict[int, list] = {}
+    for step in range(60):
+        roll = rng.uniform()
+        if held and roll < 0.3:  # release a random owner
+            victim = int(rng.choice(list(held)))
+            before = {p: alloc.refcount(p) for p in held[victim]}
+            freed = alloc.release(victim)
+            assert freed == sum(1 for p, r in before.items() if r == 1)
+            del held[victim]
+        elif held and roll < 0.55:  # share an existing owner's pages
+            src = int(rng.choice(list(held)))
+            new_owner = 1000 + step
+            before = {p: alloc.refcount(p) for p in held[src]}
+            alloc.share(held[src], new_owner)
+            for p in held[src]:
+                assert alloc.refcount(p) == before[p] + 1
+            held[new_owner] = list(held[src])
+        else:  # fresh allocation
+            n = int(rng.integers(1, max(2, num_pages // 3)))
+            if not alloc.can_alloc(n):
+                continue
+            got = alloc.alloc(n, step)
+            assert all(alloc.refcount(p) == 1 for p in got)
+            held[step] = got.tolist()
+        alloc.check_conservation()
+        assert alloc.num_free + alloc.num_live == num_pages - 1
+        assert alloc.total_refs == sum(len(v) for v in held.values())
+    for owner in list(held):
+        alloc.release(owner)
+    assert alloc.num_free == num_pages - 1
+
+
+def test_share_rejects_free_and_duplicate_pages():
+    alloc = pages.PageAllocator(8)
+    got = alloc.alloc(2, "a")
+    with pytest.raises(ValueError):  # sharing a free page
+        alloc.share([7], "b")
+    alloc.share(got, "b")
+    with pytest.raises(ValueError):  # double-share under one owner
+        alloc.share([got[0]], "b")
+    assert alloc.release("a") == 0  # b still holds both
+    assert alloc.release("b") == 2
+    alloc.check_conservation()
+
+
+def test_release_pages_partial():
+    alloc = pages.PageAllocator(8)
+    got = alloc.alloc(3, "t")
+    assert alloc.release_pages("t", [got[1]]) == 1
+    assert alloc.refcount(got[1]) == 0
+    assert alloc.refcount(got[0]) == 1
+    with pytest.raises(ValueError):  # never held
+        alloc.release_pages("t", [got[1]])
+    alloc.release("t")
+    alloc.check_conservation()
+
+
+# ------------------------------------------------ trie ---------------------
+def _toks(rng, n):
+    return rng.integers(0, 128, n).astype(np.int32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), bound=st.integers(1, 12))
+def test_trie_lru_bound_respected(seed, bound):
+    """Random inserts/matches: node count never exceeds the bound, the
+    trie's page refs track its nodes, and allocator conservation holds."""
+    rng = np.random.default_rng(seed)
+    ps = 4
+    alloc = pages.PageAllocator(256)
+    trie = prefix.PrefixTrie(alloc, ps, bound)
+    for step in range(25):
+        plen = int(rng.integers(1, 7)) * ps
+        toks = _toks(rng, plen)
+        if rng.uniform() < 0.5 and step:
+            trie.match(toks)
+        else:
+            ids = alloc.alloc(plen // ps, ("req", step))
+            trie.insert(toks, ids)
+            alloc.release(("req", step))
+        trie.check_bound()
+        alloc.check_conservation()
+    # every request released its refs already, so after clearing the trie
+    # the whole pool must be free again
+    trie.clear()
+    assert alloc.num_free == 256 - 1
+    alloc.check_conservation()
+
+
+def test_trie_match_walks_longest_prefix_and_lru_evicts():
+    rng = np.random.default_rng(0)
+    ps = 4
+    alloc = pages.PageAllocator(64)
+    trie = prefix.PrefixTrie(alloc, ps, max_pages=4)
+    a = _toks(rng, 12)  # 3 blocks
+    ids_a = alloc.alloc(3, "a")
+    assert trie.insert(a, ids_a) == 3
+    # full hit, in order
+    np.testing.assert_array_equal(trie.match(a), ids_a)
+    # diverging block -> partial hit
+    b = np.concatenate([a[:8], _toks(rng, 4)])
+    np.testing.assert_array_equal(trie.match(b), ids_a[:2])
+    # a partial page never matches
+    assert trie.match(a[:ps - 1]).size == 0
+    # inserting past the bound evicts the LRU leaf, never the fresh path
+    c = _toks(rng, 8)
+    ids_c = alloc.alloc(2, "c")
+    assert trie.insert(c, ids_c) == 2  # 3 + 2 > 4 -> one eviction
+    trie.check_bound()
+    assert trie.num_nodes == 4
+    assert trie.evictions == 1
+    # the evicted page (a's deepest leaf, LRU) went back only after the
+    # owning request released it
+    alloc.release("a")
+    alloc.release("c")
+    alloc.check_conservation()
+    assert alloc.num_free == 64 - 1 - trie.num_nodes
+
+
+def test_usable_prefix_tokens_caps():
+    u = prefix.usable_prefix_tokens
+    assert u(0, 10, 8) == 0
+    assert u(16, 20, 8) == 16  # whole chunks, suffix remains
+    assert u(12, 20, 8) == 8  # rounds down to chunk
+    assert u(16, 16, 8) == 8  # fully-cached prompt keeps its last chunk
+    assert u(8, 8, 8) == 0
+    # skip buckets to power-of-two chunk counts (compile-variant bound)
+    assert u(24, 40, 8) == 16  # 3 usable chunks -> 2
+    assert u(41, 48, 8) == 32  # 5 -> 4
+    with pytest.raises(ValueError):
+        u(4, 0, 8)
+
+
+# ------------------------------------------------ append guard -------------
+def test_decode_write_mask_redirects_to_trash():
+    """A slot whose write_mask is False must append into the trash page,
+    leaving its table page bitwise untouched (copy-on-write containment)."""
+    cfg = _cfg()
+    qz = _qz(cfg)
+    params, _ = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    be = backends_lib.QuantPallasBackend(cfg, qz, interpret=True)
+    ps = 4
+    pool = be.init_paged_cache(num_pages=8, page_size=ps, batch=2,
+                               max_pages=2)
+    pt = jnp.asarray([[2, 3], [4, 5]], jnp.int32)
+    cache = pages.PagedKVCache(pool.k, pool.v, pt, jnp.asarray([1, 1]))
+    toks = jnp.asarray([[7], [9]], jnp.int32)
+    active = jnp.asarray([True, True])
+    logits_m, cache_m = decoding.decode_step_paged(
+        params, cfg, cache, toks, active, backend=be,
+        write_mask=jnp.asarray([True, False]))
+    _, cache_w = decoding.decode_step_paged(
+        params, cfg, cache, toks, active, backend=be)
+    # masked slot 1: its page 4 stays all-zero; unmasked writes differ
+    assert (np.asarray(cache_m.k.indices[:, 4]) == 0).all()
+    assert not (np.asarray(cache_w.k.indices[:, 4]) == 0).all()
+    # slot 0 is unaffected by slot 1's mask
+    np.testing.assert_array_equal(np.asarray(cache_m.k.indices[:, 2]),
+                                  np.asarray(cache_w.k.indices[:, 2]))
+    # lengths still advance for both (the scheduler treats a masked active
+    # slot as an invariant violation; the mask only contains the damage)
+    np.testing.assert_array_equal(np.asarray(cache_m.lengths), [2, 2])
+
+
+def test_scheduler_raises_on_cow_violation():
+    """Corrupting refcounts so a slot's frontier page looks shared must
+    trip the scheduler's owned-page guard, not silently write."""
+    cfg = _cfg()
+    qz = _qz(cfg)
+    params, _ = transformer.init_params(jax.random.PRNGKey(1), cfg)
+    be = backends_lib.QuantPallasBackend(cfg, qz, interpret=True)
+    sched = scheduler.SchedulerConfig(
+        num_slots=1, page_size=4, num_pages=32, max_context=32,
+        prefill_chunk=8, max_burst=4, prefix_cache="share", prefix_pages=8)
+    eng = scheduler.PagedServingEngine(params, cfg, be, sched)
+    rng = np.random.default_rng(2)
+    req = scheduler.Request(0, rng.integers(0, 128, 6).astype(np.int32), 4)
+
+    orig_admit = eng._admit
+
+    def sabotage(*a, **kw):
+        orig_admit(*a, **kw)
+        # make the slot's append-frontier page look shared
+        frontier = int(eng.page_table[0, int(eng.lengths[0]) // 4])
+        eng.allocator.share([frontier], "saboteur")
+
+    eng._admit = sabotage
+    with pytest.raises(RuntimeError, match="copy-on-write violation"):
+        eng.run([req])
+
+
+# ------------------------------------------------ end-to-end parity --------
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    qz = _qz(cfg)
+    params, _ = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, qz, params
+
+
+def _shared_trace(rng, n=5, prefix_len=24):
+    system = rng.integers(0, 128, prefix_len).astype(np.int32)
+    return [scheduler.Request(
+        rid=i,
+        tokens=np.concatenate(
+            [system, rng.integers(0, 128, rng.integers(2, 10)
+                                  ).astype(np.int32)]),
+        max_new_tokens=int(rng.integers(2, 5)))
+        for i in range(n)]
+
+
+@pytest.mark.parametrize("backend_name", ["quant-pallas", "quant-xla"])
+def test_shared_prefix_bitwise_matches_cold_both_backends(setup,
+                                                          backend_name):
+    """A shared-prefix trace emits IDENTICAL greedy tokens with the prefix
+    cache sharing pages vs computing every prompt cold — through the
+    Pallas kernel path and the XLA gather fallback — while doing strictly
+    less prefill work and conserving pages throughout."""
+    cfg, qz, params = setup
+    if backend_name == "quant-pallas":
+        be = backends_lib.QuantPallasBackend(cfg, qz, interpret=True)
+    else:
+        be = backends_lib.QuantXLABackend(cfg, qz, y_dtype=jnp.float32)
+    reqs = _shared_trace(np.random.default_rng(7))
+
+    def run(mode):
+        sched = scheduler.SchedulerConfig(
+            num_slots=2, page_size=4, num_pages=96, max_context=48,
+            prefill_chunk=8, max_burst=4, prefix_cache=mode,
+            prefix_pages=16)
+        eng = scheduler.PagedServingEngine(params, cfg, be, sched)
+        res, stats = eng.run(reqs)
+        eng.allocator.check_conservation()
+        return [r.tokens for r in res], stats, eng
+
+    cold_toks, cold_stats, _ = run("cold")
+    share_toks, share_stats, eng = run("share")
+    for a, b in zip(share_toks, cold_toks):
+        np.testing.assert_array_equal(a, b)
+    assert share_stats["prefill_chunks"] < cold_stats["prefill_chunks"]
+    assert share_stats["prefix"]["hits"] >= len(reqs) - 1
+    # all request pages returned; only trie-pinned pages remain live
+    eng.trie.check_bound()
+    assert eng.allocator.num_free == 96 - 1 - eng.trie.num_nodes
+    eng.trie.clear()
+    assert eng.allocator.num_free == 96 - 1
+
+
+def test_share_reuses_trie_across_runs_and_respects_small_bound(setup):
+    """A second run on the same engine serves every prompt's prefix from
+    the trie; a tiny LRU bound still conserves pages and stays correct."""
+    cfg, qz, params = setup
+    be = backends_lib.QuantPallasBackend(cfg, qz, interpret=True)
+    reqs = _shared_trace(np.random.default_rng(9), n=4)
+    sched = scheduler.SchedulerConfig(
+        num_slots=2, page_size=4, num_pages=96, max_context=48,
+        prefill_chunk=8, max_burst=4, prefix_cache="share",
+        prefix_pages=3)  # < one prompt's full blocks: constant eviction
+    eng = scheduler.PagedServingEngine(params, cfg, be, sched)
+    res1, _ = eng.run(reqs)
+    res2, stats2 = eng.run(reqs)
+    for a, b in zip(res1, res2):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    eng.trie.check_bound()
+    assert eng.trie.num_nodes <= 3
+    eng.allocator.check_conservation()
+
+
+def test_prefix_cache_config_validation():
+    with pytest.raises(ValueError):  # unknown mode
+        scheduler.SchedulerConfig(prefix_cache="lru")
+    with pytest.raises(ValueError):  # trie could pin the whole pool
+        scheduler.SchedulerConfig(num_pages=8, prefix_cache="share",
+                                  prefix_pages=7)
+    with pytest.raises(ValueError):
+        scheduler.SchedulerConfig(prefix_cache="share", prefix_pages=0)
+    with pytest.raises(ValueError):
+        prefix.PrefixTrie(pages.PageAllocator(4), page_size=0, max_pages=1)

@@ -1,0 +1,116 @@
+"""Docs-rot gate: execute fenced python blocks and check markdown links.
+
+Every fenced ```python block in README.md and docs/*.md is extracted and
+run in its own subprocess with PYTHONPATH=src (each block must therefore be
+self-contained — its own imports, tiny configs, CPU-friendly). A block
+annotated with an HTML comment `<!-- docs: no-run -->` on the line directly
+above the fence is skipped (for illustrative fragments); blocks fenced as
+```text / ```bash / bare ``` are never executed.
+
+Relative markdown links (`[x](path)`) in the same files are resolved
+against each file's directory and must exist; external (scheme://) and
+pure-anchor links are ignored.
+
+CI runs this as the doc-snippet job, so documentation that drifts from the
+source breaks the build instead of silently rotting.
+
+Usage:
+    PYTHONPATH=src python tools/check_docs.py [files...]
+    (no args: README.md + docs/*.md from the repo root)
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+FENCE = re.compile(r"^```(\w*)\s*$")
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+NO_RUN = "<!-- docs: no-run -->"
+
+
+def extract_blocks(path: Path):
+    """Yield (start_line, code) for each runnable ```python block."""
+    lines = path.read_text().splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE.match(lines[i])
+        if m and m.group(1) == "python":
+            skip = i > 0 and lines[i - 1].strip() == NO_RUN
+            start = i + 1
+            body = []
+            i += 1
+            while i < len(lines) and not FENCE.match(lines[i]):
+                body.append(lines[i])
+                i += 1
+            if not skip:
+                yield start, "\n".join(body)
+        i += 1
+
+
+def run_block(path: Path, line: int, code: str) -> str | None:
+    """Execute one block; returns an error description or None."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    try:
+        proc = subprocess.run([sys.executable, "-c", code], cwd=ROOT,
+                              env=env, capture_output=True, text=True,
+                              timeout=600)
+    except subprocess.TimeoutExpired:
+        return (f"{path.relative_to(ROOT)}:{line}: python block timed out "
+                f"after 600s")
+    if proc.returncode != 0:
+        tail = "\n".join(proc.stderr.strip().splitlines()[-12:])
+        return (f"{path.relative_to(ROOT)}:{line}: python block failed "
+                f"(exit {proc.returncode})\n{tail}")
+    return None
+
+
+def check_links(path: Path) -> list[str]:
+    errs = []
+    for n, line in enumerate(path.read_text().splitlines(), 1):
+        for target in LINK.findall(line):
+            if "://" in target or target.startswith(("#", "mailto:")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (path.parent / rel).exists():
+                errs.append(f"{path.relative_to(ROOT)}:{n}: broken link "
+                            f"-> {target}")
+    return errs
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if argv:
+        files = [Path(a).resolve() for a in argv]
+    else:
+        files = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+    errors = []
+    n_blocks = 0
+    for f in files:
+        if not f.exists():
+            errors.append(f"missing documentation file: {f}")
+            continue
+        errors.extend(check_links(f))
+        for line, code in extract_blocks(f):
+            n_blocks += 1
+            print(f"running {f.relative_to(ROOT)}:{line} "
+                  f"({len(code.splitlines())} lines)", flush=True)
+            err = run_block(f, line, code)
+            if err:
+                errors.append(err)
+    print(f"{n_blocks} python blocks executed across {len(files)} files")
+    for e in errors:
+        print(f"DOCS CHECK FAILED: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
