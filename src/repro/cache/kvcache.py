@@ -169,6 +169,44 @@ def cache_from_prefill(kv_stack, lengths, quantized: bool,
 
 
 # ==================================================== cache update =========
+def pop_cache(cache, n, *, min_lengths=0, window: Optional[int] = None):
+    """Roll back the last `n` tokens of each sequence (speculative-decoding
+    rollback): a pure lengths decrement, validated.
+
+    Slots past the new frontier hold dead data that the next append
+    overwrites — exactly the invariant right-padded prefill slots already
+    rely on — so rolling back costs no device work. `n` is an int or (B,)
+    vector; `min_lengths` (int or (B,)) is the commit boundary a pop may
+    never descend below (typically the prefill frontier). Concrete inputs
+    are validated eagerly; traced values pass through (the paged verify
+    path does its accounting host-side instead — `pages.pop_tokens`).
+
+    Ring-buffer (windowed) caches may only pop while `lengths <= window`:
+    once the ring has wrapped, the slots the popped-back state would need
+    have been overwritten and cannot be restored.
+    """
+    lengths = cache.lengths
+    b = lengths.shape[0]
+    n = per_seq_lengths(n, b)  # validates n >= 0 when concrete
+    new_lengths = lengths - n
+    if not isinstance(new_lengths, jax.core.Tracer):
+        a = np.asarray(new_lengths)
+        lo = np.broadcast_to(np.asarray(min_lengths), a.shape)
+        if a.size and (a < lo).any():
+            raise ValueError(
+                f"pop would descend below the commit boundary: new lengths "
+                f"{a.tolist()} < min {lo.tolist()}")
+        if window is not None and not isinstance(lengths, jax.core.Tracer):
+            old = np.asarray(lengths)
+            popped = np.asarray(n)
+            if old.size and ((old > window) & (popped > 0)).any():
+                raise ValueError(
+                    f"cannot pop a wrapped ring cache (lengths "
+                    f"{old.tolist()} exceed window {window}): the popped-"
+                    f"back state's oldest slots were overwritten")
+    return cache._replace(lengths=new_lengths)
+
+
 def _insert_slots(lengths: jax.Array, window: Optional[int]) -> jax.Array:
     """(B,) ring-buffer write slots for the next token of each sequence."""
     if window is None:

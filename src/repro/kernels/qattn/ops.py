@@ -127,3 +127,12 @@ def paged_attend_quant_cache_op(
     )
     out = qz.unrotate_output(out_y)
     return out.reshape(b, 1, nq, h)
+
+
+# The speculative multi-token verify path reuses the op above as-is: the
+# backend layer (`backends.paged_attend_multi`) expands (slot, draft-row)
+# pairs into B*q_len independent rows with per-row causal frontiers
+# lengths[i]+j+1 (`qattn.verify_rows`) and calls the single-token op on
+# the expanded batch, so each verify row accumulates bit-for-bit like a
+# plain decode step at its own length — there is deliberately no separate
+# verify op to drift out of sync with this one.

@@ -423,3 +423,41 @@ def paged_qattn(
     )(page_table.astype(jnp.int32), lengths.astype(jnp.int32), bins,
       q_perm, k_idx, k_nq, k_rmin, k_rmax, v_idx, v_nq, v_rmin, v_rmax)
     return _from_split_half(out_perm)
+
+
+# ======================================================= verify rows ========
+def verify_rows(page_table: jax.Array, lengths: jax.Array, q_len: int
+                ) -> tuple[jax.Array, jax.Array]:
+    """Expand (slot, verify-row) pairs into independent kernel rows.
+
+    The speculative verify step scores `q_len` tokens per slot in ONE
+    `paged_qattn` dispatch by treating each (slot i, query row j) pair as
+    its own batch row with the per-row causal frontier
+
+        lengths[i] + j + 1
+
+    — query j attends over the prompt, every previously committed token,
+    and the j+1 tokens appended by this very dispatch (its own position
+    included), exactly the key set the plain single-token decode step
+    would see at that position. No new kernel body is needed: the paged
+    kernel already takes per-row lengths and a per-row page table, its
+    online-softmax walks pages in the same order at every length, and
+    pages past a row's frontier contribute exactly nothing — so each
+    expanded row accumulates BIT-FOR-BIT like a plain decode step at its
+    own length. That accumulation identity is what makes greedy
+    speculative decoding lossless rather than approximately so (pinned by
+    tests/test_speculate.py through both quant backends).
+
+    jit-variant discipline: `q_len` must be the *static* maximum
+    (draft_len + 1, shorter drafts padded) so a verify dispatch compiles
+    one trace per page-table width bucket — the existing pow-2 live-width
+    bucketing — and never a fresh variant per acceptance count. The
+    scheduler asserts this before dispatch.
+
+    Returns (row page table (B*q_len, max_pages), row lengths (B*q_len,)).
+    """
+    b = page_table.shape[0]
+    rows_table = jnp.repeat(page_table, q_len, axis=0)
+    rows_len = (jnp.asarray(lengths, jnp.int32)[:, None] + 1
+                + jnp.arange(q_len, dtype=jnp.int32)[None, :])
+    return rows_table, rows_len.reshape(b * q_len)

@@ -18,6 +18,12 @@ Prefix caching: --paged --prefix-cache share --shared-prefix 256 gives every
 prompt a common 256-token "system prompt"; the first request prefills it
 once, and every later request maps those packed pages by reference
 (copy-on-write, refcount-tracked) and prefills only its own suffix.
+
+Speculative decoding: --paged --speculate --draft-len 4 switches the decode
+loop to draft-verify-rollback (`repro.serving.speculate`): each dispatch
+scores the pending token plus up to 4 prompt-lookup drafts at once, commits
+the accepted run, and rolls back the rest. Greedy tokens are bitwise
+identical to the plain path; acceptance/steps-per-token stats are printed.
 """
 from __future__ import annotations
 
@@ -83,6 +89,18 @@ def main(argv=None):
                     help="prepend this many common random tokens to every "
                          "prompt (a synthetic system prompt, to exercise "
                          "--prefix-cache share)")
+    ap.add_argument("--speculate", action="store_true",
+                    help="paged: speculative draft-verify-rollback "
+                         "decoding (prompt-lookup self-drafting; greedy "
+                         "only — tokens stay bitwise identical, but "
+                         "repeated structure costs fewer sequential "
+                         "forward passes)")
+    ap.add_argument("--draft-len", type=int, default=4,
+                    help="paged: draft tokens per verify step "
+                         "(with --speculate)")
+    ap.add_argument("--draft-max-ngram", type=int, default=3,
+                    help="paged: longest trailing n-gram the drafter "
+                         "matches (with --speculate)")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="stop a sequence when it samples this token")
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -185,7 +203,9 @@ def _serve_paged(args, cfg, qz, backend, params, tokens, lens):
         sampling=engine.SamplingConfig(
             temperature=args.temperature, top_k=args.top_k,
             top_p=args.top_p),
-        prefix_cache=args.prefix_cache, prefix_pages=prefix_pages)
+        prefix_cache=args.prefix_cache, prefix_pages=prefix_pages,
+        speculate=args.speculate, draft_len=args.draft_len,
+        draft_max_ngram=args.draft_max_ngram)
     eng = scheduler_lib.PagedServingEngine(params, cfg, backend, sched)
     results, stats = eng.run(requests, rng=jax.random.PRNGKey(args.seed))
     print(f"backend: {backend.name} (paged); slots={args.slots} "
@@ -200,6 +220,14 @@ def _serve_paged(args, cfg, qz, backend, params, tokens, lens):
           f"p99 {stats['latency_p99_s'] * 1e3:.1f} ms; prefill "
           f"{stats['prefill_tokens_computed']} tok in "
           f"{stats['prefill_chunks']} chunks")
+    if "spec" in stats:
+        sp = stats["spec"]
+        print(f"speculative: draft_len {sp['draft_len']}; "
+              f"{sp['draft_accepted']}/{sp['draft_proposed']} drafts "
+              f"accepted ({sp['acceptance_rate']:.0%}); "
+              f"{sp['verify_steps']} forward passes for "
+              f"{sp['decode_tokens']} decode tokens = "
+              f"{sp['steps_per_token']:.2f} steps/token")
     if "prefix" in stats:
         px = stats["prefix"]
         print(f"prefix cache: {px['hits']} hits / {px['misses']} misses, "

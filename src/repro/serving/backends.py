@@ -18,6 +18,12 @@ The quantized backends additionally serve the paged pool
     paged_append(layer_cache, k, v, nk, nv, page_table, lengths, active)
     paged_attend(q, layer_cache, nk, nv, page_table, lengths)
 
+and the speculative-verify pair (q_len > 1, per-row causal offsets —
+serving/speculate.py drives these through the scheduler):
+
+    paged_append_multi(layer_cache, k, v, nk, nv, page_table, lengths, valid)
+    paged_attend_multi(q, layer_cache, nk, nv, page_table, lengths)
+
 quant-pallas resolves the page-table indirection inside the kernel
 (scalar-prefetched table feeding the BlockSpec index_map); quant-xla
 materializes the gather and runs the dense attend — its bitwise equality
@@ -54,6 +60,7 @@ from repro.cache import kvcache
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core.quantizer import KVQuantizer
 from repro.kernels.qattn import ops as qattn_ops
+from repro.kernels.qattn import qattn as qattn_kernels
 from repro.serving import pages as pages_lib
 
 BACKEND_NAMES = ("raw", "quant-xla", "quant-pallas")
@@ -238,6 +245,47 @@ class _QuantBackendBase:
         return kvcache.attend_quant_cache(
             q, dense_k, dense_v, nk, nv, lengths, self.cfg, self.quantizer,
             y_dtype=y_dtype)
+
+    # ---- speculative verify (q_len > 1, per-row causal offsets) --------
+    def paged_append_multi(self, layer_cache, new_k, new_v, nk, nv,
+                           page_table, lengths, valid):
+        """Optimistically append up to q_len tokens per slot in one
+        scatter (the draft-verify path's transactional write). new_k/v are
+        (B, q_len, n_kv, h); `valid` is the (B, q_len) write mask —
+        padding rows and non-owned / inactive slots are redirected to the
+        trash page. Rejected tokens are rolled back by bookkeeping alone
+        (`pages.pop_tokens`): their codes stay as dead bytes past the
+        frontier, masked by every attend path."""
+        layer_kq, layer_vq = layer_cache
+        qz = self.quantizer
+        ps = layer_kq.indices.shape[1]
+        new_kq = qz.encode(new_k, nk, qz.config.k_norm)
+        new_vq = qz.encode(new_v, nv, qz.config.v_norm)
+        return (
+            pages_lib.append_tokens_pages(layer_kq, new_kq, page_table,
+                                          lengths, valid, ps),
+            pages_lib.append_tokens_pages(layer_vq, new_vq, page_table,
+                                          lengths, valid, ps),
+        )
+
+    def paged_attend_multi(self, q, layer_cache, nk, nv, page_table,
+                           lengths):
+        """Score q_len tokens per slot in ONE dispatch: query row j of
+        slot i attends over the first `lengths[i] + j + 1` cached tokens
+        (per-row causal offsets — see `kernels.qattn.qattn.verify_rows`).
+        Implemented by expanding (slot, row) pairs into B*q_len
+        independent rows through this backend's own `paged_attend` —
+        the ONE verify implementation for both backends: the pallas
+        subclass dispatches to its fused kernel, the XLA subclass to its
+        gather oracle, so each row reproduces the plain decode step's
+        accumulation bit-for-bit on either path.
+        q: (B, q_len, nq, h) -> (B, q_len, nq, h) f32."""
+        b, q_len, nq, h = q.shape
+        rows_table, rows_len = qattn_kernels.verify_rows(
+            page_table, lengths, q_len)
+        out = self.paged_attend(q.reshape(b * q_len, 1, nq, h), layer_cache,
+                                nk, nv, rows_table, rows_len)
+        return out.reshape(b, q_len, nq, h)
 
 
 @dataclasses.dataclass(frozen=True)

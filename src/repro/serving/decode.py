@@ -234,6 +234,82 @@ def decode_step_paged(
     return logits, new_cache
 
 
+def verify_step_paged(
+    params,
+    cfg: ModelConfig,
+    cache,  # pages.PagedKVCache
+    tokens: jax.Array,  # (B, q_len) int32 — pending token + padded draft
+    active: jax.Array,  # (B,) bool — slots currently serving a request
+    n_fed: jax.Array,  # (B,) int32 — real tokens fed per slot (1..q_len)
+    *,
+    backend: AttentionBackend,
+    write_mask: Optional[jax.Array] = None,  # (B,) bool — slot may append
+) -> tuple[jax.Array, object]:
+    """One speculative VERIFY step -> (logits (B, q_len, V), new cache).
+
+    Scores q_len tokens per slot in one dispatch: slot i feeds its pending
+    token followed by draft_len proposed tokens (padded to the static
+    q_len; `n_fed[i]` marks the real ones). Per layer the q_len tokens'
+    K/V are appended *optimistically* into the slot's pages
+    (`paged_append_multi`; padding and non-owned slots redirect to the
+    trash page) and row j then attends over cache positions
+    [0, lengths[i] + j] — its own key included — via `paged_attend_multi`.
+    That is exactly the key set, and bit-for-bit the accumulation, the
+    plain `decode_step_paged` would produce feeding the same tokens one
+    step at a time, which is what makes greedy speculative decoding
+    lossless (tests/test_speculate.py).
+
+    The returned cache's `lengths` are NOT advanced: acceptance decides
+    the commit. The scheduler computes the accepted count on device
+    (`speculate.accepted_counts`), advances each row's length by it, and
+    rolls the rejected suffix back with `pages.pop_tokens` — pure
+    bookkeeping, since rejected codes past the frontier are masked by
+    every attend and overwritten by the next append.
+    """
+    if cfg.family != "decoder":
+        raise ValueError(
+            f"paged verify is defined for family 'decoder', not "
+            f"{cfg.family!r}")
+    from repro.serving import pages as pages_lib
+
+    b, q_len = tokens.shape
+    x = transformer.embed_inputs(params, cfg, {"tokens": tokens})
+    qz = backend.quantizer
+    lengths = cache.lengths
+    page_table = cache.page_table
+    may_write = active if write_mask is None else active & write_mask
+    # (B, q_len): which fed positions are real AND writable
+    valid = (jnp.arange(q_len, dtype=jnp.int32)[None, :]
+             < n_fed[:, None]) & may_write[:, None]
+    positions = lengths[:, None] + jnp.arange(q_len,
+                                              dtype=lengths.dtype)[None, :]
+    nk, nv = transformer._layer_bins(qz, cfg.num_layers)
+
+    def body(carry, xs):
+        layer_params, ck, cv, lnk, lnv = xs
+        q, k, v = attention.project_qkv(
+            layer_params["attn"],
+            common.rms_norm(carry, layer_params["norm1"], cfg.norm_eps),
+            positions, cfg)
+        new_c = backend.paged_append_multi(
+            (ck, cv), k, v, lnk, lnv, page_table, lengths, valid)
+        out = backend.paged_attend_multi(
+            q, new_c, lnk, lnv, page_table, lengths)
+        out = out.reshape(b, q_len, cfg.num_heads * cfg.head_dim
+                          ).astype(carry.dtype)
+        h = jnp.einsum("bsk,kd->bsd", out, layer_params["attn"]["wo"])
+        xx = transformer.ffn_residual(layer_params, common.radd(carry, h),
+                                      cfg)
+        return xx, new_c
+
+    x, new_kv = common.uscan(
+        body, x, (params["layers"], cache.k, cache.v, nk, nv))
+    new_cache = pages_lib.PagedKVCache(
+        k=new_kv[0], v=new_kv[1], page_table=page_table, lengths=lengths)
+    logits = transformer.lm_logits(params, cfg, x)
+    return logits, new_cache
+
+
 def init_decode_state(
     cfg: ModelConfig,
     batch: int,

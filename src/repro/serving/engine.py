@@ -42,6 +42,12 @@ class SamplingConfig(NamedTuple):
     top_k: int = 0
     top_p: float = 1.0
 
+    @property
+    def is_greedy(self) -> bool:
+        """True when sampling is deterministic argmax — the mode whose
+        tokens speculative decoding can reproduce losslessly."""
+        return self.temperature <= 0.0
+
 
 class GenerationResult(NamedTuple):
     tokens: jax.Array  # (B, max_new_tokens) int32; pad_id after a row's EOS

@@ -149,6 +149,104 @@ def append_token_pages(layer_pool: QuantizedKV, new_q: QuantizedKV,
     return jax.tree.map(put, layer_pool, new_q)
 
 
+def append_tokens_pages(layer_pool: QuantizedKV, new_q: QuantizedKV,
+                        page_table: jax.Array, lengths: jax.Array,
+                        valid: jax.Array, page_size: int) -> QuantizedKV:
+    """Write up to `q_len` tokens per decode slot in ONE scatter.
+
+    The speculative verify path's optimistic append: token j of slot i
+    lands at (page_table[i, (lengths[i]+j)//ps], (lengths[i]+j) % ps),
+    crossing page boundaries as needed. `valid` is a (B, q_len) bool mask
+    — verify dispatches are padded to a static q_len (one jit variant per
+    table width, never per acceptance count), and masked positions are
+    redirected to the reserved trash page 0, exactly like inactive slots
+    in the single-token `append_token_pages`.
+
+    layer_pool arrays: (P, ps, n_kv, X); new_q arrays: (B, q_len, n_kv, X).
+    """
+    b, q_len = valid.shape
+    pos = lengths[:, None] + jnp.arange(q_len, dtype=lengths.dtype)[None, :]
+    page_idx = jnp.clip(pos // page_size, 0, page_table.shape[1] - 1)
+    phys = jnp.take_along_axis(page_table, page_idx, axis=1)  # (B, q_len)
+    phys = jnp.where(valid, phys, 0).reshape(-1)
+    offset = jnp.where(valid, pos % page_size, 0).reshape(-1)
+
+    def put(pool_a, new_a):
+        flat = new_a.reshape(b * q_len, *new_a.shape[2:])
+        return pool_a.at[phys, offset].set(flat.astype(pool_a.dtype))
+
+    return jax.tree.map(put, layer_pool, new_q)
+
+
+def pop_tokens(allocator: "PageAllocator", owner, page_table_row: np.ndarray,
+               length: int, n: int, page_size: int, *,
+               min_length: int = 0, free_empty: bool = False
+               ) -> tuple[int, np.ndarray]:
+    """Transactional rollback: drop the last `n` tokens of one slot.
+
+    The speculative draft-verify-rollback loop appends draft tokens'
+    quantized K/V optimistically; when verification rejects a suffix, this
+    op pops it. Host-side control plane only (like the allocator): the
+    rejected codes stay in the pool as dead bytes past the new frontier —
+    masked by every attend path and overwritten by the next append — so no
+    device work is needed to roll back.
+
+    Validation (the invariants the rollback must never cross):
+
+      * `n >= 0` and `length - n >= min_length` — a pop may never descend
+        below the commit boundary the caller names (the prefill frontier,
+        which also covers any shared-prefix page's coverage, since shared
+        blocks are always whole prompt blocks).
+      * with `free_empty=True`, pages left *wholly* past the new frontier
+        (they held only popped tokens) are released back to the allocator
+        and their table entries zeroed. A page in that range with
+        refcount > 1 — shared with the prefix trie or another request —
+        raises instead of freeing: copy-on-write sharing means co-owners
+        still read it, and a shared page inside a popped suffix can only
+        mean the refcount bookkeeping broke. The partially-valid frontier
+        page is always kept.
+
+    The paged scheduler pops with `free_empty=False` mid-flight (its
+    admission reserved pages for the request's whole span — freeing them
+    would re-introduce mid-flight OOM) and `free_empty=True` when the
+    request finishes inside a verify step, so wholly-speculative tail
+    pages return through this validated path before eviction releases the
+    rest.
+
+    Returns `(new_length, freed_page_ids)`; mutates `page_table_row` in
+    place when pages are freed.
+    """
+    length, n = int(length), int(n)
+    if n < 0:
+        raise ValueError(f"cannot pop {n} tokens")
+    new_length = length - n
+    if new_length < min_length:
+        raise ValueError(
+            f"pop of {n} tokens from length {length} would descend below "
+            f"the commit boundary {min_length} (prefill / shared-prefix "
+            f"coverage)")
+    freed: list[int] = []
+    if free_empty and n > 0:
+        lo = pages_for_tokens(new_length, page_size)
+        hi = pages_for_tokens(length, page_size)
+        for j in range(lo, hi):
+            page = int(page_table_row[j])
+            if page == 0:
+                raise ValueError(
+                    f"pop range covers unmapped page-table entry {j} "
+                    f"(popped tokens must live in mapped pages)")
+            if allocator.refcount(page) > 1:
+                raise RuntimeError(
+                    f"copy-on-write violation: pop would free page {page} "
+                    f"(refcount {allocator.refcount(page)}) still shared "
+                    f"by the prefix trie or another request")
+            freed.append(page)
+        if freed:
+            allocator.release_pages(owner, freed)
+            page_table_row[lo:hi] = 0
+    return new_length, np.asarray(freed, np.int32)
+
+
 def gather_pages(pool: QuantizedKV, page_table: jax.Array,
                  page_size: int) -> QuantizedKV:
     """Materialize a contiguous (B, max_pages*ps, n_kv, X) view of one

@@ -25,6 +25,16 @@ jit'd device steps:
                 back to the allocator immediately and the slot becomes
                 admissible in the same scheduler tick.
 
+With `SchedulerConfig.speculate` on, the decode move becomes the
+draft–verify–rollback round of `serving/speculate.py`: every dispatch
+feeds each slot its pending token plus up to `draft_len` self-drafted
+(prompt-lookup) tokens, appends their K/V optimistically, scores all
+positions at once through the expanded-row paged attention path, commits
+the accepted run, and pops the rejected suffix (`pages.pop_tokens`).
+Greedy tokens stay bitwise-identical to plain decode; the win is strictly
+fewer sequential forward passes per token whenever output repeats
+structure (stats["spec"]["steps_per_token"] < 1).
+
 All device shapes are static: (num_slots, max_pages) page table, fixed page
 pool, fixed prefill chunk. The page table / lengths / active mask live as
 host numpy and are shipped per step (tiny); the pool arrays stay on device
@@ -52,6 +62,7 @@ from repro.serving import decode as decoding
 from repro.serving import engine as engine_lib
 from repro.serving import pages as pages_lib
 from repro.serving import prefix as prefix_lib
+from repro.serving import speculate as speculate_lib
 from repro.serving.backends import AttentionBackend
 
 
@@ -80,6 +91,10 @@ class RequestResult(NamedTuple):
     ttft_s: float  # arrival -> first token
     latency_s: float  # arrival -> last token
     admitted_s: float  # arrival -> admission (queueing delay)
+    # speculative-decoding accounting (zeros when speculation is off)
+    draft_proposed: int = 0  # draft tokens fed to verify steps
+    draft_accepted: int = 0  # of those, how many the model confirmed
+    verify_steps: int = 0  # sequential forward passes spent decoding
 
 
 #: `SchedulerConfig.prefix_cache` modes. "off" is the legacy raw-buffer
@@ -110,6 +125,19 @@ class SchedulerConfig:
     prefix_cache:   "off" | "cold" | "share" — see `PREFIX_MODES`.
     prefix_pages:   LRU bound on pages the prefix trie may pin (mode
                     "share" only). The trie can never pin the whole pool.
+    speculate:      draft-verify-rollback decoding (serving/speculate.py):
+                    each decode dispatch scores the pending token plus up
+                    to `draft_len` self-drafted tokens and commits the
+                    accepted run — fewer sequential steps, bitwise-equal
+                    greedy tokens. Requires greedy sampling (the lossless
+                    guarantee is argmax equality; stochastic sampling
+                    would need rejection-sampling corrections).
+    draft_len:      draft tokens proposed per verify step (the verify
+                    dispatch is always padded to q_len = draft_len + 1 —
+                    one compiled variant per table-width bucket, never one
+                    per acceptance count).
+    draft_max_ngram: longest trailing n-gram the prompt-lookup drafter
+                    tries to match (it backs off to shorter ones).
     """
 
     num_slots: int = 4
@@ -122,6 +150,9 @@ class SchedulerConfig:
     sampling: engine_lib.SamplingConfig = engine_lib.SamplingConfig()
     prefix_cache: str = "off"
     prefix_pages: int = 128  # LRU bound on trie-pinned pages ("share" mode)
+    speculate: bool = False
+    draft_len: int = 4  # draft tokens per verify step (q_len = draft_len+1)
+    draft_max_ngram: int = speculate_lib.DEFAULT_MAX_NGRAM
 
     def __post_init__(self):
         if self.prefill_chunk % self.page_size:
@@ -131,6 +162,20 @@ class SchedulerConfig:
                 f"page boundaries")
         if self.max_burst < 1:
             raise ValueError(f"max_burst must be >= 1, got {self.max_burst}")
+        if self.speculate:
+            if self.draft_len < 1:
+                raise ValueError(
+                    f"draft_len must be >= 1 with speculate, got "
+                    f"{self.draft_len}")
+            if self.draft_max_ngram < 1:
+                raise ValueError(
+                    f"draft_max_ngram must be >= 1, got "
+                    f"{self.draft_max_ngram}")
+            if not self.sampling.is_greedy:
+                raise ValueError(
+                    "speculative decoding requires greedy sampling "
+                    "(temperature 0): losslessness is argmax equality; "
+                    "stochastic acceptance is not implemented")
         if self.prefix_cache not in PREFIX_MODES:
             raise ValueError(
                 f"prefix_cache must be one of {PREFIX_MODES}, got "
@@ -160,6 +205,10 @@ class _Slot:
         self.generated = [int(first_token)]
         self.t_admit = t_admit
         self.t_first = t_first
+        # speculative-decoding accounting (stay zero when speculation off)
+        self.draft_proposed = 0
+        self.draft_accepted = 0
+        self.verify_steps = 0
 
 
 class PagedServingEngine:
@@ -213,6 +262,7 @@ class PagedServingEngine:
             self.trie = prefix_lib.PrefixTrie(
                 self.allocator, sched.page_size, sched.prefix_pages)
         self._decode_fn = self._build_decode()
+        self._verify_fn = self._build_verify() if sched.speculate else None
         # (suffix bucket width, skipped prefix tokens) -> jit fn
         self._prefill_fns: dict[tuple[int, int], object] = {}
         self._prefix_load_fns: dict[int, object] = {}  # prefix pages -> fn
@@ -273,6 +323,39 @@ class PagedServingEngine:
 
         return jax.jit(run, donate_argnums=(1, 2))
 
+    def _build_verify(self):
+        """Speculative verify: ONE device dispatch scores q_len =
+        draft_len + 1 tokens per slot (the pending token plus a padded
+        draft) through `verify_step_paged`, derives the greedy target at
+        every position, and computes the accepted-run length on device
+        (`speculate.accepted_counts`). The host then commits each slot's
+        accepted tokens and rolls the rejected suffix back with
+        `pages.pop_tokens` — the draft -> verify -> accept/rollback loop.
+
+        q_len is STATIC: short (or empty) drafts are padded and masked via
+        `n_fed`, so a verify dispatch compiles one trace per live
+        page-table width bucket (the same pow-2 bucketing plain bursts
+        use) and never a fresh jit variant per acceptance count — asserted
+        in the run loop before dispatch.
+        """
+        cfg, backend = self.cfg, self.backend
+        eos = self.sched.eos_id
+
+        def run(params, pool_k, pool_v, page_table, lengths, active, owned,
+                fed, n_fed):
+            cache = pages_lib.PagedKVCache(pool_k, pool_v, page_table,
+                                           lengths)
+            logits, new_cache = decoding.verify_step_paged(
+                params, cfg, cache, fed, active, n_fed, backend=backend,
+                write_mask=owned)
+            # greedy targets: bitwise the tokens sample_tokens(T=0) emits
+            targets = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            emit = speculate_lib.accepted_counts(targets, fed, n_fed, eos)
+            emit = jnp.where(active, jnp.minimum(emit, n_fed), 0)
+            return new_cache.k, new_cache.v, targets, emit
+
+        return jax.jit(run, donate_argnums=(1, 2))
+
     def _live_table_width(self, k: int) -> int:
         """Page-table columns a k-step burst can touch, bucketed to the next
         power of two (so at most O(log max_pages) decode variants compile)."""
@@ -284,10 +367,12 @@ class PagedServingEngine:
             mp *= 2
         return min(mp, self.sched.max_pages)
 
-    def _owned_write_mask(self, k: int) -> np.ndarray:
-        """(num_slots,) append guard for a k-step burst: True iff every
-        page the slot's appends could touch is owned exclusively
-        (refcount == 1).
+    def _owned_write_mask(self, k) -> np.ndarray:
+        """(num_slots,) append guard for a burst/verify dispatch writing
+        up to k tokens per slot (int, or a (num_slots,) vector — the
+        speculative path passes each slot's real fed count, since padded
+        verify positions never write): True iff every page the slot's
+        appends could touch is owned exclusively (refcount == 1).
 
         Shared prefix pages always cover whole prompt blocks and appends
         start at the prompt frontier, so in correct operation every active
@@ -301,11 +386,12 @@ class PagedServingEngine:
         if self.trie is None:
             return mask  # nothing ever calls share: every page rc == 1
         ps = self.sched.page_size
+        k = np.broadcast_to(np.asarray(k), (self.sched.num_slots,))
         for i in range(self.sched.num_slots):
             if not self.active[i]:
                 continue
             lo = int(self.lengths[i]) // ps
-            hi = (int(self.lengths[i]) + k - 1) // ps
+            hi = (int(self.lengths[i]) + int(k[i]) - 1) // ps
             for j in range(lo, min(hi, self.sched.max_pages - 1) + 1):
                 page = int(self.page_table[i, j])
                 if page == 0 or self.allocator.refcount(page) != 1:
@@ -318,6 +404,84 @@ class PagedServingEngine:
                 f"copy-on-write violation: slots {bad} would append into "
                 f"a page they do not own exclusively")
         return mask
+
+    # ------------------------------------------------------------ speculate --
+    def _spec_step(self, remaining: np.ndarray, results: list) -> None:
+        """One draft -> verify -> accept/rollback round over every active
+        slot (serving/speculate.py is the subsystem overview).
+
+        Host side: self-draft up to `draft_len` tokens per slot from its
+        own prompt+generated stream (capped at remaining-1 so even a fully
+        accepted run cannot overshoot the budget or the page reservation).
+        Device side: ONE verify dispatch appends the fed tokens' K/V
+        optimistically, scores every position, and returns the greedy
+        targets plus each slot's accepted-run length. Host again:
+        commit the accepted tokens, pop the rejected suffix
+        (`pages.pop_tokens` — validated bookkeeping; pages stay reserved
+        for the slot's span unless the request just finished, in which
+        case wholly-speculative tail pages are freed through the pop path
+        before eviction releases the rest).
+        """
+        s = self.sched.num_slots
+        ps = self.sched.page_size
+        q_len = self.sched.draft_len + 1
+        fed = np.zeros((s, q_len), np.int32)
+        n_fed = np.ones((s,), np.int32)
+        for i in range(s):
+            if not self.active[i]:
+                continue
+            st = self.slots[i]
+            ctx = np.concatenate([st.req.tokens,
+                                  np.asarray(st.generated, np.int32)])
+            draft = speculate_lib.propose_draft(
+                ctx, min(self.sched.draft_len, int(remaining[i]) - 1),
+                self.sched.draft_max_ngram)
+            m = 1 + len(draft)
+            fed[i, 0] = self.next_tok[i]
+            fed[i, 1:m] = draft
+            n_fed[i] = m
+            st.draft_proposed += m - 1
+            st.verify_steps += 1
+        # jit-variant discipline (see kernels/qattn: verify_rows): the
+        # dispatch shape is the STATIC q_len — acceptance counts and short
+        # drafts ride in n_fed — and the page table is sliced to the same
+        # pow-2 live-width buckets plain bursts use, so verify compiles
+        # O(log max_pages) variants total, never one per acceptance count.
+        assert fed.shape == (s, q_len)
+        mp = self._live_table_width(q_len)
+        assert mp & (mp - 1) == 0 or mp == self.sched.max_pages
+        owned = self._owned_write_mask(n_fed)
+        pk, pv, targets, emit = self._verify_fn(
+            self.params, self.pool.k, self.pool.v,
+            jnp.asarray(self.page_table[:, :mp]),
+            jnp.asarray(self.lengths), jnp.asarray(self.active),
+            jnp.asarray(owned), jnp.asarray(fed), jnp.asarray(n_fed))
+        self.pool = self.pool._replace(k=pk, v=pv)
+        targets = np.asarray(targets)
+        emit = np.asarray(emit)
+        t_now = time.perf_counter() - self._t0
+        for i in range(s):
+            if not self.active[i] or emit[i] == 0:
+                continue
+            st = self.slots[i]
+            e, m = int(emit[i]), int(n_fed[i])
+            st.generated.extend(int(t) for t in targets[i, :e])
+            st.draft_accepted += e - 1
+            self.next_tok[i] = int(targets[i, e - 1])
+            finished = self._finished(st)
+            # transactional commit: the verify appended m tokens' K/V
+            # optimistically; commit the accepted e, pop the rejected
+            # suffix. Pages stay reserved mid-flight (freeing them would
+            # re-introduce mid-flight OOM against the admission
+            # reservation); a finishing request frees its emptied
+            # speculative tail through the validated pop path instead.
+            new_len, _ = pages_lib.pop_tokens(
+                self.allocator, st.req.rid, self.page_table[i],
+                int(self.lengths[i]) + m, m - e, ps,
+                min_length=len(st.req.tokens), free_empty=finished)
+            self.lengths[i] = new_len
+            if finished:
+                self._evict(i, results, t_now)
 
     def _prefill_fn(self, width: int, skip: int):
         """Chunked prefill for a `width`-token suffix after a `skip`-token
@@ -573,6 +737,9 @@ class PagedServingEngine:
             ttft_s=st.t_first - st.req.arrival,
             latency_s=t_now - st.req.arrival,
             admitted_s=st.t_admit - st.req.arrival,
+            draft_proposed=st.draft_proposed,
+            draft_accepted=st.draft_accepted,
+            verify_steps=st.verify_steps,
         ))
 
     def _finished(self, st: _Slot) -> bool:
@@ -597,8 +764,11 @@ class PagedServingEngine:
         rid, and an aggregate dict with wall/throughput/latency
         percentiles, pool accounting, prefill work counters
         (`prefill_chunks`, `prefill_tokens_computed`, `prefill_wall_s`),
-        and — in prefix-cache "share" mode — a `prefix` sub-dict with this
-        run's trie hits/misses/hit_tokens/evictions.
+        in prefix-cache "share" mode a `prefix` sub-dict with this run's
+        trie hits/misses/hit_tokens/evictions, and with speculation on a
+        `spec` sub-dict (aggregate + per-request draft_proposed /
+        draft_accepted / acceptance_rate / verify_steps /
+        steps_per_token).
 
         The engine is reusable: a second `run` on the same instance keeps
         compiled executables and (in "share" mode) the populated prefix
@@ -671,13 +841,18 @@ class PagedServingEngine:
                     if wait > 0:
                         time.sleep(min(wait, 0.01))
                 continue
-            # --- one decode burst: k fused steps, k = min remaining budget
             remaining = np.ones((self.sched.num_slots,), np.int32)
             for i in range(self.sched.num_slots):
                 if self.active[i]:
                     st = self.slots[i]
                     remaining[i] = (st.req.max_new_tokens
                                     - len(st.generated))
+            if self.sched.speculate:
+                # --- draft -> verify -> accept/rollback: ONE dispatch
+                self._spec_step(remaining, results)
+                steps += 1
+                continue
+            # --- one decode burst: k fused steps, k = min remaining budget
             k = int(min(self.sched.max_burst,
                         remaining[self.active].min()))
             mp = self._live_table_width(k)
@@ -726,6 +901,35 @@ class PagedServingEngine:
             "prefill_tokens_computed": self._prefill_tokens,
             "prefill_wall_s": prefill_wall,
         }
+        if self.sched.speculate:
+            # draft/verify accounting: a request's decode-emitted tokens
+            # exclude its first token (sampled by prefill), so
+            # steps_per_token is sequential verify dispatches per token
+            # the decode loop produced — < 1.0 means speculation beat
+            # one-token-per-forward-pass.
+            proposed = sum(r.draft_proposed for r in results)
+            accepted = sum(r.draft_accepted for r in results)
+            vsteps = sum(r.verify_steps for r in results)
+            decode_tokens = total_new - len(results)
+            stats["spec"] = {
+                "draft_len": self.sched.draft_len,
+                "draft_proposed": proposed,
+                "draft_accepted": accepted,
+                "acceptance_rate": accepted / max(proposed, 1),
+                "verify_steps": vsteps,
+                "decode_tokens": decode_tokens,
+                "steps_per_token": vsteps / max(decode_tokens, 1),
+                "per_request": [
+                    {"rid": r.rid,
+                     "draft_proposed": r.draft_proposed,
+                     "draft_accepted": r.draft_accepted,
+                     "acceptance_rate": (r.draft_accepted
+                                         / max(r.draft_proposed, 1)),
+                     "verify_steps": r.verify_steps,
+                     "steps_per_token": (r.verify_steps
+                                         / max(len(r.tokens) - 1, 1))}
+                    for r in results],
+            }
         if self.trie is not None:
             self.trie.check_bound()
             t1 = self.trie.stats()

@@ -1,0 +1,121 @@
+"""Speculative decoding on the paged quantized cache: draft -> verify ->
+accept / rollback.
+
+PR 2-4 made decode *bandwidth*-light — the packed cache streams ~1/3 the
+bytes of a container cache per step — but every emitted token still costs
+one sequential forward pass. Speculative decoding converts that bandwidth
+headroom into fewer sequential steps: propose `draft_len` cheap candidate
+tokens, score all of them (plus the pending token) in ONE multi-row
+dispatch through the paged attention path, keep the longest prefix the
+model itself would have emitted, and roll the rest back. The compressed
+cache is what makes the verify step cheap — multi-token verification is a
+batch of random-access reads over the same packed pages the single-token
+step streams, exactly the property FibQuant argues a compressed KV cache
+must have to be deployable.
+
+The three pieces, and where they live:
+
+  draft    `propose_draft` (here, host-side) — prompt-lookup / n-gram
+           self-drafting: the candidate continuation after the request's
+           last tokens is whatever followed their most recent earlier
+           occurrence in the request's own prompt + generated stream. No
+           second model, no extra weights, works on every config in the
+           registry; acceptance is high exactly when the output has
+           repeated structure (code, templated text, looped sampling) and
+           gracefully degenerates to plain decode (empty draft) when the
+           history never repeats.
+
+  verify   `serving.decode.verify_step_paged` (device) — embeds the
+           pending token + draft, appends their quantized K/V to the
+           slot's pages *optimistically*, and scores every position in
+           one dispatch via the expanded-row paged kernel
+           (`kernels.qattn.qattn.verify_rows`): row j attends over
+           committed tokens plus the j+1 tokens this dispatch appended,
+           bit-for-bit the plain decode accumulation at that position.
+
+  accept   `accepted_counts` (here, device) — greedy targets t_j =
+           argmax(logits_j); the emitted run is t_0..t_{e-1} where e-1 is
+           the longest prefix of drafts matching their targets (EOS
+           cuts the run; the final target is the "bonus" token plain
+           decode would have produced anyway). The scheduler commits e
+           tokens and pops the rejected suffix with `pages.pop_tokens` —
+           bookkeeping only, rejected codes are dead bytes past the
+           frontier.
+
+Losslessness is a theorem here, not a tuning target: greedy speculative
+output is BITWISE identical to plain greedy decode on both quant backends
+(the verify rows reproduce the plain accumulation exactly), pinned by
+tests/test_speculate.py and gated by benchmarks/spec_decode.py. Stochastic
+sampling would need rejection-sampling corrections to stay lossless, so
+the scheduler only accepts speculation with greedy sampling.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+#: default longest n-gram the drafter tries to match (it backs off to
+#: shorter ones, so this is a cap, not a requirement)
+DEFAULT_MAX_NGRAM = 3
+
+
+def propose_draft(context: np.ndarray, draft_len: int,
+                  max_ngram: int = DEFAULT_MAX_NGRAM) -> np.ndarray:
+    """Prompt-lookup (n-gram) self-draft: the continuation after the most
+    recent earlier occurrence of the context's trailing n-gram.
+
+    Tries n = max_ngram..1: if `context[-n:]` occurred earlier in
+    `context` (with at least one token following it), proposes the up-to
+    `draft_len` tokens that followed its most recent occurrence. Returns
+    an empty array when nothing matches (the verify step then degenerates
+    to a plain decode step) or when `draft_len < 1`.
+
+    `context` is the request's full visible stream — prompt followed by
+    every emitted token, ending with the pending token about to be fed —
+    so drafting needs no model state and costs O(len * max_ngram) numpy
+    compares per step, host-side.
+    """
+    ctx = np.ascontiguousarray(np.asarray(context, np.int32))
+    n = len(ctx)
+    if draft_len < 1 or n < 2:
+        return np.zeros((0,), np.int32)
+    for ng in range(min(max_ngram, n - 1), 0, -1):
+        pattern = ctx[n - ng:]
+        # candidate starts i <= n-1-ng: the match must end before the last
+        # token so at least one continuation token exists
+        windows = np.lib.stride_tricks.sliding_window_view(ctx[:n - 1], ng)
+        hits = np.flatnonzero((windows == pattern).all(axis=1))
+        if hits.size:
+            start = int(hits[-1]) + ng  # most recent occurrence wins
+            return ctx[start:start + draft_len].copy()
+    return np.zeros((0,), np.int32)
+
+
+def accepted_counts(targets: jnp.ndarray, fed: jnp.ndarray,
+                    n_fed: jnp.ndarray,
+                    eos_id: Optional[int]) -> jnp.ndarray:
+    """On-device acceptance bookkeeping: tokens to emit per slot.
+
+    targets: (B, q_len) greedy argmax at each fed position.
+    fed:     (B, q_len) the tokens fed — pending token then draft (padded).
+    n_fed:   (B,) how many fed positions are real (1..q_len).
+
+    Returns e (B,) int32 in [1, n_fed]: the emitted run is
+    `targets[:e]` — draft token fed[j+1] is accepted while it equals its
+    target targets[j] (j < n_fed-1), the run stops at the first EOS target
+    (tokens after an emitted EOS would be invalid), and the final target
+    is the bonus token a plain decode step would have emitted from the
+    same state. e >= 1 always: even a fully-rejected draft still yields
+    the pending token's own greedy successor.
+    """
+    b, q_len = targets.shape
+    if q_len == 1:
+        return jnp.ones((b,), jnp.int32)
+    j = jnp.arange(q_len - 1, dtype=jnp.int32)[None, :]
+    ok = (targets[:, :-1] == fed[:, 1:]) & (j < n_fed[:, None] - 1)
+    if eos_id is not None:
+        ok = ok & (targets[:, :-1] != eos_id)
+    run = jnp.cumprod(ok.astype(jnp.int32), axis=1)  # leading all-true run
+    return (1 + run.sum(axis=1)).astype(jnp.int32)

@@ -1,0 +1,394 @@
+"""Speculative decoding: bitwise spec-vs-plain greedy parity through BOTH
+quant backends (incl. mid-verify EOS and budget exhaustion during an
+accepted run), the draft/accept primitives, pop-rollback validation, and a
+hypothesis sweep that speculative append + rollback preserves allocator
+conservation and never frees a refcounted shared page."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.cache import kvcache
+from repro.configs.base import ModelConfig
+from repro.core import mixedkv, rates
+from repro.core.quantizer import KVQuantizer, QuantizerConfig
+from repro.models import transformer
+from repro.serving import backends as backends_lib
+from repro.serving import decode as decoding
+from repro.serving import engine
+from repro.serving import pages
+from repro.serving import scheduler
+from repro.serving import speculate
+
+
+def _cfg(**kw):
+    base = dict(name="spec", family="decoder", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=128,
+                head_dim=32)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _qz(cfg):
+    return KVQuantizer(QuantizerConfig(
+        head_dim=cfg.head_dim, schedule=mixedkv.uniform(cfg.num_layers),
+        k_norm=rates.NORM_K8, v_norm=rates.NORM_V4_LOG, storage="bitpack"))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    qz = _qz(cfg)
+    params, _ = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, qz, params
+
+
+def _backend(name, cfg, qz):
+    if name == "quant-pallas":
+        return backends_lib.QuantPallasBackend(cfg, qz, interpret=True)
+    return backends_lib.QuantXLABackend(cfg, qz, y_dtype=jnp.float32)
+
+
+def _requests(n, rng, plen_hi=14, budget_hi=10):
+    return [scheduler.Request(
+        rid=i,
+        tokens=rng.integers(0, 128, rng.integers(2, plen_hi + 1)
+                            ).astype(np.int32),
+        max_new_tokens=int(rng.integers(1, budget_hi + 1)))
+        for i in range(n)]
+
+
+def _sched(speculate_on, **kw):
+    base = dict(num_slots=2, page_size=4, num_pages=64, max_context=48,
+                prefill_chunk=8, max_burst=4)
+    base.update(kw)
+    return scheduler.SchedulerConfig(
+        speculate=speculate_on, **base)
+
+
+# ------------------------------------------------------ draft primitives ---
+def test_propose_draft_prompt_lookup():
+    ctx = np.asarray([7, 1, 2, 3, 9, 5, 1, 2, 3], np.int32)
+    # trailing 3-gram [1,2,3] matched at its earlier occurrence -> [9,5,...]
+    np.testing.assert_array_equal(
+        speculate.propose_draft(ctx, 4), [9, 5, 1, 2])
+    np.testing.assert_array_equal(speculate.propose_draft(ctx, 1), [9])
+    # most RECENT earlier occurrence wins
+    ctx2 = np.asarray([1, 2, 5, 1, 2, 6, 1, 2], np.int32)
+    np.testing.assert_array_equal(speculate.propose_draft(ctx2, 2), [6, 1])
+    # no repeat anywhere -> empty draft (degenerate plain step)
+    assert speculate.propose_draft(
+        np.arange(8, dtype=np.int32), 4).size == 0
+    # degenerate inputs
+    assert speculate.propose_draft(np.asarray([3], np.int32), 4).size == 0
+    assert speculate.propose_draft(ctx, 0).size == 0
+
+
+def test_accepted_counts_prefixes_eos_and_padding():
+    eos = 99
+    fed = jnp.asarray([
+        [5, 10, 20, 30],   # targets match first 2 drafts -> emit 3
+        [5, 11, 12, 13],   # first draft rejected -> emit 1 (+bonus only)
+        [5, 10, 20, 30],   # all drafts match -> emit 4 (incl. bonus)
+        [5, 10, 20, 30],   # EOS target at j=1 cuts the run -> emit 2
+        [5, 10, 0, 0],     # only 1 real draft fed (n_fed 2) -> emit <= 2
+    ], jnp.int32)
+    targets = jnp.asarray([
+        [10, 20, 99, 40],
+        [10, 20, 30, 40],
+        [10, 20, 30, 40],
+        [10, 99, 30, 40],
+        [10, 20, 30, 40],
+    ], jnp.int32)
+    n_fed = jnp.asarray([4, 4, 4, 4, 2], jnp.int32)
+    got = speculate.accepted_counts(targets, fed, n_fed, eos)
+    np.testing.assert_array_equal(np.asarray(got), [3, 1, 4, 2, 2])
+    # without an EOS id the run only stops on mismatch / n_fed
+    got = speculate.accepted_counts(targets, fed, n_fed, None)
+    np.testing.assert_array_equal(np.asarray(got), [3, 1, 4, 2, 2])
+    np.testing.assert_array_equal(
+        np.asarray(speculate.accepted_counts(
+            targets[:, :1], fed[:, :1], jnp.ones((5,), jnp.int32), eos)),
+        np.ones(5))
+
+
+# ------------------------------------------------------ verify-path units --
+@pytest.mark.parametrize("backend_name", ["quant-pallas", "quant-xla"])
+def test_verify_step_matches_sequential_decode_steps(setup, backend_name):
+    """One q_len=3 verify dispatch reproduces, bitwise, the logits of
+    three sequential single-token paged decode steps fed the same tokens
+    — the accumulation identity the lossless claim rests on."""
+    cfg, qz, params = setup
+    be = _backend(backend_name, cfg, qz)
+    ps, mp, b, q_len = 4, 4, 2, 3
+    rng = np.random.default_rng(0)
+    plen = 6
+    prompts = jnp.asarray(rng.integers(0, 128, (b, plen)), jnp.int32)
+    pre = transformer.forward_prefill(params, cfg, {"tokens": prompts},
+                                      quantizer=qz)
+    # scatter the prefill codes into pool pages
+    pool = be.init_paged_cache(1 + b * mp + 1, ps, b, mp)
+    alloc = pages.PageAllocator(1 + b * mp + 1)
+    pt = np.zeros((b, mp), np.int32)
+    for i in range(b):
+        pt[i] = alloc.alloc(mp, i)
+    kq, vq = pre.kv_quant
+    pad = mp * ps - plen
+
+    def grow(a):
+        widths = [(0, 0)] * a.ndim
+        widths[2] = (0, pad)
+        return jnp.pad(a, widths)
+    kq = jax.tree.map(grow, kq)
+    vq = jax.tree.map(grow, vq)
+    pool_k, pool_v = pool.k, pool.v
+    for i in range(b):
+        pool_k = pages.write_prompt_pages(
+            pool_k, jax.tree.map(lambda a: a[:, i], kq),
+            jnp.asarray(pt[i]), ps)
+        pool_v = pages.write_prompt_pages(
+            pool_v, jax.tree.map(lambda a: a[:, i], vq),
+            jnp.asarray(pt[i]), ps)
+    lengths = jnp.full((b,), plen, jnp.int32)
+    active = jnp.ones((b,), bool)
+    fed = jnp.asarray(rng.integers(0, 128, (b, q_len)), jnp.int32)
+
+    cache = pages.PagedKVCache(pool_k, pool_v, jnp.asarray(pt), lengths)
+    logits_v, cache_v = decoding.verify_step_paged(
+        params, cfg, cache, fed, active,
+        jnp.full((b,), q_len, jnp.int32), backend=be)
+    assert logits_v.shape == (b, q_len, cfg.vocab_size)
+    assert np.asarray(cache_v.lengths).tolist() == [plen] * b  # not advanced
+
+    cache_s = pages.PagedKVCache(pool_k, pool_v, jnp.asarray(pt), lengths)
+    for j in range(q_len):
+        logits_j, cache_s = decoding.decode_step_paged(
+            params, cfg, cache_s, fed[:, j:j + 1], active, backend=be)
+        np.testing.assert_array_equal(
+            np.asarray(logits_v[:, j]), np.asarray(logits_j))
+
+
+# ------------------------------------------------------ end-to-end parity --
+@pytest.mark.parametrize("backend_name", ["quant-pallas", "quant-xla"])
+def test_speculative_greedy_bitwise_matches_plain(setup, backend_name):
+    """Mixed trace through the speculative scheduler emits IDENTICAL
+    greedy tokens to the plain scheduler per request, on both quant
+    backends, and frees every page."""
+    cfg, qz, params = setup
+    be = _backend(backend_name, cfg, qz)
+    rng = np.random.default_rng(11)
+    reqs = _requests(5, rng, plen_hi=18, budget_hi=10)
+    plain = scheduler.PagedServingEngine(params, cfg, be, _sched(False))
+    spec = scheduler.PagedServingEngine(
+        params, cfg, be, _sched(True, draft_len=3))
+    r_plain, _ = plain.run(reqs)
+    r_spec, stats = spec.run(reqs)
+    for a, b_ in zip(r_plain, r_spec):
+        assert a.rid == b_.rid
+        np.testing.assert_array_equal(a.tokens, b_.tokens)
+    assert spec.allocator.num_free == spec.sched.num_pages - 1
+    sp = stats["spec"]
+    assert sp["draft_accepted"] <= sp["draft_proposed"]
+    assert sp["verify_steps"] == sum(
+        r["verify_steps"] for r in sp["per_request"])
+    assert 0.0 <= sp["acceptance_rate"] <= 1.0
+
+
+def test_speculative_eos_mid_verify_and_budget_exhaustion(setup):
+    """EOS accepted in the middle of a verify run stops the request at the
+    same token as plain decode (post-EOS accepted tokens are discarded),
+    and a fully-accepted run that exhausts the budget ends exactly at
+    max_new_tokens — both bitwise vs the plain scheduler."""
+    cfg, qz, params = setup
+    be = _backend("quant-pallas", cfg, qz)
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, 128, 7).astype(np.int32)
+    probe = engine.generate(params, cfg, be, jnp.asarray(prompt)[None],
+                            max_new_tokens=10)
+    toks = np.asarray(probe.tokens)[0]
+    eos = int(toks[4])  # an EOS likely to land mid-verify with draft_len 4
+    reqs = [scheduler.Request(0, prompt, max_new_tokens=10),
+            scheduler.Request(1, prompt, max_new_tokens=3)]  # budget cut
+    plain = scheduler.PagedServingEngine(
+        params, cfg, be, _sched(False, eos_id=eos))
+    spec = scheduler.PagedServingEngine(
+        params, cfg, be, _sched(True, draft_len=4, eos_id=eos))
+    r_plain, _ = plain.run(reqs)
+    r_spec, _ = spec.run(reqs)
+    for a, b_ in zip(r_plain, r_spec):
+        np.testing.assert_array_equal(a.tokens, b_.tokens)
+    assert r_spec[0].tokens[-1] == eos  # stopped on the EOS...
+    assert len(r_spec[0].tokens) <= 5  # ...not the budget
+    assert len(r_spec[1].tokens) == 3  # budget exhaustion mid-run
+    assert spec.allocator.num_free == spec.sched.num_pages - 1
+
+
+def test_speculative_with_prefix_sharing(setup):
+    """Speculation composes with COW prefix sharing: the owned-page write
+    mask (per-slot fed counts) passes, tokens match the non-speculative
+    share run bitwise, and no shared page is ever freed by a rollback."""
+    cfg, qz, params = setup
+    be = _backend("quant-pallas", cfg, qz)
+    rng = np.random.default_rng(9)
+    shared = rng.integers(0, 128, 16).astype(np.int32)
+    reqs = [scheduler.Request(
+        rid=i,
+        tokens=np.concatenate(
+            [shared, rng.integers(0, 128, 5 + i).astype(np.int32)]),
+        max_new_tokens=6) for i in range(3)]
+    kw = dict(prefix_cache="share", prefix_pages=8, num_pages=96,
+              max_context=64)
+    plain = scheduler.PagedServingEngine(params, cfg, be,
+                                         _sched(False, **kw))
+    spec = scheduler.PagedServingEngine(
+        params, cfg, be, _sched(True, draft_len=3, **kw))
+    r_plain, _ = plain.run(reqs)
+    r_spec, _ = spec.run(reqs)
+    for a, b_ in zip(r_plain, r_spec):
+        np.testing.assert_array_equal(a.tokens, b_.tokens)
+    spec.allocator.check_conservation()
+    spec.trie.check_bound()
+
+
+def test_speculate_config_validation():
+    with pytest.raises(ValueError):  # stochastic sampling has no guarantee
+        _sched(True, sampling=engine.SamplingConfig(temperature=0.7))
+    with pytest.raises(ValueError):
+        _sched(True, draft_len=0)
+    with pytest.raises(ValueError):
+        _sched(True, draft_max_ngram=0)
+    assert engine.SamplingConfig().is_greedy
+    assert not engine.SamplingConfig(temperature=0.5).is_greedy
+
+
+# ------------------------------------------------------ pop / rollback -----
+def test_pop_tokens_validation_and_freeing():
+    alloc = pages.PageAllocator(16)
+    row = np.zeros((8,), np.int32)
+    got = alloc.alloc(4, "r")  # covers tokens [0, 16) at ps=4
+    row[:4] = got
+    # pop below the commit boundary rejected
+    with pytest.raises(ValueError):
+        pages.pop_tokens(alloc, "r", row, 10, 5, 4, min_length=6)
+    with pytest.raises(ValueError):
+        pages.pop_tokens(alloc, "r", row, 10, -1, 4)
+    # bookkeeping-only pop: nothing freed, length decremented
+    new_len, freed = pages.pop_tokens(alloc, "r", row, 10, 3, 4,
+                                      min_length=6)
+    assert new_len == 7 and freed.size == 0
+    assert alloc.num_free == 11
+    # freeing pop: page holding only popped tokens returns to the pool
+    new_len, freed = pages.pop_tokens(alloc, "r", row, 10, 3, 4,
+                                      min_length=6, free_empty=True)
+    assert new_len == 7
+    assert freed.tolist() == [int(got[2])]  # tokens [8,10) live on page 2
+    assert row[2] == 0 and alloc.num_free == 12
+    alloc.check_conservation()
+    # the partially-valid frontier page is never freed
+    new_len, freed = pages.pop_tokens(alloc, "r", row, 7, 1, 4,
+                                      free_empty=True)
+    assert new_len == 6 and freed.size == 0
+    # popping over an unmapped entry is rejected
+    with pytest.raises(ValueError):
+        pages.pop_tokens(alloc, "r", row, 12, 4, 4, free_empty=True)
+
+
+def test_pop_tokens_never_frees_shared_page():
+    alloc = pages.PageAllocator(16)
+    row = np.zeros((8,), np.int32)
+    row[:3] = alloc.alloc(3, "r")
+    alloc.share([int(row[2])], "other")  # rc 2: trie / co-sharer
+    with pytest.raises(RuntimeError):
+        pages.pop_tokens(alloc, "r", row, 12, 6, 4, free_empty=True)
+    assert alloc.refcount(int(row[2])) == 2  # untouched
+    alloc.check_conservation()
+
+
+@settings(max_examples=25, deadline=None)
+@given(num_pages=st.integers(6, 48), seed=st.integers(0, 10_000))
+def test_spec_append_rollback_conservation(num_pages, seed):
+    """Random alloc -> speculative-append -> rollback interleavings keep
+    the allocator conserved, never free a refcounted shared page, and
+    always return the pool to fully-free after release."""
+    rng = np.random.default_rng(seed)
+    ps = 4
+    alloc = pages.PageAllocator(num_pages)
+    live: dict[int, dict] = {}
+    shared_owner = "trie"
+    for step in range(30):
+        r = rng.uniform()
+        if live and r < 0.25:  # retire a request
+            rid = int(rng.choice(list(live)))
+            live.pop(rid)
+            alloc.release(rid)
+        elif live and r < 0.7:  # one speculative round on a request
+            rid = int(rng.choice(list(live)))
+            st = live[rid]
+            cap = st["n_pages"] * ps
+            m = int(rng.integers(1, 6))
+            m = min(m, cap - st["len"])
+            if m < 1:
+                continue
+            e = int(rng.integers(1, m + 1))  # accept e of m
+            length = st["len"] + m  # optimistic append
+            new_len, freed = pages.pop_tokens(
+                alloc, rid, st["row"], length, m - e, ps,
+                min_length=st["plen"],
+                free_empty=bool(rng.integers(0, 2)))
+            assert new_len == st["len"] + e
+            # a freed page must have held ONLY popped tokens
+            for p in freed:
+                assert p != 0
+                assert alloc.refcount(int(p)) == 0
+            st["len"] = new_len
+            if len(freed):
+                # freeing leaves a hole behind the kept prefix: cap the
+                # request's future growth to its contiguous mapped pages
+                # (the scheduler only frees when a request finishes)
+                st["n_pages"] = pages.pages_for_tokens(new_len, ps)
+        else:  # admit a request
+            rid = 1000 + step
+            n_pages = int(rng.integers(1, 4))
+            if not alloc.can_alloc(n_pages):
+                continue
+            got = alloc.alloc(n_pages, rid)
+            row = np.zeros((8,), np.int32)
+            row[:n_pages] = got
+            plen = int(rng.integers(1, n_pages * ps + 1))
+            live[rid] = {"row": row, "plen": plen, "len": plen,
+                         "n_pages": n_pages}
+            if rng.uniform() < 0.3:  # trie shares the first page
+                try:
+                    alloc.share([int(got[0])], shared_owner)
+                except ValueError:
+                    pass
+        alloc.check_conservation()
+    for rid in list(live):
+        alloc.release(rid)
+    alloc.release(shared_owner)
+    alloc.check_conservation()
+    assert alloc.num_free == num_pages - 1
+
+
+def test_pop_cache_contiguous_lengths_rollback():
+    cfg = _cfg(num_layers=1)
+    qz = _qz(cfg)
+    be = backends_lib.QuantXLABackend(cfg, qz)
+    cache = be.init_cache(2, 16)
+    cache = cache._replace(lengths=jnp.asarray([10, 7], jnp.int32))
+    out = kvcache.pop_cache(cache, 3, min_lengths=4)
+    assert np.asarray(out.lengths).tolist() == [7, 4]
+    out = kvcache.pop_cache(cache, jnp.asarray([3, 0], jnp.int32))
+    assert np.asarray(out.lengths).tolist() == [7, 7]
+    with pytest.raises(ValueError):  # below the commit boundary
+        kvcache.pop_cache(cache, 3, min_lengths=5)
+    with pytest.raises(ValueError):  # negative pop
+        kvcache.pop_cache(cache, -1)
+    with pytest.raises(ValueError):  # wrapped ring cannot roll back
+        kvcache.pop_cache(cache, 1, window=8)
+    # un-wrapped windowed cache can
+    out = kvcache.pop_cache(
+        cache._replace(lengths=jnp.asarray([8, 5], jnp.int32)), 1, window=8)
+    assert np.asarray(out.lengths).tolist() == [7, 4]
