@@ -183,9 +183,11 @@ def run_continuous(params, backend, reqs, p: dict
         max_context=max_span, prefill_chunk=chunk,
         max_burst=p["max_burst"])
     eng = scheduler_lib.PagedServingEngine(params, BENCH_CFG, backend, sched)
-    # warmup pass (compiles every prefill bucket + decode-burst width),
-    # then best of `reps` timed replays (greedy tokens are identical
-    # across reps; only the wall clock varies with CI noise)
+    # AOT warmup (compiles every prefill bucket + decode-burst width up
+    # front — serving/compile_cache.py) plus one warm replay for data
+    # caches, then best of `reps` timed replays (greedy tokens are
+    # identical across reps; only the wall clock varies with CI noise)
+    eng.warmup()
     eng.run([scheduler_lib.Request(r.rid, r.tokens, r.max_new_tokens, 0.0)
              for r in reqs])
     per_req, best = [], None

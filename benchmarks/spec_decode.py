@@ -12,17 +12,20 @@ scheduler twice on the quant-pallas bitpack backend:
 
 Verifies the speculative run's greedy tokens are BITWISE identical to the
 plain run's per request (losslessness is a gate, not a claim), and that
-speculation strictly reduced sequential forward passes per decode token.
-Emits BENCH_spec.json and exits non-zero when
+speculation is a WALL-CLOCK win, not just a step-count win. Emits
+BENCH_spec.json and exits non-zero when
 
   * any request's tokens differ between the two runs, or
-  * mean forward passes per emitted decode token >= 1.0.
+  * speculative tokens/sec < plain tokens/sec (speedup < 1.0).
 
-steps_per_token is the honest sequential-work metric: wall-clock gains
-track it on bandwidth-bound hardware (each verify streams the same packed
-pages a single step would), while on CPU/interpret CI the verify's extra
-compute can mask it — so the gate is the step count, and walls are
-reported unjudged.
+Through PR 5 the gate was steps_per_token < 1.0 — the counter moved but
+the clock was allowed not to. ISSUE 6's fused on-device spec burst
+(draft -> verify -> accept -> commit in ONE dispatch per round, host
+readback once per burst) plus AOT warmup is what makes the wall-clock
+gate honest: both modes are measured post-warmup on the same engine
+discipline, so the speedup is the dispatch math, not compile noise.
+steps_per_token is still reported (it bounds the speedup on
+bandwidth-bound hardware).
 
 Usage:
     PYTHONPATH=src python benchmarks/spec_decode.py [--smoke] \
@@ -58,8 +61,8 @@ FULL = dict(n_requests=24, motif_lo=4, motif_hi=8, reps_lo=3, reps_hi=6,
             reps=3)
 SMOKE = dict(n_requests=8, motif_lo=3, motif_hi=6, reps_lo=3, reps_hi=4,
              tail_hi=4, budget_lo=8, budget_hi=20, num_slots=4,
-             page_size=8, prefill_chunk=16, max_burst=16, draft_len=4,
-             reps=2)
+             page_size=16, prefill_chunk=16, max_burst=16, draft_len=4,
+             reps=3)
 
 
 def make_trace(p: dict, seed: int = 0) -> list[scheduler_lib.Request]:
@@ -102,17 +105,27 @@ def _engine(params, backend, reqs, p, speculate: bool):
                                             sched)
 
 
-def run_mode(params, backend, reqs, p, speculate: bool
-             ) -> tuple[list[np.ndarray], dict]:
-    eng = _engine(params, backend, reqs, p, speculate)
-    eng.run(reqs)  # warmup: compiles every prefill bucket + decode width
-    per_req, best = [], None
+def run_modes(params, backend, reqs, p
+              ) -> tuple[tuple[list[np.ndarray], dict],
+                         tuple[list[np.ndarray], dict]]:
+    """Timed plain + speculative replays, INTERLEAVED: plain rep i runs
+    back-to-back with spec rep i, and each mode keeps its best-of-reps
+    wall. On a shared/noisy host a mode-at-a-time schedule lets a load
+    spike land entirely on one mode and swing the speedup ratio both
+    ways; interleaving gives both modes the same shot at every quiet
+    window, so best-of converges to the honest ratio."""
+    engines = [_engine(params, backend, reqs, p, spec)
+               for spec in (False, True)]
+    for eng in engines:
+        eng.warmup()  # AOT-compile every dispatch variant up front
+        eng.run(reqs)  # warm run: data caches, allocator paths
+    outs = [(None, None), (None, None)]
     for _ in range(p["reps"]):
-        results, stats = eng.run(reqs)
-        if best is None or stats["wall_s"] < best["wall_s"]:
-            per_req = [r.tokens for r in results]
-            best = stats
-    return per_req, best
+        for i, eng in enumerate(engines):
+            results, stats = eng.run(reqs)
+            if outs[i][1] is None or stats["wall_s"] < outs[i][1]["wall_s"]:
+                outs[i] = ([r.tokens for r in results], stats)
+    return outs[0], outs[1]
 
 
 def check(report: dict) -> list[str]:
@@ -120,12 +133,12 @@ def check(report: dict) -> list[str]:
     if not report.get("tokens_match"):
         errs.append("speculative greedy tokens differ from plain decode "
                     "on at least one request")
-    spt = report["speculative"]["spec"]["steps_per_token"]
-    if spt >= 1.0:
+    speedup = report["summary"]["speedup_tokens_per_sec"]
+    if speedup < 1.0:
         errs.append(
-            f"steps_per_token {spt:.3f} >= 1.0: speculation did not "
-            f"reduce sequential forward passes on the repeated-structure "
-            f"trace")
+            f"speedup_tokens_per_sec {speedup:.3f} < 1.0: speculation is "
+            f"not a wall-clock win on the repeated-structure trace (the "
+            f"step-count savings are not reaching the clock)")
     return errs
 
 
@@ -147,8 +160,8 @@ def main(argv=None) -> int:
     reqs = make_trace(p, args.seed)
 
     t0 = time.perf_counter()
-    plain_toks, plain_stats = run_mode(params, backend, reqs, p, False)
-    spec_toks, spec_stats = run_mode(params, backend, reqs, p, True)
+    ((plain_toks, plain_stats),
+     (spec_toks, spec_stats)) = run_modes(params, backend, reqs, p)
     match = all((a.shape == b.shape) and bool((a == b).all())
                 for a, b in zip(spec_toks, plain_toks))
     sp = spec_stats["spec"]
@@ -178,6 +191,13 @@ def main(argv=None) -> int:
             "speedup_tokens_per_sec":
                 spec_stats["tokens_per_sec"]
                 / max(plain_stats["tokens_per_sec"], 1e-9),
+            # dispatch discipline: host round-trips per run and the AOT
+            # variant accounting (post_warmup_variants must stay 0)
+            "host_syncs_plain": plain_stats["perf"]["host_sync_count"],
+            "host_syncs_spec": spec_stats["perf"]["host_sync_count"],
+            "post_warmup_variants":
+                plain_stats["perf"]["post_warmup_variants"]
+                + spec_stats["perf"]["post_warmup_variants"],
         },
     }
     args.out.write_text(json.dumps(report, indent=2) + "\n")
@@ -197,6 +217,13 @@ def main(argv=None) -> int:
     print(f"  tokens match: {match}; "
           f"{report['summary']['sequential_pass_reduction']:.2f}x fewer "
           f"sequential passes per token")
+    print(f"  wall speedup: "
+          f"{report['summary']['speedup_tokens_per_sec']:.2f}x tokens/sec; "
+          f"host syncs (cumulative) plain="
+          f"{report['summary']['host_syncs_plain']} spec="
+          f"{report['summary']['host_syncs_spec']}; "
+          f"post-warmup jit variants: "
+          f"{report['summary']['post_warmup_variants']}")
     errs = check(report)
     for e in errs:
         print(f"CHECK FAILED: {e}", file=sys.stderr)

@@ -35,6 +35,7 @@ def attend_quant_cache_op(
     *,
     interpret: bool = True,
     block_t: int | None = None,
+    unpack: str | None = None,
 ) -> jax.Array:
     b, _, nq, h = q.shape
     nkv, g = cfg.num_kv_heads, cfg.q_per_kv
@@ -75,6 +76,8 @@ def attend_quant_cache_op(
         v_nq_packed=qz.config.norm_packed(vc),
         block_t=block_t,
         interpret=interpret,
+        unpack=unpack,
+        n_bins_cap=1 << qz.config.index_width,
     )
     out = qz.unrotate_output(out_y)  # one inverse transform per query
     return out.reshape(b, 1, nq, h)
@@ -92,6 +95,7 @@ def paged_attend_quant_cache_op(
     qz: KVQuantizer,
     *,
     interpret: bool = True,
+    unpack: str | None = None,
 ) -> jax.Array:
     """Paged mirror of `attend_quant_cache_op`: the kernel resolves each
     grid step's K/V block through the scalar-prefetched page table instead
@@ -124,15 +128,68 @@ def paged_attend_quant_cache_op(
         v_bits=vc.bits, v_log=vc.log_space,
         v_nq_packed=qz.config.norm_packed(vc),
         interpret=interpret,
+        unpack=unpack,
+        n_bins_cap=1 << qz.config.index_width,
     )
     out = qz.unrotate_output(out_y)
     return out.reshape(b, 1, nq, h)
 
 
-# The speculative multi-token verify path reuses the op above as-is: the
-# backend layer (`backends.paged_attend_multi`) expands (slot, draft-row)
-# pairs into B*q_len independent rows with per-row causal frontiers
-# lengths[i]+j+1 (`qattn.verify_rows`) and calls the single-token op on
-# the expanded batch, so each verify row accumulates bit-for-bit like a
-# plain decode step at its own length — there is deliberately no separate
-# verify op to drift out of sync with this one.
+def paged_attend_multi_quant_cache_op(
+    q: jax.Array,  # (B, q_len, nq, h) RoPE'd queries, logical head dim
+    layer_kq: QuantizedKV,  # (P, page_size, n_kv, ...) one layer's pool
+    layer_vq: QuantizedKV,
+    n_bins_k,
+    n_bins_v,
+    page_table: jax.Array,  # (B, max_pages) int32
+    lengths: jax.Array,  # (B,) int32 committed tokens per slot
+    cfg: ModelConfig,
+    qz: KVQuantizer,
+    *,
+    interpret: bool = True,
+    unpack: str | None = None,
+) -> jax.Array:
+    """Fused speculative verify: q_len query rows per slot share ONE page
+    walk (`qattn.paged_qattn_multi`); query row j applies its own causal
+    frontier lengths[i] + j + 1 as a score mask. Bit-for-bit the
+    `verify_rows` expansion (which the quant-xla backend keeps as the
+    parity oracle), at ~1/q_len of its page-walk cost — the kernel-side
+    half of making speculation's step savings show up on the clock."""
+    b, q_len, nq, h = q.shape
+    nkv, g = cfg.num_kv_heads, cfg.q_per_kv
+    dp = qz.config.d_pad
+    scale = 1.0 / np.sqrt(h)
+    # rotate all rows at once, then order rows j-major so row r = j*g + gi
+    # matches the kernel's frontier derivation (j = r // g)
+    q_rot = (qz.rotate_query(q.reshape(b * q_len, nq, h)) * scale
+             ).reshape(b, q_len, nkv, g, dp)
+    q_rot = q_rot.transpose(0, 2, 1, 3, 4).reshape(b, nkv, q_len * g, dp)
+    kc, vc = qz.config.k_norm, qz.config.v_norm
+    if qz.config.resolved_storage == "bitpack":
+        k_idx, v_idx = layer_kq.indices, layer_vq.indices
+        idx_bits = qz.config.index_width
+    else:
+        k_idx = layer_kq.indices.astype(jnp.int32)
+        v_idx = layer_vq.indices.astype(jnp.int32)
+        idx_bits = None
+    out_y = k.paged_qattn_multi(
+        q_rot,
+        k_idx, layer_kq.norm_codes,
+        layer_kq.rmin, layer_kq.rmax,
+        v_idx, layer_vq.norm_codes,
+        layer_vq.rmin, layer_vq.rmax,
+        page_table, lengths,
+        q_len=q_len, g=g,
+        n_bins_k=n_bins_k, n_bins_v=n_bins_v,
+        idx_bits=idx_bits,
+        k_bits=kc.bits, k_log=kc.log_space,
+        k_nq_packed=qz.config.norm_packed(kc),
+        v_bits=vc.bits, v_log=vc.log_space,
+        v_nq_packed=qz.config.norm_packed(vc),
+        interpret=interpret,
+        unpack=unpack,
+        n_bins_cap=1 << qz.config.index_width,
+    )
+    out_y = out_y.reshape(b, nkv, q_len, g, dp).transpose(0, 2, 1, 3, 4)
+    out = qz.unrotate_output(out_y.reshape(b * q_len, nkv, g, dp))
+    return out.reshape(b, q_len, nq, h)

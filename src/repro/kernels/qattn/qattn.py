@@ -76,34 +76,79 @@ def default_block_t(dp: int, row_stream_bytes: int,
     return max(128, min(2048, (bt // 128) * 128))
 
 
+# bin counts above this get the elementwise cos/sin path: a trig table
+# would stop paying for itself and bloat VMEM
+DEQUANT_TABLE_CAP = 512
+
+
 def _dequant_block(idx_raw, nq_raw, rmin, rmax, *, n_bins, bits, log,
-                   pairs, idx_bits, nq_packed):
-    """Stored codes -> (bt, 2*pairs) y-domain block, f32, split-half layout.
+                   pairs, idx_bits, nq_packed, unpack="bitplane",
+                   n_bins_cap=None):
+    """Stored codes -> (2*pairs, bt) y-domain block, f32, TRANSPOSED
+    split-half layout: row p is pair p's cos line, row p+pairs its sin
+    line, tokens along the minor axis.
+
+    Token-minor tiles are the layout where the packed-stream unpack is
+    whole-row copies instead of minor-axis gathers (`unpack_bits_T`) and
+    the split-half concatenate is two contiguous block copies — the fixes
+    for the CPU bitpack-slower-than-uint8 anomaly. Every value is produced
+    by the same elementwise arithmetic as the natural-layout path, so the
+    result is bitwise `transpose` of it.
 
     idx_raw: (bt, words) uint32 bitstream (idx_bits static) or (bt, pairs)
     integer container codes (idx_bits None). nq_raw: (bt, pairs//2) nibble
     bytes, (bt, pairs) uint8 codes, or (bt, pairs) f32 norms. n_bins may be
-    a traced i32 scalar (read off the bins ref).
+    a traced i32 scalar (read off the bins ref). `unpack` picks the
+    bitstream unpack scheme (`packing.UNPACK_METHODS`; bitwise identical,
+    perf-only — see `default_unpack`). `n_bins_cap` is the static bound on
+    code values (2^index_width); when given and small, cos/sin run once per
+    *bin* and codes gather from the table, not once per element.
     """
     if idx_bits is None:
-        idx = idx_raw.astype(jnp.int32)
+        idx = idx_raw.astype(jnp.int32).T  # (pairs, bt)
     else:
-        idx = packing.unpack_bits(idx_raw, idx_bits, pairs)
+        idx = packing.unpack_bits_T(idx_raw, idx_bits, pairs, method=unpack)
     if bits is None:
-        r = nq_raw.astype(jnp.float32)
+        r = nq_raw.astype(jnp.float32).T
     else:
         nq = packing.unpack_nibbles(nq_raw, pairs) if nq_packed else nq_raw
         levels = float(2**bits - 1)
         scale = jnp.maximum(rmax - rmin, 1e-12)
         v = nq.astype(jnp.float32) / levels * scale + rmin
-        r = jnp.exp(v) if log else v
+        r = (jnp.exp(v) if log else v).T  # (pairs, bt)
     # bin-center angle folded into one multiply-add:
     # (k + 0.5) * 2pi/n == k * s + 0.5 * s with s = 2pi/n
     ang = TWO_PI / jnp.asarray(n_bins, jnp.float32)
-    theta = idx.astype(jnp.float32) * ang + 0.5 * ang
-    even = r * jnp.cos(theta)
-    odd = r * jnp.sin(theta)
-    return jnp.concatenate([even, odd], axis=-1)
+    if n_bins_cap is not None and n_bins_cap <= DEQUANT_TABLE_CAP:
+        # codes take at most n_bins_cap distinct values: evaluate the
+        # bin-center trig once per bin (iota-built, so Pallas-safe) and
+        # gather — the table inputs j*ang + 0.5*ang are the exact f32
+        # values the elementwise path feeds cos/sin, so outputs are
+        # bitwise identical.
+        th = jax.lax.broadcasted_iota(
+            jnp.float32, (n_bins_cap,), 0) * ang + 0.5 * ang
+        even = r * jnp.take(jnp.cos(th), idx)
+        odd = r * jnp.take(jnp.sin(th), idx)
+    else:
+        theta = idx.astype(jnp.float32) * ang + 0.5 * ang
+        even = r * jnp.cos(theta)
+        odd = r * jnp.sin(theta)
+    return jnp.concatenate([even, odd], axis=0)
+
+
+def default_unpack(interpret: bool) -> str:
+    """Platform default for the bitstream unpack scheme.
+
+    Dequant runs in token-minor (transposed) tiles, where the gather
+    scheme's takes are whole-row copies along the major axis — memcpys on
+    CPU, where minor-axis gathers would lower to scalar loops (the source
+    of the bitpack-slower-than-uint8 anomaly). The bitplane scheme is the
+    known-good TPU VPU vectorization (`unpack_bits_T` runs it in natural
+    layout and transposes, which the Mosaic relayout handles). The
+    autotuner (`kernels.qattn.autotune`) measures all schemes in-kernel
+    and can override either default via `QuantPallasBackend.unpack`.
+    """
+    return "gather" if interpret else "bitplane"
 
 
 def qattn_kernel(
@@ -111,7 +156,8 @@ def qattn_kernel(
     vidx_ref, vnq_ref, vrmin_ref, vrmax_ref, o_ref,
     m_scr, l_scr, acc_scr, *,
     block_t: int, pairs: int, idx_bits, k_bits, k_log, k_nq_packed,
-    v_bits, v_log, v_nq_packed,
+    v_bits, v_log, v_nq_packed, unpack: str = "bitplane",
+    n_bins_cap: int | None = None,
 ):
     t_step = pl.program_id(2)
     n_steps = pl.num_programs(2)
@@ -135,19 +181,22 @@ def qattn_kernel(
     # compute, not bandwidth.)
     @pl.when(t_step * block_t < length)
     def _work():
-        row_pos = t_step * block_t + jax.lax.broadcasted_iota(
-            jnp.int32, (block_t, 1), 0)
-        row_ok = row_pos < length  # also kills OOB-padding garbage rows
+        # y blocks are TRANSPOSED (dp, bt) — tokens along the minor axis
+        # (see _dequant_block), so validity is a column mask here
+        col_pos = t_step * block_t + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_t), 1)
+        col_ok = col_pos < length  # also kills OOB-padding garbage columns
 
         y_k = _dequant_block(
             kidx_ref[0, :, 0], knq_ref[0, :, 0], krmin_ref[0, :, 0],
             krmax_ref[0, :, 0], n_bins=n_bins_k, bits=k_bits, log=k_log,
-            pairs=pairs, idx_bits=idx_bits, nq_packed=k_nq_packed)
-        y_k = jnp.where(row_ok, y_k, 0.0)
+            pairs=pairs, idx_bits=idx_bits, nq_packed=k_nq_packed,
+            unpack=unpack, n_bins_cap=n_bins_cap)
+        y_k = jnp.where(col_ok, y_k, 0.0)
         s = jax.lax.dot_general(
             q.astype(jnp.float32), y_k,
-            (((1,), (1,)), ((), ())))  # (g, bt)
-        s = jnp.where(row_ok.reshape(1, block_t), s, NEG_INF)
+            (((1,), (0,)), ((), ())))  # (g, bt)
+        s = jnp.where(col_ok, s, NEG_INF)
 
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
@@ -159,9 +208,10 @@ def qattn_kernel(
         y_v = _dequant_block(
             vidx_ref[0, :, 0], vnq_ref[0, :, 0], vrmin_ref[0, :, 0],
             vrmax_ref[0, :, 0], n_bins=n_bins_v, bits=v_bits, log=v_log,
-            pairs=pairs, idx_bits=idx_bits, nq_packed=v_nq_packed)
-        y_v = jnp.where(row_ok, y_v, 0.0)  # 0 * garbage NaN would poison p@y_v
-        pv = jax.lax.dot_general(p, y_v, (((1,), (0,)), ((), ())))  # (g, dp)
+            pairs=pairs, idx_bits=idx_bits, nq_packed=v_nq_packed,
+            unpack=unpack, n_bins_cap=n_bins_cap)
+        y_v = jnp.where(col_ok, y_v, 0.0)  # 0 * garbage NaN would poison p@y_v
+        pv = jax.lax.dot_general(p, y_v, (((1,), (1,)), ((), ())))  # (g, dp)
         acc_scr[...] = acc_scr[...] * corr + pv
 
     @pl.when(t_step == n_steps - 1)
@@ -186,7 +236,8 @@ def _from_split_half(x: jax.Array) -> jax.Array:
 @functools.partial(
     jax.jit,
     static_argnames=("idx_bits", "k_bits", "k_log", "k_nq_packed", "v_bits",
-                     "v_log", "v_nq_packed", "block_t", "interpret"),
+                     "v_log", "v_nq_packed", "block_t", "interpret",
+                     "unpack", "n_bins_cap"),
 )
 def qattn(
     q_rot: jax.Array,  # (B, nkv, G, Dp) f32, pre-scaled
@@ -211,10 +262,14 @@ def qattn(
     v_nq_packed: bool = False,
     block_t: int | None = None,
     interpret: bool = True,
+    unpack: str | None = None,  # None -> default_unpack(interpret)
+    n_bins_cap: int | None = None,  # static code-value bound (2^index_width)
 ) -> jax.Array:
     b, nkv, g, dp = q_rot.shape
     t = k_idx.shape[1]
     pairs = dp // 2
+    if unpack is None:
+        unpack = default_unpack(interpret)
     if block_t is None:
         stream = sum(
             a.shape[-1] * a.dtype.itemsize
@@ -243,7 +298,8 @@ def qattn(
         functools.partial(
             qattn_kernel, block_t=block_t, pairs=pairs, idx_bits=idx_bits,
             k_bits=k_bits, k_log=k_log, k_nq_packed=k_nq_packed,
-            v_bits=v_bits, v_log=v_log, v_nq_packed=v_nq_packed),
+            v_bits=v_bits, v_log=v_log, v_nq_packed=v_nq_packed,
+            unpack=unpack, n_bins_cap=n_bins_cap),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1), lambda bi, ni, ti: (bi, 0)),  # lengths (B,1)
@@ -272,7 +328,8 @@ def paged_qattn_kernel(
     krmax_ref, vidx_ref, vnq_ref, vrmin_ref, vrmax_ref, o_ref,
     m_scr, l_scr, acc_scr, *,
     page_size: int, pairs: int, idx_bits, k_bits, k_log, k_nq_packed,
-    v_bits, v_log, v_nq_packed,
+    v_bits, v_log, v_nq_packed, unpack: str = "bitplane",
+    n_bins_cap: int | None = None,
 ):
     """qattn over a paged pool: identical online-softmax body, but the K/V
     block for grid step p is whatever physical page `pt[b, p]` names — the
@@ -306,19 +363,21 @@ def paged_qattn_kernel(
     # width. Bit-for-bit identical to computing the masked page.
     @pl.when(p_step * page_size < length)
     def _work():
-        row_pos = p_step * page_size + jax.lax.broadcasted_iota(
-            jnp.int32, (page_size, 1), 0)
-        row_ok = row_pos < length  # per-page valid count, as a mask
+        # y blocks are TRANSPOSED (dp, ps) — tokens along the minor axis
+        col_pos = p_step * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, page_size), 1)
+        col_ok = col_pos < length  # per-page valid count, as a column mask
 
         y_k = _dequant_block(
             kidx_ref[0, :, 0], knq_ref[0, :, 0], krmin_ref[0, :, 0],
             krmax_ref[0, :, 0], n_bins=n_bins_k, bits=k_bits, log=k_log,
-            pairs=pairs, idx_bits=idx_bits, nq_packed=k_nq_packed)
-        y_k = jnp.where(row_ok, y_k, 0.0)
+            pairs=pairs, idx_bits=idx_bits, nq_packed=k_nq_packed,
+            unpack=unpack, n_bins_cap=n_bins_cap)
+        y_k = jnp.where(col_ok, y_k, 0.0)
         s = jax.lax.dot_general(
             q.astype(jnp.float32), y_k,
-            (((1,), (1,)), ((), ())))  # (g, ps)
-        s = jnp.where(row_ok.reshape(1, page_size), s, NEG_INF)
+            (((1,), (0,)), ((), ())))  # (g, ps)
+        s = jnp.where(col_ok, s, NEG_INF)
 
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
@@ -330,9 +389,10 @@ def paged_qattn_kernel(
         y_v = _dequant_block(
             vidx_ref[0, :, 0], vnq_ref[0, :, 0], vrmin_ref[0, :, 0],
             vrmax_ref[0, :, 0], n_bins=n_bins_v, bits=v_bits, log=v_log,
-            pairs=pairs, idx_bits=idx_bits, nq_packed=v_nq_packed)
-        y_v = jnp.where(row_ok, y_v, 0.0)
-        pv = jax.lax.dot_general(p, y_v, (((1,), (0,)), ((), ())))  # (g, dp)
+            pairs=pairs, idx_bits=idx_bits, nq_packed=v_nq_packed,
+            unpack=unpack, n_bins_cap=n_bins_cap)
+        y_v = jnp.where(col_ok, y_v, 0.0)
+        pv = jax.lax.dot_general(p, y_v, (((1,), (1,)), ((), ())))  # (g, dp)
         acc_scr[...] = acc_scr[...] * corr + pv
 
     @pl.when(p_step == n_steps - 1)
@@ -344,7 +404,7 @@ def paged_qattn_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=("idx_bits", "k_bits", "k_log", "k_nq_packed", "v_bits",
-                     "v_log", "v_nq_packed", "interpret"),
+                     "v_log", "v_nq_packed", "interpret", "unpack", "n_bins_cap"),
 )
 def paged_qattn(
     q_rot: jax.Array,  # (B, nkv, G, Dp) f32, pre-scaled
@@ -369,6 +429,8 @@ def paged_qattn(
     v_log: bool = False,
     v_nq_packed: bool = False,
     interpret: bool = True,
+    unpack: str | None = None,  # None -> default_unpack(interpret)
+    n_bins_cap: int | None = None,  # static code-value bound (2^index_width)
 ) -> jax.Array:
     """Flash-decode over the paged pool. The block size IS the page size —
     one grid step streams one physical page per (slot, kv-head)."""
@@ -376,6 +438,8 @@ def paged_qattn(
     page_size = k_idx.shape[1]
     mp = page_table.shape[1]
     pairs = dp // 2
+    if unpack is None:
+        unpack = default_unpack(interpret)
     grid = (b, nkv, mp)
 
     bins = jnp.stack([
@@ -416,9 +480,217 @@ def paged_qattn(
             paged_qattn_kernel, page_size=page_size, pairs=pairs,
             idx_bits=idx_bits, k_bits=k_bits, k_log=k_log,
             k_nq_packed=k_nq_packed, v_bits=v_bits, v_log=v_log,
-            v_nq_packed=v_nq_packed),
+            v_nq_packed=v_nq_packed, unpack=unpack, n_bins_cap=n_bins_cap),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, nkv, g, dp), jnp.float32),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32), bins,
+      q_perm, k_idx, k_nq, k_rmin, k_rmax, v_idx, v_nq, v_rmin, v_rmax)
+    return _from_split_half(out_perm)
+
+
+# ================================================= fused multi-query ========
+def paged_qattn_multi_kernel(
+    pt_ref, len_ref, bins_ref, q_ref, kidx_ref, knq_ref, krmin_ref,
+    krmax_ref, vidx_ref, vnq_ref, vrmin_ref, vrmax_ref, o_ref,
+    m_scr, l_scr, acc_scr, *,
+    page_size: int, pairs: int, q_len: int, g: int, idx_bits, k_bits,
+    k_log, k_nq_packed, v_bits, v_log, v_nq_packed,
+    unpack: str = "bitplane",
+    n_bins_cap: int | None = None,
+):
+    """Speculative-verify attention: all q_len query rows of a slot share
+    ONE walk over its pages.
+
+    The expansion path (`verify_rows` + the single-query kernel) is exact
+    but walks every page q_len times — the verify dispatch then costs
+    q_len plain decode steps of kernel work and speculation's step savings
+    drown in it. Here the q block carries all q_len*g query rows for a
+    (slot, kv-head) pair and each page is dequantized ONCE; row r (query
+    position j = r // g) applies its own causal frontier
+
+        lengths[slot] + j + 1
+
+    as a score mask. Masked scores are NEG_INF, so their softmax weight is
+    exactly zero and each row's m/l/acc sequence is term-for-term the
+    single-query kernel's at its own frontier — the fused walk is
+    bit-for-bit the expansion (pinned by tests/test_speculate.py /
+    tests/test_kernels.py parity).
+
+    The dots stay (g, ·)-shaped — a static per-position loop over the
+    shared dequantized tiles — rather than one (q_len*g, ·) GEMM: a gemm's
+    k-dimension accumulation order can change with the output row count,
+    which would break the bitwise-parity contract. The frontier masking
+    and the running-max update ARE batched across all q_len*g rows (max
+    and compare are exact, row-count-independent ops), which trims the
+    per-page op count; exp and the scaled l/acc updates stay per-row-group
+    because XLA's codegen for them is shape-dependent at the ulp level
+    (measured: batching either changes output bits on CPU).
+    """
+    b_i = pl.program_id(0)
+    p_step = pl.program_id(2)
+    n_steps = pl.num_programs(2)
+
+    @pl.when(p_step == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]  # (q_len*g, dp) pre-rotated/scaled, split-half layout
+    length = len_ref[b_i]
+    n_bins_k = bins_ref[0]
+    n_bins_v = bins_ref[1]
+
+    # The furthest frontier is length + q_len: pages wholly past it
+    # contribute nothing to any row, so skip them (the ragged-batch work
+    # bound, shifted by the optimistic appends).
+    @pl.when(p_step * page_size < length + q_len)
+    def _work():
+        # y blocks are TRANSPOSED (dp, ps) — tokens along the minor axis
+        col_pos = p_step * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, page_size), 1)
+        # beyond every row's frontier lies unwritten pool garbage — zero it
+        # so 0-weight scores can't poison the dots with NaN/Inf
+        col_ok = col_pos < length + q_len
+
+        y_k = _dequant_block(
+            kidx_ref[0, :, 0], knq_ref[0, :, 0], krmin_ref[0, :, 0],
+            krmax_ref[0, :, 0], n_bins=n_bins_k, bits=k_bits, log=k_log,
+            pairs=pairs, idx_bits=idx_bits, nq_packed=k_nq_packed,
+            unpack=unpack, n_bins_cap=n_bins_cap)
+        y_k = jnp.where(col_ok, y_k, 0.0)
+        y_v = _dequant_block(
+            vidx_ref[0, :, 0], vnq_ref[0, :, 0], vrmin_ref[0, :, 0],
+            vrmax_ref[0, :, 0], n_bins=n_bins_v, bits=v_bits, log=v_log,
+            pairs=pairs, idx_bits=idx_bits, nq_packed=v_nq_packed,
+            unpack=unpack, n_bins_cap=n_bins_cap)
+        y_v = jnp.where(col_ok, y_v, 0.0)
+
+        # per-position (g, ps) score dots — parity-pinned shapes — then
+        # one stacked softmax update over all q_len*g rows
+        s = jnp.concatenate(
+            [jax.lax.dot_general(
+                q[j * g:(j + 1) * g].astype(jnp.float32), y_k,
+                (((1,), (0,)), ((), ())))  # (g, ps)
+             for j in range(q_len)], axis=0)  # (q_len*g, ps)
+        # query position j's causal frontier: the committed tokens plus
+        # the j+1 this dispatch appended (its own key included)
+        row_j = jax.lax.broadcasted_iota(
+            jnp.int32, (q_len * g, 1), 0) // g
+        s = jnp.where(col_pos < length + 1 + row_j, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        m_scr[...] = m_new
+        l_prev = l_scr[...]
+        acc_prev = acc_scr[...]
+        l_new, acc_new = [], []
+        for j in range(q_len):
+            rows = slice(j * g, (j + 1) * g)
+            p = jnp.exp(s[rows] - m_new[rows])
+            corr = jnp.exp(m_prev[rows] - m_new[rows])
+            l_new.append(l_prev[rows] * corr
+                         + jnp.sum(p, axis=-1, keepdims=True))
+            pv = jax.lax.dot_general(p, y_v,
+                                     (((1,), (1,)), ((), ())))
+            acc_new.append(acc_prev[rows] * corr + pv)
+        l_scr[...] = jnp.concatenate(l_new, axis=0)
+        acc_scr[...] = jnp.concatenate(acc_new, axis=0)
+
+    @pl.when(p_step == n_steps - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("q_len", "g", "idx_bits", "k_bits", "k_log",
+                     "k_nq_packed", "v_bits", "v_log", "v_nq_packed",
+                     "interpret", "unpack", "n_bins_cap"),
+)
+def paged_qattn_multi(
+    q_rot: jax.Array,  # (B, nkv, q_len*g, Dp) f32, pre-scaled, row r = j*g+gi
+    k_idx: jax.Array,  # (P, ps, nkv, words) uint32 — ONE layer's pool
+    k_nq: jax.Array,
+    k_rmin: jax.Array,
+    k_rmax: jax.Array,
+    v_idx: jax.Array,
+    v_nq: jax.Array,
+    v_rmin: jax.Array,
+    v_rmax: jax.Array,
+    page_table: jax.Array,  # (B, max_pages) int32 physical page ids
+    lengths: jax.Array,  # (B,) int32 committed tokens per slot
+    *,
+    q_len: int,
+    g: int,
+    n_bins_k,
+    n_bins_v,
+    idx_bits=None,
+    k_bits=None,
+    k_log: bool = False,
+    k_nq_packed: bool = False,
+    v_bits=None,
+    v_log: bool = False,
+    v_nq_packed: bool = False,
+    interpret: bool = True,
+    unpack: str | None = None,
+    n_bins_cap: int | None = None,
+) -> jax.Array:
+    """Fused speculative-verify flash-decode: q_len query rows per slot,
+    one page walk. Returns (B, nkv, q_len*g, Dp) f32 (split-half undone)."""
+    b, nkv, rows, dp = q_rot.shape
+    if rows != q_len * g:
+        raise ValueError(f"q_rot rows {rows} != q_len*g = {q_len * g}")
+    page_size = k_idx.shape[1]
+    mp = page_table.shape[1]
+    pairs = dp // 2
+    if unpack is None:
+        unpack = default_unpack(interpret)
+    grid = (b, nkv, mp)
+
+    bins = jnp.stack([
+        jnp.asarray(n_bins_k, jnp.int32).reshape(()),
+        jnp.asarray(n_bins_v, jnp.int32).reshape(()),
+    ])
+    q_perm = _to_split_half(q_rot)
+
+    def pool_spec(arr):
+        last = arr.shape[-1]
+        return pl.BlockSpec(
+            (1, page_size, 1, last),
+            lambda bi, ni, pi, pt, lens, bins_: (pt[bi, pi], 0, ni, 0))
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # page_table, lengths, bins
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, dp),
+                         lambda bi, ni, pi, *_: (bi, ni, 0, 0)),
+            pool_spec(k_idx), pool_spec(k_nq),
+            pool_spec(k_rmin), pool_spec(k_rmax),
+            pool_spec(v_idx), pool_spec(v_nq),
+            pool_spec(v_rmin), pool_spec(v_rmax),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rows, dp),
+                               lambda bi, ni, pi, *_: (bi, ni, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rows, 1), jnp.float32),
+            pltpu.VMEM((rows, 1), jnp.float32),
+            pltpu.VMEM((rows, dp), jnp.float32),
+        ],
+    )
+    out_perm = pl.pallas_call(
+        functools.partial(
+            paged_qattn_multi_kernel, page_size=page_size, pairs=pairs,
+            q_len=q_len, g=g, idx_bits=idx_bits, k_bits=k_bits, k_log=k_log,
+            k_nq_packed=k_nq_packed, v_bits=v_bits, v_log=v_log,
+            v_nq_packed=v_nq_packed, unpack=unpack, n_bins_cap=n_bins_cap),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, nkv, rows, dp), jnp.float32),
         interpret=interpret,
     )(page_table.astype(jnp.int32), lengths.astype(jnp.int32), bins,
       q_perm, k_idx, k_nq, k_rmin, k_rmax, v_idx, v_nq, v_rmin, v_rmax)

@@ -24,6 +24,12 @@ loop to draft-verify-rollback (`repro.serving.speculate`): each dispatch
 scores the pending token plus up to 4 prompt-lookup drafts at once, commits
 the accepted run, and rolls back the rest. Greedy tokens are bitwise
 identical to the plain path; acceptance/steps-per-token stats are printed.
+
+Paged serving AOT-warms by default (`engine.warmup()` compiles every
+enumerable jit variant before the first request — serving/compile_cache.py)
+and prints the dispatch-discipline counters: jit variants compiled, compile
+and warmup wall, variants compiled post-warmup (must be 0), and host syncs
+engine-wide plus per request. --no-warmup shows the lazy alternative.
 """
 from __future__ import annotations
 
@@ -101,6 +107,10 @@ def main(argv=None):
     ap.add_argument("--draft-max-ngram", type=int, default=3,
                     help="paged: longest trailing n-gram the drafter "
                          "matches (with --speculate)")
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="paged: skip the AOT warmup (variants then "
+                         "compile lazily inside the serve, smearing "
+                         "compile wall across the first requests)")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="stop a sequence when it samples this token")
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -207,6 +217,8 @@ def _serve_paged(args, cfg, qz, backend, params, tokens, lens):
         speculate=args.speculate, draft_len=args.draft_len,
         draft_max_ngram=args.draft_max_ngram)
     eng = scheduler_lib.PagedServingEngine(params, cfg, backend, sched)
+    if not args.no_warmup:
+        eng.warmup()
     results, stats = eng.run(requests, rng=jax.random.PRNGKey(args.seed))
     print(f"backend: {backend.name} (paged); slots={args.slots} "
           f"page_size={args.page_size} pool={num_pages - 1} pages; "
@@ -214,7 +226,17 @@ def _serve_paged(args, cfg, qz, backend, params, tokens, lens):
     for r in results:
         print(f"  req {r.rid}: prompt {r.prompt_len:4d} tok -> generated "
               f"{len(r.tokens):3d} tok in {r.latency_s * 1e3:7.1f} ms "
-              f"(ttft {r.ttft_s * 1e3:6.1f} ms): {r.tokens[:12]}")
+              f"(ttft {r.ttft_s * 1e3:6.1f} ms, {r.host_sync_count} host "
+              f"syncs): {r.tokens[:12]}")
+    perf = stats["perf"]
+    print(f"dispatch: {perf['jit_variants_compiled']} jit variants "
+          f"({'AOT warmup' if perf['warmed'] else 'lazily compiled'}, "
+          f"compile wall {perf['compile_wall_s']:.1f} s, warmup wall "
+          f"{perf['warmup_wall_s']:.1f} s); "
+          f"{perf['post_warmup_variants']} compiled post-warmup "
+          f"(0 = every hot-loop shape was enumerated); "
+          f"{perf['host_sync_count']} host syncs total "
+          f"(one per burst boundary, not per token)")
     print(f"aggregate: {stats['tokens_per_sec']:.1f} tok/s, "
           f"p50 latency {stats['latency_p50_s'] * 1e3:.1f} ms, "
           f"p99 {stats['latency_p99_s'] * 1e3:.1f} ms; prefill "

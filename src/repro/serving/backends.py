@@ -322,11 +322,17 @@ class QuantPallasBackend(_QuantBackendBase):
     it to a paged engine's page_size makes the contiguous kernel's
     accumulation order bit-for-bit the paged kernel's (parity tests and
     the serve-throughput baseline use this).
+
+    unpack overrides the kernel's bitstream unpack scheme
+    (`packing.UNPACK_METHODS`; None resolves per platform — gather off-TPU,
+    bitplane on TPU). Bitwise identical either way; the autotuner
+    (`kernels.qattn.autotune`) measures which is faster for a geometry.
     """
 
     name: str = "quant-pallas"
     interpret: Optional[bool] = None
     block_t: Optional[int] = None
+    unpack: Optional[str] = None
 
     def attend(self, q, layer_cache, nk, nv, n_valid):
         layer_kq, layer_vq = layer_cache
@@ -335,7 +341,8 @@ class QuantPallasBackend(_QuantBackendBase):
             interpret = jax.default_backend() != "tpu"
         return qattn_ops.attend_quant_cache_op(
             q, layer_kq, layer_vq, nk, nv, n_valid, self.cfg,
-            self.quantizer, interpret=interpret, block_t=self.block_t)
+            self.quantizer, interpret=interpret, block_t=self.block_t,
+            unpack=self.unpack)
 
     def attend_stream_bytes(self, cache) -> int:
         """Cache bytes the kernel streams from HBM per decode step.
@@ -362,7 +369,25 @@ class QuantPallasBackend(_QuantBackendBase):
             interpret = jax.default_backend() != "tpu"
         return qattn_ops.paged_attend_quant_cache_op(
             q, layer_kq, layer_vq, nk, nv, page_table, lengths, self.cfg,
-            self.quantizer, interpret=interpret)
+            self.quantizer, interpret=interpret, unpack=self.unpack)
+
+    def paged_attend_multi(self, q, layer_cache, nk, nv, page_table,
+                           lengths):
+        """Fused verify: all q_len query rows of a slot share ONE page
+        walk (`paged_qattn_multi` — per-row causal frontiers applied as
+        score masks inside the kernel), instead of the base class's
+        `verify_rows` expansion that walks every page q_len times. The
+        quant-xla base implementation stays the parity oracle: both
+        produce bit-identical outputs (tests/test_speculate.py), this one
+        at ~1/q_len the kernel work — the difference between speculation
+        saving steps on paper and saving milliseconds."""
+        layer_kq, layer_vq = layer_cache
+        interpret = self.interpret
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return qattn_ops.paged_attend_multi_quant_cache_op(
+            q, layer_kq, layer_vq, nk, nv, page_table, lengths, self.cfg,
+            self.quantizer, interpret=interpret, unpack=self.unpack)
 
 
 def get_backend(

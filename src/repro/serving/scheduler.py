@@ -95,6 +95,11 @@ class RequestResult(NamedTuple):
     draft_proposed: int = 0  # draft tokens fed to verify steps
     draft_accepted: int = 0  # of those, how many the model confirmed
     verify_steps: int = 0  # sequential forward passes spent decoding
+    # perf accounting: device->host round-trips that advanced this request
+    # (admission readback + one per decode/verify burst it rode) — the
+    # dispatch-count observability ISSUE 6 adds so O(steps) host syncs
+    # cannot sneak back into the hot loop unnoticed
+    host_sync_count: int = 0
 
 
 #: `SchedulerConfig.prefix_cache` modes. "off" is the legacy raw-buffer
@@ -138,6 +143,14 @@ class SchedulerConfig:
                     per acceptance count).
     draft_max_ngram: longest trailing n-gram the prompt-lookup drafter
                     tries to match (it backs off to shorter ones).
+    spec_device:    fuse up to `max_burst` draft->verify->accept rounds
+                    into ONE device dispatch: drafting runs on device
+                    (`speculate.propose_draft_device`) over a resident
+                    token buffer and the host reads tokens back only at
+                    burst boundaries. False falls back to the host-driven
+                    one-round-per-dispatch loop (`_spec_step`), kept as
+                    the parity oracle — both emit bitwise-identical greedy
+                    tokens (tests/test_speculate.py).
     """
 
     num_slots: int = 4
@@ -153,6 +166,7 @@ class SchedulerConfig:
     speculate: bool = False
     draft_len: int = 4  # draft tokens per verify step (q_len = draft_len+1)
     draft_max_ngram: int = speculate_lib.DEFAULT_MAX_NGRAM
+    spec_device: bool = True  # fused on-device spec burst (see docstring)
 
     def __post_init__(self):
         if self.prefill_chunk % self.page_size:
@@ -209,6 +223,7 @@ class _Slot:
         self.draft_proposed = 0
         self.draft_accepted = 0
         self.verify_steps = 0
+        self.host_syncs = 1  # the admission readback itself
 
 
 class PagedServingEngine:
@@ -261,11 +276,29 @@ class PagedServingEngine:
         if sched.prefix_cache == "share":
             self.trie = prefix_lib.PrefixTrie(
                 self.allocator, sched.page_size, sched.prefix_pages)
+        # device-resident token streams for on-device drafting: slot i's
+        # prompt + every emitted token (ending with the pending token),
+        # shipped to the spec-burst dispatch and read back only at burst
+        # boundaries. Width = the token capacity any slot can reach.
+        cap_tokens = sched.max_pages * sched.page_size
+        self.ctx_buf = np.zeros((s, cap_tokens), np.int32)
+        self.ctx_len = np.zeros((s,), np.int32)
         self._decode_fn = self._build_decode()
         self._verify_fn = self._build_verify() if sched.speculate else None
+        self._spec_fn = (self._build_spec()
+                         if sched.speculate and sched.spec_device else None)
         # (suffix bucket width, skipped prefix tokens) -> jit fn
         self._prefill_fns: dict[tuple[int, int], object] = {}
         self._prefix_load_fns: dict[int, object] = {}  # prefix pages -> fn
+        # --- perf observability (serving/compile_cache.py wires warmup):
+        # every device dispatch routes through `_dispatch`, which counts
+        # distinct jit-variant keys and prefers AOT-compiled executables
+        self._compiled_keys: set = set()
+        self._exec: dict = {}  # variant key -> AOT-compiled executable
+        self._warmed = False
+        self._perf = dict(jit_variants_compiled=0, compile_wall_s=0.0,
+                          warmup_wall_s=0.0, host_sync_count=0,
+                          post_warmup_variants=0)
 
     # ------------------------------------------------------------ builders --
     def _build_decode(self):
@@ -355,6 +388,173 @@ class PagedServingEngine:
             return new_cache.k, new_cache.v, targets, emit
 
         return jax.jit(run, donate_argnums=(1, 2))
+
+    def _build_spec(self):
+        """Fused speculative burst: up to `k_rounds` (<= max_burst)
+        draft -> verify -> accept rounds in ONE device dispatch — a jitted
+        while_loop whose body drafts on device from the resident token
+        stream (`speculate.propose_draft_device`), verifies through
+        `verify_step_paged`, computes acceptance (`accepted_counts`), and
+        commits on device: accepted tokens are appended to the stream, the
+        frontier advances by the accepted count, and the next round's
+        optimistic appends overwrite the rejected suffix in place (rejected
+        codes past the frontier are dead bytes — no pop dispatch needed).
+        The host reads tokens/counters back ONCE per burst instead of once
+        per round, which is what turns speculation's step savings into
+        wall-clock: O(1) host syncs per burst, not O(rounds).
+
+        Adaptive rounds: a slot whose verify rejected its ENTIRE draft
+        stops drafting for the rest of the burst (drafts there are pure
+        verify-row cost), and a round in which no slot drafts runs the
+        plain single-token decode step via `lax.cond` instead of a padded
+        q_len-row verify — emitting bitwise the same token (verify row 0
+        is exactly the decode accumulation) at a fraction of the kernel
+        cost. Divergent-output requests therefore degrade to plain-decode
+        cost instead of paying the verify multiplier for nothing.
+
+        Token parity: each round's math is exactly `_spec_step`'s (same
+        drafts — pinned token-for-token, same verify kernel, same
+        acceptance rule), and rounds are sequential in both, so greedy
+        tokens are bitwise the host loop's (tests/test_speculate.py pins
+        device-vs-host burst equality end to end).
+        """
+        cfg, backend = self.cfg, self.backend
+        s = self.sched.num_slots
+        dl = self.sched.draft_len
+        q_len = dl + 1
+        max_ng = self.sched.draft_max_ngram
+        max_burst = self.sched.max_burst
+        eos = self.sched.eos_id
+        out_w = max_burst * q_len
+        c_tok = self.ctx_buf.shape[1]
+        rows = jnp.arange(s)
+
+        def run(params, pool_k, pool_v, page_table, lengths, active, owned,
+                ctx, ctx_len, remaining, k_rounds):
+            out0 = jnp.full((s, out_w), -1, jnp.int32)
+            zeros = jnp.zeros((s,), jnp.int32)
+
+            def cond(c):
+                return (c[0] < k_rounds) & jnp.any(c[4])
+
+            def body(c):
+                (step, pk, pv, lens, act, dok, ctx_b, clen, emitted, out,
+                 n_prop, n_acc, n_steps) = c
+                # draft cap mirrors the host's remaining-1 budget clamp:
+                # even a fully accepted run cannot overshoot the budget
+                # (or the admission page reservation)
+                cap = remaining - emitted - 1
+                draft, nd = speculate_lib.propose_draft_device(
+                    ctx_b, clen, dl, max_ng, cap)
+                # adaptive throttle: a slot whose last verify rejected its
+                # whole draft stops drafting for the rest of the burst
+                # (re-enabled at the next burst boundary) — its proposals
+                # were costing verify rows and yielding nothing
+                nd = jnp.where(dok, nd, 0)
+                pending = jnp.take_along_axis(
+                    ctx_b, jnp.clip(clen - 1, 0)[:, None], axis=1)[:, 0]
+                cache = pages_lib.PagedKVCache(pk, pv, page_table, lens)
+
+                def verify_round(_):
+                    fed = jnp.concatenate([pending[:, None], draft],
+                                          axis=1)
+                    n_fed = jnp.where(act, 1 + nd, 1)
+                    logits, new_cache = decoding.verify_step_paged(
+                        params, cfg, cache, fed, act, n_fed,
+                        backend=backend, write_mask=owned)
+                    targets = jnp.argmax(logits,
+                                         axis=-1).astype(jnp.int32)
+                    emit = speculate_lib.accepted_counts(targets, fed,
+                                                         n_fed, eos)
+                    emit = jnp.where(act, jnp.minimum(emit, n_fed), 0)
+                    return (new_cache.k, new_cache.v, targets, emit,
+                            n_fed)
+
+                def decode_round(_):
+                    # nobody drafted: a verify over q_len padded rows
+                    # would emit exactly one token per slot at q_len times
+                    # the kernel rows — run the plain single-token step
+                    # instead (bitwise the same emitted token: verify row
+                    # 0 IS the decode accumulation)
+                    logits, new_cache = decoding.decode_step_paged(
+                        params, cfg, cache, pending[:, None], act,
+                        backend=backend, write_mask=owned)
+                    t1 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                    targets = jnp.zeros((s, q_len),
+                                        jnp.int32).at[:, 0].set(t1)
+                    return (new_cache.k, new_cache.v, targets,
+                            jnp.where(act, 1, 0).astype(jnp.int32),
+                            jnp.ones((s,), jnp.int32))
+
+                pk2, pv2, targets, emit, n_fed = jax.lax.cond(
+                    jnp.any(act & (nd > 0)), verify_round, decode_round,
+                    operand=None)
+                # throttle slots that proposed and accepted nothing
+                dok = dok & ~(act & (n_fed > 1) & (emit <= 1))
+                # on-device commit: accepted targets go to the output
+                # buffer (at each slot's running offset) and the token
+                # stream — ONE scatter each (every (slot, j) pair hits a
+                # distinct position); invalid positions index out of
+                # bounds and drop
+                jj = jnp.arange(q_len, dtype=jnp.int32)[None, :]
+                valid = act[:, None] & (jj < emit[:, None])
+                rows2 = jnp.broadcast_to(rows[:, None], (s, q_len))
+                out = out.at[
+                    rows2, jnp.where(valid, emitted[:, None] + jj,
+                                     out_w)].set(targets, mode="drop")
+                ctx_b = ctx_b.at[
+                    rows2, jnp.where(valid, clen[:, None] + jj,
+                                     c_tok)].set(targets, mode="drop")
+                last = jnp.take_along_axis(
+                    targets, jnp.clip(emit - 1, 0)[:, None], axis=1)[:, 0]
+                emitted = emitted + emit
+                clen = clen + emit
+                lens = lens + emit  # commit: frontier over accepted run
+                n_prop = n_prop + jnp.where(act, n_fed - 1, 0)
+                n_acc = n_acc + jnp.where(act, emit - 1, 0)
+                n_steps = n_steps + act.astype(jnp.int32)
+                done = emitted >= remaining
+                if eos is not None:
+                    done = done | (act & (last == eos))
+                return (step + 1, pk2, pv2, lens,
+                        act & ~done, dok, ctx_b, clen, emitted, out,
+                        n_prop, n_acc, n_steps)
+
+            init = (jnp.asarray(0, jnp.int32), pool_k, pool_v, lengths,
+                    active, active, ctx, ctx_len, zeros, out0, zeros,
+                    zeros, zeros)
+            fin = jax.lax.while_loop(cond, body, init)
+            # pool_k, pool_v, emitted, out, n_prop, n_acc, n_steps
+            return (fin[1], fin[2], fin[8], fin[9], fin[10], fin[11],
+                    fin[12])
+
+        return jax.jit(run, donate_argnums=(1, 2))
+
+    def warmup(self, skips=(0,)) -> dict:
+        """AOT-compile every enumerable dispatch variant up front — see
+        `serving/compile_cache.py`. After warmup, any NEW variant the run
+        loop compiles is a bucketing regression, counted in
+        stats["perf"]["post_warmup_variants"] (CI pins it at zero)."""
+        from repro.serving import compile_cache
+        return compile_cache.warmup(self, skips=skips)
+
+    def _dispatch(self, key: tuple, fn, *args):
+        """Route a device dispatch through the jit-variant table.
+
+        `key` names the compiled variant ((kind, *static bucket values));
+        AOT-warmed executables (`serving/compile_cache.py`) are preferred
+        over the lazy jit path, first-seen keys are counted into
+        stats["perf"]["jit_variants_compiled"], and keys first seen after
+        warmup increment `post_warmup_variants` — the counter the
+        perf-smoke CI job asserts stays zero.
+        """
+        if key not in self._compiled_keys:
+            self._compiled_keys.add(key)
+            self._perf["jit_variants_compiled"] += 1
+            if self._warmed:
+                self._perf["post_warmup_variants"] += 1
+        ex = self._exec.get(key)
+        return fn(*args) if ex is None else ex(*args)
 
     def _live_table_width(self, k: int) -> int:
         """Page-table columns a k-step burst can touch, bucketed to the next
@@ -451,7 +651,8 @@ class PagedServingEngine:
         mp = self._live_table_width(q_len)
         assert mp & (mp - 1) == 0 or mp == self.sched.max_pages
         owned = self._owned_write_mask(n_fed)
-        pk, pv, targets, emit = self._verify_fn(
+        pk, pv, targets, emit = self._dispatch(
+            ("verify", mp), self._verify_fn,
             self.params, self.pool.k, self.pool.v,
             jnp.asarray(self.page_table[:, :mp]),
             jnp.asarray(self.lengths), jnp.asarray(self.active),
@@ -459,6 +660,7 @@ class PagedServingEngine:
         self.pool = self.pool._replace(k=pk, v=pv)
         targets = np.asarray(targets)
         emit = np.asarray(emit)
+        self._perf["host_sync_count"] += 1
         t_now = time.perf_counter() - self._t0
         for i in range(s):
             if not self.active[i] or emit[i] == 0:
@@ -467,6 +669,10 @@ class PagedServingEngine:
             e, m = int(emit[i]), int(n_fed[i])
             st.generated.extend(int(t) for t in targets[i, :e])
             st.draft_accepted += e - 1
+            st.host_syncs += 1
+            cl = int(self.ctx_len[i])
+            self.ctx_buf[i, cl:cl + e] = targets[i, :e]
+            self.ctx_len[i] = cl + e
             self.next_tok[i] = int(targets[i, e - 1])
             finished = self._finished(st)
             # transactional commit: the verify appended m tokens' K/V
@@ -482,6 +688,73 @@ class PagedServingEngine:
             self.lengths[i] = new_len
             if finished:
                 self._evict(i, results, t_now)
+
+    def _spec_burst(self, remaining: np.ndarray, results: list,
+                    queued: bool = False) -> int:
+        """Up to max_burst fused draft->verify->accept rounds in ONE
+        dispatch (`_build_spec`), host readback only at the burst boundary.
+        Returns the number of sequential rounds the device executed.
+
+        Page bookkeeping: the device commits by advancing each slot's
+        frontier; rejected codes past it are dead bytes the next round's
+        appends overwrite, so no per-round `pop_tokens` dispatch is needed
+        — page references are reconciled wholesale at eviction. The
+        admission reservation covers every position a burst can touch
+        (appends stay < lengths + remaining by the on-device draft cap).
+        """
+        s = self.sched.num_slots
+        q_len = self.sched.draft_len + 1
+        rem_act = remaining[self.active]
+        rem_max = int(rem_act.max())
+        mp = self._live_table_width(rem_max + q_len)
+        owned = self._owned_write_mask(remaining)
+        if queued:
+            # requests are waiting for a slot: burst only as far as the
+            # fastest any active slot can finish (a round emits at most
+            # q_len tokens, so that is ceil(remaining / q_len) rounds) —
+            # past that, a fully-accepting slot would sit frozen in-burst
+            # while the queue waits at the host. The floor of 4 keeps the
+            # per-dispatch launch overhead amortized over >= 4 rounds.
+            k_rounds = max(4, min(self.sched.max_burst,
+                                  int((-(-rem_act // q_len)).min())))
+        else:
+            # empty queue: a freed slot has nothing to take anyway, and
+            # the device loop exits early once every slot is done — so
+            # burst long and amortize the dispatch launch cost
+            k_rounds = min(self.sched.max_burst, rem_max)
+        pk, pv, emitted, out, n_prop, n_acc, n_steps = self._dispatch(
+            ("spec", mp), self._spec_fn,
+            self.params, self.pool.k, self.pool.v,
+            jnp.asarray(self.page_table[:, :mp]), jnp.asarray(self.lengths),
+            jnp.asarray(self.active), jnp.asarray(owned),
+            jnp.asarray(self.ctx_buf), jnp.asarray(self.ctx_len),
+            jnp.asarray(remaining), jnp.asarray(k_rounds, jnp.int32))
+        self.pool = self.pool._replace(k=pk, v=pv)
+        emitted = np.asarray(emitted)
+        out = np.asarray(out)
+        n_prop, n_acc, n_steps = (np.asarray(a) for a in
+                                  (n_prop, n_acc, n_steps))
+        self._perf["host_sync_count"] += 1
+        t_now = time.perf_counter() - self._t0
+        for i in range(s):
+            if not self.active[i] or emitted[i] == 0:
+                continue
+            st = self.slots[i]
+            n = int(emitted[i])
+            toks = out[i, :n]
+            st.generated.extend(int(t) for t in toks)
+            st.draft_proposed += int(n_prop[i])
+            st.draft_accepted += int(n_acc[i])
+            st.verify_steps += int(n_steps[i])
+            st.host_syncs += 1
+            self.next_tok[i] = int(toks[-1])
+            self.lengths[i] += n
+            cl = int(self.ctx_len[i])
+            self.ctx_buf[i, cl:cl + n] = toks
+            self.ctx_len[i] = cl + n
+            if self._finished(st):
+                self._evict(i, results, t_now)
+        return int(n_steps.max(initial=0))
 
     def _prefill_fn(self, width: int, skip: int):
         """Chunked prefill for a `width`-token suffix after a `skip`-token
@@ -560,10 +833,12 @@ class PagedServingEngine:
                 body, x, (params["layers"], buf_k, buf_v, nk, nv))
             return x, nbk, nbv, ck, cv
 
-        def run(params, tokens, page_groups, last_off, prefix_k, prefix_v,
-                rng, pool_k, pool_v):
+        def run(params, tokens, page_groups, last_chunk, last_off,
+                prefix_k, prefix_v, rng, pool_k, pool_v):
             # tokens (n_chunks, C) suffix; page_groups (n_chunks, C/ps)
-            # SUFFIX page ids; prefix_k/v (L, 1, skip, n_kv, h) decoded
+            # SUFFIX page ids (trash page for pow-2 padding chunks);
+            # last_chunk: index of the last REAL chunk (the bucket may pad
+            # past it); prefix_k/v (L, 1, skip, n_kv, h) decoded
             # shared-prefix K/V (zero-width when skip == 0)
             dt = jnp.dtype(cfg.compute_dtype)
             sfx_shape = (cfg.num_layers, 1, width, cfg.num_kv_heads,
@@ -590,16 +865,18 @@ class PagedServingEngine:
                 chunk_body, (*buf0, pool_k, pool_v),
                 (tokens, jnp.arange(n_chunks, dtype=jnp.int32),
                  page_groups))
-            # sample the first token in-jit from the last valid position
-            # (always inside the final chunk: buckets are ceil(plen/C)*C)
-            x_final = xs[n_chunks - 1]  # (1, C, D)
+            # sample the first token in-jit from the last valid position —
+            # inside the last REAL chunk (pow-2 buckets may pad chunks past
+            # it; those compute garbage into the trash page only)
+            x_final = jax.lax.dynamic_index_in_dim(
+                xs, last_chunk, axis=0, keepdims=False)  # (1, C, D)
             x_last = jax.lax.dynamic_slice_in_dim(x_final, last_off, 1,
                                                   axis=1)
             logits = transformer.lm_logits(params, cfg, x_last)[:, 0]
             tok = engine_lib.sample_tokens(rng, logits, sc)
             return tok, pool_k, pool_v
 
-        fn = jax.jit(run, donate_argnums=(7, 8))
+        fn = jax.jit(run, donate_argnums=(8, 9))
         self._prefill_fns[key] = fn
         return fn
 
@@ -644,12 +921,32 @@ class PagedServingEngine:
         return fn
 
     # ------------------------------------------------------------ admission --
-    def _pages_needed(self, req: Request) -> tuple[int, int]:
-        """(bucketed prompt width, worst-case pages for the whole span) —
-        the reservation a cold admission makes (a prefix hit shrinks the
-        fresh allocation by the shared pages at admission time)."""
+    def _bucket_width(self, n_tokens: int) -> int:
+        """Pow-2 prefill-variant bucket for an `n_tokens` suffix: the chunk
+        count rounded up to the next power of two, clamped to the engine's
+        token capacity (never below the real chunk count). Compute-only
+        padding — padded chunks scatter to the trash page and reserve no
+        pool pages — so O(log max_context) prefill variants compile in
+        total, enumerable up front by `serving/compile_cache.py`, instead
+        of one per distinct prompt chunk count."""
         chunk = self.sched.prefill_chunk
-        width = -(-len(req.tokens) // chunk) * chunk  # bucketed prompt
+        cap_chunks = max(1, (self.sched.max_pages * self.sched.page_size)
+                         // chunk)
+        nc = max(1, -(-n_tokens // chunk))
+        b = 1
+        while b < nc:
+            b *= 2
+        return min(b, max(cap_chunks, nc)) * chunk
+
+    def _pages_needed(self, req: Request) -> tuple[int, int]:
+        """(exact chunked prompt width, worst-case pages for the whole
+        span) — the reservation a cold admission makes (a prefix hit
+        shrinks the fresh allocation by the shared pages at admission
+        time). The reservation uses the EXACT chunk count — the pow-2
+        prefill-variant padding (`_bucket_width`) writes only to the trash
+        page, so it never inflates a request's page footprint."""
+        chunk = self.sched.prefill_chunk
+        width = -(-len(req.tokens) // chunk) * chunk  # exact chunked prompt
         span = max(width, len(req.tokens) + req.max_new_tokens)
         return width, pages_lib.pages_for_tokens(span, self.sched.page_size)
 
@@ -681,28 +978,38 @@ class PagedServingEngine:
         chunk = self.sched.prefill_chunk
         ps = self.sched.page_size
         plen = len(req.tokens)
-        width = -(-(plen - skip) // chunk) * chunk  # bucketed suffix
+        width = self._bucket_width(plen - skip)  # pow-2 variant bucket
         n_chunks = width // chunk
+        n_real = -(-(plen - skip) // chunk)  # chunks that hold real tokens
         pad = np.zeros((width,), np.int32)
         pad[:plen - skip] = req.tokens[skip:]
         pages_per_chunk = chunk // ps
-        last_off = (plen - skip - 1) - (n_chunks - 1) * chunk
+        last_chunk = n_real - 1
+        last_off = (plen - skip - 1) - last_chunk * chunk
+        # padded chunks (>= n_real) scatter their codes to the trash page
+        # (physical page 0) — compute-only padding, zero pool footprint
+        groups = np.zeros((n_chunks, pages_per_chunk), np.int32)
+        groups[:n_real] = fresh_ids[:n_real * pages_per_chunk].reshape(
+            n_real, pages_per_chunk)
         if skip:
-            pfx_k, pfx_v = self._prefix_load_fn(skip // ps)(
+            pfx_k, pfx_v = self._dispatch(
+                ("prefix_load", skip // ps),
+                self._prefix_load_fn(skip // ps),
                 jnp.asarray(shared_ids), self.pool.k, self.pool.v)
         else:
             empty = (self.cfg.num_layers, 1, 0, self.cfg.num_kv_heads,
                      self.cfg.head_dim)
             pfx_k = pfx_v = jnp.zeros(empty, self.cfg.compute_dtype)
-        tok, pk, pv = self._prefill_fn(width, skip)(
+        tok, pk, pv = self._dispatch(
+            ("prefill", width, skip), self._prefill_fn(width, skip),
             self.params, jnp.asarray(pad.reshape(n_chunks, chunk)),
-            jnp.asarray(fresh_ids[:n_chunks * pages_per_chunk].reshape(
-                n_chunks, pages_per_chunk)),
+            jnp.asarray(groups), jnp.asarray(last_chunk, jnp.int32),
             jnp.asarray(last_off, jnp.int32), pfx_k, pfx_v, rng,
             self.pool.k, self.pool.v)
         self.pool = self.pool._replace(k=pk, v=pv)
         self._prefill_chunks += n_chunks
         self._prefill_tokens += width
+        self._perf["host_sync_count"] += 1  # first-token readback
         first = int(tok[0])
         page_ids = np.concatenate([shared_ids, fresh_ids]).astype(np.int32)
         row = np.zeros((self.sched.max_pages,), np.int32)
@@ -711,6 +1018,12 @@ class PagedServingEngine:
         self.lengths[slot] = plen
         self.active[slot] = True
         self.next_tok[slot] = first
+        # device-resident visible stream for on-device drafting: prompt +
+        # every emitted token (the pending token last)
+        self.ctx_buf[slot] = 0
+        self.ctx_buf[slot, :plen] = req.tokens
+        self.ctx_buf[slot, plen] = first
+        self.ctx_len[slot] = plen + 1
         self.slots[slot] = _Slot(req, first, t_admit,
                                  time.perf_counter() - self._t0)
         if self.trie is not None:
@@ -729,6 +1042,8 @@ class PagedServingEngine:
         self.lengths[slot] = 0
         self.active[slot] = False
         self.next_tok[slot] = 0
+        self.ctx_buf[slot] = 0
+        self.ctx_len[slot] = 0
         self.slots[slot] = None
         results.append(RequestResult(
             rid=st.req.rid,
@@ -740,6 +1055,7 @@ class PagedServingEngine:
             draft_proposed=st.draft_proposed,
             draft_accepted=st.draft_accepted,
             verify_steps=st.verify_steps,
+            host_sync_count=st.host_syncs,
         ))
 
     def _finished(self, st: _Slot) -> bool:
@@ -848,9 +1164,15 @@ class PagedServingEngine:
                     remaining[i] = (st.req.max_new_tokens
                                     - len(st.generated))
             if self.sched.speculate:
-                # --- draft -> verify -> accept/rollback: ONE dispatch
-                self._spec_step(remaining, results)
-                steps += 1
+                if self.sched.spec_device:
+                    # --- fused burst: up to max_burst draft->verify->
+                    # accept rounds, ONE dispatch, one host sync
+                    steps += self._spec_burst(remaining, results,
+                                              queued=bool(pending))
+                else:
+                    # --- host-driven oracle: one round per dispatch
+                    self._spec_step(remaining, results)
+                    steps += 1
                 continue
             # --- one decode burst: k fused steps, k = min remaining budget
             k = int(min(self.sched.max_burst,
@@ -858,7 +1180,8 @@ class PagedServingEngine:
             mp = self._live_table_width(k)
             owned = self._owned_write_mask(k)
             rng, sub = jax.random.split(rng)
-            pk, pv, emitted, out = self._decode_fn(
+            pk, pv, emitted, out = self._dispatch(
+                ("decode", mp), self._decode_fn,
                 self.params, self.pool.k, self.pool.v,
                 jnp.asarray(self.page_table[:, :mp]),
                 jnp.asarray(self.lengths),
@@ -868,6 +1191,7 @@ class PagedServingEngine:
             self.pool = self.pool._replace(k=pk, v=pv)
             emitted = np.asarray(emitted)
             out = np.asarray(out)
+            self._perf["host_sync_count"] += 1
             steps += int(emitted.max(initial=0))
             t_now = time.perf_counter() - self._t0
             for i in range(self.sched.num_slots):
@@ -877,6 +1201,10 @@ class PagedServingEngine:
                 self.lengths[i] += n  # each fed token's KV was appended
                 self.next_tok[i] = out[i, n - 1]
                 self.slots[i].generated.extend(int(t) for t in out[i, :n])
+                self.slots[i].host_syncs += 1
+                cl = int(self.ctx_len[i])
+                self.ctx_buf[i, cl:cl + n] = out[i, :n]
+                self.ctx_len[i] = cl + n
                 if self._finished(self.slots[i]):
                     self._evict(i, results, t_now)
         wall = time.perf_counter() - self._t0
@@ -901,6 +1229,10 @@ class PagedServingEngine:
             "prefill_tokens_computed": self._prefill_tokens,
             "prefill_wall_s": prefill_wall,
         }
+        # dispatch/compile observability: cumulative over the engine's
+        # lifetime (compile cost is paid once and amortized across runs —
+        # see serving/compile_cache.py and docs/serving.md "Performance")
+        stats["perf"] = dict(self._perf, warmed=self._warmed)
         if self.sched.speculate:
             # draft/verify accounting: a request's decode-emitted tokens
             # exclude its first token (sampled by prefill), so

@@ -67,10 +67,18 @@ def propose_draft(context: np.ndarray, draft_len: int,
     recent earlier occurrence of the context's trailing n-gram.
 
     Tries n = max_ngram..1: if `context[-n:]` occurred earlier in
-    `context` (with at least one token following it), proposes the up-to
-    `draft_len` tokens that followed its most recent occurrence. Returns
-    an empty array when nothing matches (the verify step then degenerates
-    to a plain decode step) or when `draft_len < 1`.
+    `context` (with at least one token following it), proposes `draft_len`
+    tokens read CYCLICALLY from its most recent occurrence: positions
+    start, start+1, ... wrap back to start when they reach the stream end.
+    The wrap is the periodic-stream extrapolation — if the stream repeats
+    with period p, the most recent match ends exactly p tokens before the
+    end, so the cyclic read predicts token L+j as ctx[start + (j mod p)],
+    the true continuation of a period-p stream. Without it a period-1
+    stream (the common attractor of greedy decode) can only ever propose
+    ONE token per round while the verify dispatch pays for q_len rows
+    regardless — the wrap costs nothing and fills the whole budget.
+    Returns an empty array when nothing matches (the verify step then
+    degenerates to a plain decode step) or when `draft_len < 1`.
 
     `context` is the request's full visible stream — prompt followed by
     every emitted token, ending with the pending token about to be fed —
@@ -89,8 +97,72 @@ def propose_draft(context: np.ndarray, draft_len: int,
         hits = np.flatnonzero((windows == pattern).all(axis=1))
         if hits.size:
             start = int(hits[-1]) + ng  # most recent occurrence wins
-            return ctx[start:start + draft_len].copy()
+            period = n - start  # match-to-end distance = assumed period
+            return ctx[start + np.arange(draft_len) % period].copy()
     return np.zeros((0,), np.int32)
+
+
+def propose_draft_device(ctx: jnp.ndarray, ctx_len: jnp.ndarray,
+                         draft_len: int, max_ngram: int,
+                         cap: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched on-device `propose_draft`: the same prompt-lookup n-gram
+    backoff, as traced array ops over a device-resident token buffer.
+
+    ctx:     (B, C) int32 — each slot's visible stream (prompt + every
+             emitted token, ending with the pending token), left-aligned,
+             garbage past ctx_len.
+    ctx_len: (B,) int32 valid tokens per slot.
+    cap:     (B,) int32 per-slot draft cap (the scheduler's remaining-1
+             budget clamp); slots with cap < 1 draft nothing.
+
+    Returns (draft (B, draft_len) int32 — garbage past its count,
+    n_draft (B,) int32 in [0, draft_len]).
+
+    Token-for-token identical to calling `propose_draft` per slot with
+    `draft_len = min(draft_len, cap[i])` (pinned by
+    tests/test_speculate.py): for each n = max_ngram..1 the most recent
+    earlier occurrence of the trailing n-gram wins, longest n first, and
+    the proposal reads cyclically from the match (wrapping at the stream
+    end — the periodic-stream extrapolation, see `propose_draft`), so any
+    match fills the whole per-slot cap. The host version costs
+    O(len·max_ngram) numpy compares plus a device round-trip per slot per
+    round; this one is a few masked compares fused into the spec-step
+    dispatch, which is what lets the whole draft->verify->accept round
+    stay on device.
+    """
+    b, c = ctx.shape
+    ctx = ctx.astype(jnp.int32)
+    ctx_len = jnp.asarray(ctx_len, jnp.int32)
+    cap = jnp.minimum(jnp.asarray(cap, jnp.int32), draft_len)
+    pos = jnp.arange(c, dtype=jnp.int32)[None, :]  # (1, C)
+    found = jnp.zeros((b,), bool)
+    start = jnp.zeros((b,), jnp.int32)  # first continuation token index
+    for ng in range(max_ngram, 0, -1):
+        # pattern[j] = ctx[len-ng+j]; out-of-range (len < ng+1) rows are
+        # killed by the i-range mask below, clip only guards the gather
+        pat_idx = jnp.clip(ctx_len[:, None] - ng
+                           + jnp.arange(ng, dtype=jnp.int32)[None, :], 0)
+        pattern = jnp.take_along_axis(ctx, pat_idx, axis=1)  # (B, ng)
+        # window starting at i matches iff ctx[i+j] == pattern[j] for all
+        # j, and ends before the last token (i <= len-1-ng) so at least
+        # one continuation token exists
+        ok = pos <= ctx_len[:, None] - 1 - ng
+        for j in range(ng):
+            shifted = jnp.roll(ctx, -j, axis=1)  # ctx[i+j] at column i
+            ok = ok & (shifted == pattern[:, j:j + 1])
+        best = jnp.max(jnp.where(ok, pos, -1), axis=1)  # most recent wins
+        take = ~found & (best >= 0)
+        start = jnp.where(take, best + ng, start)
+        found = found | take
+    n_draft = jnp.where(found & (cap >= 1), cap, 0)
+    # cyclic read from the match: period = match-to-end distance (>= 1
+    # whenever found — the match ends before the last token)
+    period = jnp.maximum(ctx_len - start, 1)[:, None]
+    idx = jnp.clip(start[:, None]
+                   + jnp.arange(draft_len, dtype=jnp.int32)[None, :]
+                   % period, 0, c - 1)
+    draft = jnp.take_along_axis(ctx, idx, axis=1)
+    return draft, n_draft.astype(jnp.int32)
 
 
 def accepted_counts(targets: jnp.ndarray, fed: jnp.ndarray,

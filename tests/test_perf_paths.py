@@ -1,0 +1,306 @@
+"""ISSUE 6 perf-path invariants: the fused multi-layer decode dispatch is
+bitwise-identical to a per-layer reference loop (both quant backends,
+paged and contiguous caches), the on-device drafter is token-for-token
+the host drafter on adversarial contexts, and the AOT compile cache
+leaves zero jit variants to compile after warmup."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import mixedkv, rates
+from repro.core.quantizer import KVQuantizer, QuantizerConfig
+from repro.models import attention, common, transformer
+from repro.serving import backends as backends_lib
+from repro.serving import decode as decoding
+from repro.serving import pages
+from repro.serving import scheduler
+from repro.serving import speculate
+
+
+def _cfg(**kw):
+    base = dict(name="perf", family="decoder", num_layers=3, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=128,
+                head_dim=32)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _qz(cfg):
+    return KVQuantizer(QuantizerConfig(
+        head_dim=cfg.head_dim, schedule=mixedkv.uniform(cfg.num_layers),
+        k_norm=rates.NORM_K8, v_norm=rates.NORM_V4_LOG, storage="bitpack"))
+
+
+def _backend(name, cfg, qz):
+    if name == "quant-pallas":
+        return backends_lib.QuantPallasBackend(cfg, qz, interpret=True)
+    return backends_lib.QuantXLABackend(cfg, qz, y_dtype=jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    qz = _qz(cfg)
+    params, _ = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, qz, params
+
+
+BACKENDS = ["quant-pallas", "quant-xla"]
+
+
+# ----------------------------------------- fused multi-layer decode --------
+def _layer(params, l):
+    return jax.tree.map(lambda a: a[l], params["layers"])
+
+
+def _paged_prompt_cache(params, cfg, qz, be, b, plen, ps, mp, rng):
+    """Prefill `b` prompts and scatter their codes into pool pages."""
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, plen)),
+                          jnp.int32)
+    pre = transformer.forward_prefill(params, cfg, {"tokens": prompts},
+                                      quantizer=qz)
+    pool = be.init_paged_cache(1 + b * mp + 1, ps, b, mp)
+    alloc = pages.PageAllocator(1 + b * mp + 1)
+    pt = np.zeros((b, mp), np.int32)
+    for i in range(b):
+        pt[i] = alloc.alloc(mp, i)
+    kq, vq = pre.kv_quant
+    pad = mp * ps - plen
+
+    def grow(a):
+        widths = [(0, 0)] * a.ndim
+        widths[2] = (0, pad)
+        return jnp.pad(a, widths)
+
+    kq = jax.tree.map(grow, kq)
+    vq = jax.tree.map(grow, vq)
+    pool_k, pool_v = pool.k, pool.v
+    for i in range(b):
+        pool_k = pages.write_prompt_pages(
+            pool_k, jax.tree.map(lambda a: a[:, i], kq),
+            jnp.asarray(pt[i]), ps)
+        pool_v = pages.write_prompt_pages(
+            pool_v, jax.tree.map(lambda a: a[:, i], vq),
+            jnp.asarray(pt[i]), ps)
+    return pages.PagedKVCache(pool_k, pool_v, jnp.asarray(pt),
+                              jnp.full((b,), plen, jnp.int32))
+
+
+def _decode_step_paged_per_layer(params, cfg, cache, tokens, active, *,
+                                 backend):
+    """Reference: decode_step_paged with the layer scan unrolled to a
+    host-side Python loop over per-layer backend ops — the pre-fusion
+    dispatch shape the one-dispatch path must reproduce bitwise."""
+    x = transformer.embed_inputs(params, cfg, {"tokens": tokens})
+    qz = backend.quantizer
+    lengths, page_table = cache.lengths, cache.page_table
+    positions = lengths[:, None]
+    nk, nv = transformer._layer_bins(qz, cfg.num_layers)
+    new_k, new_v = [], []
+    for l in range(cfg.num_layers):
+        lp = _layer(params, l)
+        b = x.shape[0]
+        q, k, v = attention.project_qkv(
+            lp["attn"], common.rms_norm(x, lp["norm1"], cfg.norm_eps),
+            positions, cfg)
+        ck = jax.tree.map(lambda a: a[l], cache.k)
+        cv = jax.tree.map(lambda a: a[l], cache.v)
+        new_c = backend.paged_append(
+            (ck, cv), k, v, nk[l], nv[l], page_table, lengths, active)
+        out = backend.paged_attend(
+            q, new_c, nk[l], nv[l], page_table, lengths + 1)
+        new_k.append(new_c[0])
+        new_v.append(new_c[1])
+        out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim
+                          ).astype(x.dtype)
+        h = jnp.einsum("bsk,kd->bsd", out, lp["attn"]["wo"])
+        x = transformer.ffn_residual(lp, common.radd(x, h), cfg)
+    stack = jax.tree.map(lambda *a: jnp.stack(a), *new_k)
+    stack_v = jax.tree.map(lambda *a: jnp.stack(a), *new_v)
+    new_cache = pages.PagedKVCache(
+        k=stack, v=stack_v, page_table=page_table,
+        lengths=jnp.where(active, lengths + 1, lengths))
+    return transformer.lm_logits(params, cfg, x)[:, 0], new_cache
+
+
+@pytest.mark.parametrize("backend_name", BACKENDS)
+def test_fused_multilayer_decode_paged_parity(setup, backend_name):
+    """The fused (single-dispatch, layer-scanned) paged decode step emits
+    bitwise-identical logits and pool contents to a per-layer Python loop
+    over the same backend ops, across several chained steps."""
+    cfg, qz, params = setup
+    be = _backend(backend_name, cfg, qz)
+    ps, mp, b, plen = 4, 4, 2, 6
+    rng = np.random.default_rng(3)
+    cache_f = _paged_prompt_cache(params, cfg, qz, be, b, plen, ps, mp, rng)
+    cache_r = cache_f
+    active = jnp.ones((b,), bool)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, 1)), jnp.int32)
+    # both sides jitted whole: the parity claim is between the two layer
+    # orchestrations (scan vs unrolled per-layer ops) under the same
+    # compilation discipline, not compiled-vs-eager dispatch
+    fused = jax.jit(lambda c, t: decoding.decode_step_paged(
+        params, cfg, c, t, active, backend=be))
+    ref = jax.jit(lambda c, t: _decode_step_paged_per_layer(
+        params, cfg, c, t, active, backend=be))
+    for _ in range(3):
+        logits_f, cache_f = fused(cache_f, toks)
+        logits_r, cache_r = ref(cache_r, toks)
+        np.testing.assert_array_equal(np.asarray(logits_f),
+                                      np.asarray(logits_r))
+        for a, bb in zip(jax.tree.leaves((cache_f.k, cache_f.v)),
+                         jax.tree.leaves((cache_r.k, cache_r.v))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
+        toks = jnp.argmax(logits_f, axis=-1)[:, None].astype(jnp.int32)
+
+
+def _decode_step_contig_per_layer(params, cfg, state, tokens, *, backend):
+    """Reference: contiguous decode_step with the layer scan unrolled to
+    a per-layer Python loop over backend.append/attend."""
+    x = transformer.embed_inputs(params, cfg, {"tokens": tokens})
+    cache = state.cache
+    lengths = cache.lengths
+    positions = lengths[:, None]
+    nk, nv = transformer._layer_bins(backend.quantizer, cfg.num_layers)
+    new_k, new_v = [], []
+    for l in range(cfg.num_layers):
+        lp = _layer(params, l)
+        b = x.shape[0]
+        ck = jax.tree.map(lambda a: a[l], cache.k)
+        cv = jax.tree.map(lambda a: a[l], cache.v)
+        q, k, v = attention.project_qkv(
+            lp["attn"], common.rms_norm(x, lp["norm1"], cfg.norm_eps),
+            positions, cfg)
+        new_c = backend.append((ck, cv), k, v, nk[l], nv[l], lengths)
+        out = backend.attend(q, new_c, nk[l], nv[l], lengths + 1)
+        new_k.append(new_c[0])
+        new_v.append(new_c[1])
+        out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim
+                          ).astype(x.dtype)
+        h = jnp.einsum("bsk,kd->bsd", out, lp["attn"]["wo"])
+        x = transformer.ffn_residual(lp, common.radd(x, h), cfg)
+    stack_k = jax.tree.map(lambda *a: jnp.stack(a), *new_k)
+    stack_v = jax.tree.map(lambda *a: jnp.stack(a), *new_v)
+    new_cache = type(cache)(k=stack_k, v=stack_v, lengths=lengths + 1)
+    logits = transformer.lm_logits(params, cfg, x)[:, 0]
+    return logits, decoding.DecodeState(cache=new_cache, states=None)
+
+
+@pytest.mark.parametrize("backend_name", BACKENDS)
+def test_fused_multilayer_decode_contiguous_parity(setup, backend_name):
+    """Same parity on the contiguous (non-paged) cache: fused layer-scan
+    decode_step vs the per-layer loop, chained greedy steps."""
+    cfg, qz, params = setup
+    be = _backend(backend_name, cfg, qz)
+    b = 2
+    rng = np.random.default_rng(5)
+    state_f = decoding.init_decode_state(cfg, b, 16, backend=be)
+    state_r = state_f
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, 1)), jnp.int32)
+    fused = jax.jit(lambda s, t: decoding.decode_step(
+        params, cfg, s, t, backend=be))
+    ref = jax.jit(lambda s, t: _decode_step_contig_per_layer(
+        params, cfg, s, t, backend=be))
+    for _ in range(4):
+        logits_f, state_f = fused(state_f, toks)
+        logits_r, state_r = ref(state_r, toks)
+        np.testing.assert_array_equal(np.asarray(logits_f),
+                                      np.asarray(logits_r))
+        for a, bb in zip(jax.tree.leaves((state_f.cache.k, state_f.cache.v)),
+                         jax.tree.leaves((state_r.cache.k, state_r.cache.v))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
+        toks = jnp.argmax(logits_f, axis=-1)[:, None].astype(jnp.int32)
+
+
+# ----------------------------------------------- device drafter parity -----
+def test_propose_draft_device_matches_host_adversarial():
+    """The on-device batched drafter is token-for-token the host drafter
+    on every adversarial shape at once: n-gram backoff (3->2->1), no
+    match anywhere, EOS-adjacent matches, a period-1 constant stream
+    (the cyclic-read case), a 1-token context, and per-slot caps of 0 /
+    less-than-draft_len."""
+    eos = 99
+    draft_len, max_ngram = 4, 3
+    rows = [
+        # trailing 3-gram repeats -> longest-n match, cyclic fill
+        ([7, 1, 2, 3, 9, 5, 1, 2, 3], 4),
+        # trailing 3-gram unique, 2-gram repeats -> backoff to n=2
+        ([4, 8, 1, 5, 9, 8, 1], 4),
+        # only the single trailing token repeats -> backoff to n=1
+        ([3, 6, 2, 8, 4, 6], 4),
+        # all-distinct stream -> no match, zero draft
+        ([10, 11, 12, 13, 14, 15], 4),
+        # EOS-adjacent: the match's continuation IS the EOS token (the
+        # drafter must propose it verbatim; verify handles the stop)
+        ([5, 7, eos, 2, 5, 7], 4),
+        # EOS as the trailing token, repeated earlier mid-stream
+        ([eos, 4, 3, eos], 4),
+        # period-1 constant stream: cyclic read fills the whole budget
+        ([6, 6, 6, 6], 4),
+        # 1-token context: no window can exist
+        ([42], 4),
+        # cap = 0 -> drafting disabled for the slot
+        ([7, 1, 2, 3, 9, 5, 1, 2, 3], 0),
+        # cap < draft_len -> truncated to the cap
+        ([7, 1, 2, 3, 9, 5, 1, 2, 3], 2),
+    ]
+    c = max(len(r[0]) for r in rows) + 2
+    b = len(rows)
+    ctx = np.zeros((b, c), np.int32)
+    ctx_len = np.zeros((b,), np.int32)
+    cap = np.zeros((b,), np.int32)
+    for i, (toks, k) in enumerate(rows):
+        ctx[i, :len(toks)] = toks
+        ctx[i, len(toks):] = 77  # garbage past ctx_len must be ignored
+        ctx_len[i] = len(toks)
+        cap[i] = k
+    draft, n_draft = speculate.propose_draft_device(
+        jnp.asarray(ctx), jnp.asarray(ctx_len), draft_len, max_ngram,
+        jnp.asarray(cap))
+    draft, n_draft = np.asarray(draft), np.asarray(n_draft)
+    for i, (toks, k) in enumerate(rows):
+        want = speculate.propose_draft(
+            np.asarray(toks, np.int32), min(draft_len, k), max_ngram)
+        assert n_draft[i] == len(want), f"row {i}: {n_draft[i]} != {len(want)}"
+        np.testing.assert_array_equal(
+            draft[i, :n_draft[i]], want, err_msg=f"row {i}")
+    # sanity on the interesting rows: backoff found something, no-match
+    # found nothing, period-1 filled the budget
+    assert n_draft[0] == n_draft[1] == n_draft[2] == draft_len
+    assert n_draft[3] == 0 and n_draft[7] == 0 and n_draft[8] == 0
+    assert n_draft[6] == draft_len
+    np.testing.assert_array_equal(draft[6, :4], [6, 6, 6, 6])
+    assert n_draft[9] == 2
+
+
+# --------------------------------------------------- compile-cache gate ----
+@pytest.mark.parametrize("spec_on", [False, True],
+                         ids=["plain", "speculative"])
+def test_compile_cache_zero_new_variants_after_warmup(setup, spec_on):
+    """warmup() enumerates and AOT-compiles every dispatch variant the
+    run loop can hit; serving a mixed trace afterwards (twice) compiles
+    ZERO new jit variants — the invariant CI's perf-smoke job pins."""
+    cfg, qz, params = setup
+    be = _backend("quant-xla", cfg, qz)
+    sched = scheduler.SchedulerConfig(
+        num_slots=2, page_size=4, num_pages=64, max_context=32,
+        prefill_chunk=8, max_burst=4, speculate=spec_on, draft_len=3)
+    eng = scheduler.PagedServingEngine(params, cfg, be, sched)
+    info = eng.warmup()
+    assert info["variants"] > 0
+    assert info["compile_wall_s"] >= 0.0
+    rng = np.random.default_rng(9)
+    reqs = [scheduler.Request(
+        rid=i, tokens=rng.integers(0, cfg.vocab_size,
+                                   rng.integers(2, 13)).astype(np.int32),
+        max_new_tokens=int(rng.integers(1, 9))) for i in range(5)]
+    for _ in range(2):
+        _, stats = eng.run(reqs)
+        perf = stats["perf"]
+        assert perf["post_warmup_variants"] == 0, (
+            "run loop compiled a jit variant warmup() did not enumerate")
+        assert perf["jit_variants_compiled"] == info["variants"]
+        assert perf["warmed"]
+        assert perf["host_sync_count"] > 0
