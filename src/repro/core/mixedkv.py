@@ -110,6 +110,44 @@ def selective(
     return MixedKVSchedule(n_k, n_v)
 
 
+def degraded(schedule: MixedKVSchedule, *, factor: int = 2,
+             min_bins: int = 4) -> MixedKVSchedule:
+    """One degradation rung: every layer's codebook divided by `factor`
+    (floored at `min_bins`, which keeps >= 2 bits of angle resolution).
+
+    This is the serving-pressure lever ("shed -> degrade -> spill ->
+    evict", docs/serving.md): halving every codebook drops one angle bit
+    per element AND one physical index bit (`max_bits`), so a pool built
+    for the degraded schedule stores genuinely narrower packed words —
+    recompressing a victim's pages into it frees real memory, unlike
+    re-quantizing in place (the pool's word width is fixed at init).
+    """
+    if factor < 2:
+        raise ValueError(f"factor must be >= 2, got {factor}")
+    return MixedKVSchedule(
+        tuple(max(min_bins, n // factor) for n in schedule.n_k),
+        tuple(max(min_bins, n // factor) for n in schedule.n_v),
+    )
+
+
+def degrade_ladder(schedule: MixedKVSchedule, *,
+                   floor_angle_bits: float = 1.0,
+                   min_bins: int = 4) -> list[MixedKVSchedule]:
+    """Successive halvings of `schedule`, most precise first, every rung
+    at or above `floor_angle_bits` mean angle bits/element (the quality
+    floor the scheduler's tiered degradation is bounded by). Empty when
+    even one halving would cross the floor."""
+    out: list[MixedKVSchedule] = []
+    cur = schedule
+    while True:
+        nxt = degraded(cur, min_bins=min_bins)
+        if nxt == cur or nxt.angle_bits() < floor_angle_bits:
+            break
+        out.append(nxt)
+        cur = nxt
+    return out
+
+
 # The paper's Table 3: optimal per-model configurations, reproduced as
 # ready-made schedules (keyed by the paper's eval models).
 def paper_table3_schedule(model: str, num_layers: int) -> MixedKVSchedule:

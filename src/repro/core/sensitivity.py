@@ -88,6 +88,48 @@ def find_config(
     return best
 
 
+def pick_degraded(
+    schedule: MixedKVSchedule,
+    *,
+    floor_angle_bits: float = 1.0,
+    eval_fn: EvalFn | None = None,
+    max_score: float | None = None,
+    min_bins: int = 4,
+) -> SweepResult:
+    """Pick the degradation rung the serving engine recompresses victims
+    into under pool pressure (scheduler.DegradeConfig).
+
+    Candidates are the successive halvings of `schedule` that stay at or
+    above `floor_angle_bits` (`mixedkv.degrade_ladder`). Without an
+    `eval_fn` the cheapest rung wins (the floor IS the quality bound).
+    With one, the same lower-is-better contract as every sweep here
+    applies: the cheapest rung whose score stays within `max_score` wins,
+    falling back to the most precise rung when none qualifies — degrading
+    never exceeds the caller's quality budget by construction.
+
+    Raises ValueError when no rung exists below `schedule` above the
+    floor (the caller should then skip degradation and spill directly).
+    """
+    ladder = mixedkv.degrade_ladder(
+        schedule, floor_angle_bits=floor_angle_bits, min_bins=min_bins)
+    if not ladder:
+        raise ValueError(
+            f"no degradation rung of {schedule.describe()} stays above "
+            f"{floor_angle_bits} angle bits/elem")
+    if eval_fn is None:
+        best = ladder[-1]
+        return SweepResult(best, best.angle_bits(),
+                           f"rung{len(ladder)}-{best.angle_bits():.2f}b")
+    scored = [SweepResult(s, eval_fn(s), f"rung{i + 1}")
+              for i, s in enumerate(ladder)]
+    if max_score is not None:
+        ok = [r for r in scored if r.score <= max_score]
+        if ok:
+            return ok[-1]  # cheapest rung within the quality budget
+        return scored[0]  # most precise rung: never exceed the budget more
+    return min(scored, key=lambda r: r.score)
+
+
 def negative_transfer_groups(
     sweep: list[SweepResult], uniform_score: float
 ) -> list[SweepResult]:

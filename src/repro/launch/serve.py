@@ -107,6 +107,37 @@ def main(argv=None):
     ap.add_argument("--draft-max-ngram", type=int, default=3,
                     help="paged: longest trailing n-gram the drafter "
                          "matches (with --speculate)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="paged: SLO-aware admission — higher-priority "
+                         "arrivals preempt lower-priority requests by "
+                         "spilling their packed pages to host memory "
+                         "(restored bitwise-losslessly when capacity "
+                         "frees); see docs/serving.md pressure ladder")
+    ap.add_argument("--priorities", type=str, default=None,
+                    help="paged: comma-separated per-request priorities "
+                         "(cycled over the batch; higher preempts lower "
+                         "with --preempt). Default: all 0")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="paged: admission deadline for every request — "
+                         "a request still queued this many ms after "
+                         "arrival is shed with a typed result instead of "
+                         "waiting")
+    ap.add_argument("--stagger-s", type=float, default=0.0,
+                    help="paged: space request arrivals this many seconds "
+                         "apart (arrival = rid * stagger; lets later "
+                         "high-priority arrivals actually preempt)")
+    ap.add_argument("--degrade-pages", type=int, default=0,
+                    help="paged: enable tiered-precision degradation with "
+                         "a tier-2 pool of this many pages — under page "
+                         "pressure a victim is recompressed to a "
+                         "lower-bit schedule instead of spilled "
+                         "(with --preempt; lossy, recorded per request)")
+    ap.add_argument("--degrade-floor-bits", type=float, default=1.0,
+                    help="paged: quality floor (mean angle bits/elem) the "
+                         "degraded schedule must stay at or above")
+    ap.add_argument("--max-wall-s", type=float, default=None,
+                    help="paged: wall-clock watchdog — abort a hung trace "
+                         "with a diagnostic dump after this many seconds")
     ap.add_argument("--no-warmup", action="store_true",
                     help="paged: skip the AOT warmup (variants then "
                          "compile lazily inside the serve, smearing "
@@ -191,9 +222,14 @@ def main(argv=None):
 
 def _serve_paged(args, cfg, qz, backend, params, tokens, lens):
     """Run the prompt set through the continuous-batching scheduler."""
+    prios = ([int(x) for x in args.priorities.split(",")]
+             if args.priorities else [0])
     requests = [
         scheduler_lib.Request(rid=i, tokens=tokens[i, :n].astype(np.int32),
-                              max_new_tokens=args.gen)
+                              max_new_tokens=args.gen,
+                              arrival=i * args.stagger_s,
+                              priority=prios[i % len(prios)],
+                              deadline_ms=args.deadline_ms)
         for i, n in enumerate(lens)
     ]
     chunk = args.prefill_chunk
@@ -215,7 +251,13 @@ def _serve_paged(args, cfg, qz, backend, params, tokens, lens):
             top_p=args.top_p),
         prefix_cache=args.prefix_cache, prefix_pages=prefix_pages,
         speculate=args.speculate, draft_len=args.draft_len,
-        draft_max_ngram=args.draft_max_ngram)
+        draft_max_ngram=args.draft_max_ngram,
+        preempt=args.preempt,
+        degrade=(scheduler_lib.DegradeConfig(
+            num_pages=args.degrade_pages,
+            floor_angle_bits=args.degrade_floor_bits)
+            if args.degrade_pages else None),
+        max_wall_s=args.max_wall_s)
     eng = scheduler_lib.PagedServingEngine(params, cfg, backend, sched)
     if not args.no_warmup:
         eng.warmup()
@@ -224,10 +266,15 @@ def _serve_paged(args, cfg, qz, backend, params, tokens, lens):
           f"page_size={args.page_size} pool={num_pages - 1} pages; "
           f"decode steps: {stats['decode_steps']}")
     for r in results:
+        flags = "".join(
+            [f" [{r.status}]" if r.status != "completed" else "",
+             f" prio {r.priority}" if r.priority else "",
+             f" preempted x{r.preemptions}" if r.preemptions else "",
+             " degraded" if r.degraded else ""])
         print(f"  req {r.rid}: prompt {r.prompt_len:4d} tok -> generated "
               f"{len(r.tokens):3d} tok in {r.latency_s * 1e3:7.1f} ms "
               f"(ttft {r.ttft_s * 1e3:6.1f} ms, {r.host_sync_count} host "
-              f"syncs): {r.tokens[:12]}")
+              f"syncs):{flags} {r.tokens[:12]}")
     perf = stats["perf"]
     print(f"dispatch: {perf['jit_variants_compiled']} jit variants "
           f"({'AOT warmup' if perf['warmed'] else 'lazily compiled'}, "
@@ -250,6 +297,18 @@ def _serve_paged(args, cfg, qz, backend, params, tokens, lens):
               f"{sp['verify_steps']} forward passes for "
               f"{sp['decode_tokens']} decode tokens = "
               f"{sp['steps_per_token']:.2f} steps/token")
+    slo = stats["slo"]
+    if args.preempt or args.deadline_ms is not None or args.degrade_pages:
+        per_class = ", ".join(
+            f"prio {p}: n={c['n']} p50 {c['latency_p50_s'] * 1e3:.1f} ms "
+            f"p99 {c['latency_p99_s'] * 1e3:.1f} ms"
+            for p, c in sorted(slo["per_class"].items()))
+        print(f"slo: {slo['completed']} completed, {slo['shed']} shed, "
+              f"{slo['cancelled']} cancelled; {slo['spills']} spills "
+              f"({slo['spill_bytes'] / 1e6:.2f} MB), {slo['restores']} "
+              f"restores ({slo['restore_retries']} retries), "
+              f"{slo['degraded']} degraded, {slo['preempted']} requests "
+              f"preempted; {per_class}")
     if "prefix" in stats:
         px = stats["prefix"]
         print(f"prefix cache: {px['hits']} hits / {px['misses']} misses, "

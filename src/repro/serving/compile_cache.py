@@ -98,6 +98,13 @@ def enumerate_variants(engine, skips=(0,)) -> list[tuple]:
             fed = jax.ShapeDtypeStruct((s, sched.draft_len + 1), i32)
             out.append((("verify", mp), engine._verify_fn,
                         (params, pk, pv, table, vec, mask, mask, fed, vec)))
+        elif engine.backend2 is not None:
+            # tiered decode (DegradeConfig on): both pools + tables ride
+            # the dispatch, a (s,) tier mask routes each slot
+            pk2, pv2 = _sds(engine.pool2.k), _sds(engine.pool2.v)
+            out.append((("decode", mp), engine._decode_fn,
+                        (params, pk, pv, pk2, pv2, table, table, mask,
+                         vec, mask, mask, vec, vec, scalar, key)))
         else:
             out.append((("decode", mp), engine._decode_fn,
                         (params, pk, pv, table, vec, mask, mask, vec, vec,

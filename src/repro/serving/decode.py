@@ -234,6 +234,85 @@ def decode_step_paged(
     return logits, new_cache
 
 
+def decode_step_paged_tiered(
+    params,
+    cfg: ModelConfig,
+    cache1,  # pages.PagedKVCache — full-precision (tier-1) pool
+    cache2,  # pages.PagedKVCache — degraded (tier-2) pool, own page table
+    tokens: jax.Array,  # (B, 1) int32 — one per decode slot
+    active: jax.Array,  # (B,) bool — slots currently serving a request
+    tier2: jax.Array,  # (B,) bool — slot's pages live in the tier-2 pool
+    *,
+    backend: AttentionBackend,
+    backend2: AttentionBackend,
+    write_mask: Optional[jax.Array] = None,  # (B,) bool — slot may append
+) -> tuple[jax.Array, object, object]:
+    """`decode_step_paged` over TWO pools: the tier-2 pool holds requests
+    whose pages were recompressed to a lower-bit schedule under pool
+    pressure (scheduler.DegradeConfig) -> (logits, new cache1, new cache2).
+
+    Both pools share the slot axis: a slot's pages live in exactly one
+    pool (`tier2` mask), its appends into the other pool are masked to
+    that pool's trash page, and its attention output is selected per slot
+    with `jnp.where`. Running both attends every step costs roughly 2x
+    the attend FLOPs of one pool — the robustness price of keeping ONE
+    fixed-shape executable while requests migrate tiers mid-flight
+    (a per-mask-specialized dispatch would recompile on every migration).
+    Slots keep a single shared `lengths` vector: positions are absolute
+    and tier migration moves bytes, never the frontier.
+    """
+    if cfg.family != "decoder":
+        raise ValueError(
+            f"paged decode is defined for family 'decoder', not "
+            f"{cfg.family!r}")
+    from repro.serving import pages as pages_lib
+
+    x = transformer.embed_inputs(params, cfg, {"tokens": tokens})
+    lengths = cache1.lengths
+    may_write = active if write_mask is None else active & write_mask
+    w1 = may_write & ~tier2
+    w2 = may_write & tier2
+    positions = lengths[:, None]
+    nk1, nv1 = transformer._layer_bins(backend.quantizer, cfg.num_layers)
+    nk2, nv2 = transformer._layer_bins(backend2.quantizer, cfg.num_layers)
+
+    def body(carry, xs):
+        (layer_params, ck1, cv1, lnk1, lnv1, ck2, cv2, lnk2, lnv2) = xs
+        b = carry.shape[0]
+        q, k, v = attention.project_qkv(
+            layer_params["attn"],
+            common.rms_norm(carry, layer_params["norm1"], cfg.norm_eps),
+            positions, cfg)
+        new_c1 = backend.paged_append(
+            (ck1, cv1), k, v, lnk1, lnv1, cache1.page_table, lengths, w1)
+        new_c2 = backend2.paged_append(
+            (ck2, cv2), k, v, lnk2, lnv2, cache2.page_table, lengths, w2)
+        out1 = backend.paged_attend(
+            q, new_c1, lnk1, lnv1, cache1.page_table, lengths + 1)
+        out2 = backend2.paged_attend(
+            q, new_c2, lnk2, lnv2, cache2.page_table, lengths + 1)
+        out = jnp.where(tier2[:, None, None, None], out2, out1)
+        out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim
+                          ).astype(carry.dtype)
+        h = jnp.einsum("bsk,kd->bsd", out, layer_params["attn"]["wo"])
+        xx = transformer.ffn_residual(layer_params, common.radd(carry, h),
+                                      cfg)
+        return xx, (new_c1, new_c2)
+
+    x, (new_kv1, new_kv2) = common.uscan(
+        body, x, (params["layers"], cache1.k, cache1.v, nk1, nv1,
+                  cache2.k, cache2.v, nk2, nv2))
+    new_lengths = jnp.where(active, lengths + 1, lengths)
+    new_cache1 = pages_lib.PagedKVCache(
+        k=new_kv1[0], v=new_kv1[1], page_table=cache1.page_table,
+        lengths=new_lengths)
+    new_cache2 = pages_lib.PagedKVCache(
+        k=new_kv2[0], v=new_kv2[1], page_table=cache2.page_table,
+        lengths=new_lengths)
+    logits = transformer.lm_logits(params, cfg, x)[:, 0]
+    return logits, new_cache1, new_cache2
+
+
 def verify_step_paged(
     params,
     cfg: ModelConfig,

@@ -1,0 +1,206 @@
+"""Deterministic fault injection for the paged serving engine.
+
+Robustness is only real if it is *tested under adversity*, and adversity
+must be reproducible: every fault here is a declarative event pinned to a
+scheduler tick, and a whole campaign can be generated from one seed
+(`FaultInjector.random`). The injector is passed to
+`PagedServingEngine.run(requests, faults=...)`; the engine polls it at
+well-defined points and the injector never mutates engine state behind
+the scheduler's back — every fault lands through the same public paths a
+real failure would take.
+
+Fault kinds
+-----------
+  alloc_fail   the next `count` page allocations the scheduler attempts
+               (admission, restore, tier migration) report transient
+               failure — exercising backpressure and the restore
+               retry/backoff loop. Armed from `tick` on.
+  restore_delay
+               restores beginning at/after `tick` sleep `delay_s` first
+               (a slow host->device link), for `count` restores.
+  restore_fail the next `count` restores fail AFTER allocating their
+               pages — the engine must release them and back off
+               (the alloc/release conservation path under failure).
+  pool_steal   `pages` pages vanish from the pool for `duration` ticks
+               (allocated under a fault owner), forcing pool exhaustion
+               at a chosen moment; returned automatically, and
+               `finish()` returns any still outstanding so end-of-run
+               conservation always holds.
+  cancel       `engine.cancel(rid)` at `tick`. `phase="pre"` lands at
+               the tick boundary (before admission/burst);
+               `phase="mid"` lands between a burst's device dispatch
+               and its host commit — the mid-verify cancellation window.
+
+Every event fires at the FIRST poll at or after its tick (ticks are loop
+iterations, not wall time), so campaigns compose deterministically with
+any trace. `stats()` reports what actually fired.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+FAULT_KINDS = ("alloc_fail", "restore_delay", "restore_fail", "pool_steal",
+               "cancel")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One declarative fault. Fields unused by a kind are ignored."""
+
+    kind: str
+    tick: int = 0
+    count: int = 1  # alloc_fail / restore_delay / restore_fail
+    pages: int = 0  # pool_steal
+    duration: int = 1  # pool_steal: ticks the pages stay stolen
+    delay_s: float = 0.0  # restore_delay
+    rid: Optional[int] = None  # cancel
+    phase: str = "pre"  # cancel: "pre" (tick boundary) | "mid" (in-burst)
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; one of {FAULT_KINDS}")
+        if self.kind == "cancel" and self.rid is None:
+            raise ValueError("cancel events need a rid")
+        if self.kind == "pool_steal" and self.pages < 1:
+            raise ValueError("pool_steal events need pages >= 1")
+        if self.phase not in ("pre", "mid"):
+            raise ValueError(f"phase must be 'pre' or 'mid', got "
+                             f"{self.phase!r}")
+
+
+class FaultInjector:
+    """Replays a list of `FaultEvent`s against one engine run.
+
+    Stateful across one `run()` (the engine calls `begin` / `finish`);
+    construct a fresh injector per run for reproducibility. All state is
+    derived from the event list — no wall-clock, no hidden randomness.
+    """
+
+    def __init__(self, events: list[FaultEvent]):
+        self.events = sorted(events, key=lambda e: (e.tick, e.kind))
+        self._armed_alloc_fails = 0
+        self._armed_restore_delays: list[float] = []
+        self._armed_restore_fails = 0
+        self._steals: list[tuple[object, int]] = []  # (owner, return_tick)
+        self._fired: dict[str, int] = {k: 0 for k in FAULT_KINDS}
+        self._mid_delivered: set[int] = set()
+        self._idx = 0
+        self._tick = 0
+
+    @classmethod
+    def random(cls, seed: int, n_ticks: int, *, rids=(),
+               n_events: int = 8, max_steal_pages: int = 4
+               ) -> "FaultInjector":
+        """A seeded adversarial campaign over `n_ticks` scheduler ticks —
+        the soak benchmark's fault source. Cancels only target `rids`."""
+        rng = np.random.default_rng(seed)
+        kinds = [k for k in FAULT_KINDS if k != "cancel" or len(rids)]
+        events = []
+        for _ in range(n_events):
+            kind = kinds[int(rng.integers(len(kinds)))]
+            tick = int(rng.integers(n_ticks))
+            if kind == "cancel":
+                events.append(FaultEvent(
+                    kind, tick, rid=int(rng.choice(list(rids))),
+                    phase=("mid" if rng.integers(2) else "pre")))
+            elif kind == "pool_steal":
+                events.append(FaultEvent(
+                    kind, tick, pages=int(rng.integers(1,
+                                                       max_steal_pages + 1)),
+                    duration=int(rng.integers(1, 6))))
+            elif kind == "restore_delay":
+                events.append(FaultEvent(
+                    kind, tick, count=int(rng.integers(1, 3)),
+                    delay_s=float(rng.uniform(0.001, 0.01))))
+            else:  # alloc_fail / restore_fail
+                events.append(FaultEvent(
+                    kind, tick, count=int(rng.integers(1, 3))))
+        return cls(events)
+
+    # ------------------------------------------------------------- hooks --
+    def begin(self, engine) -> None:
+        self._tick = 0
+
+    def on_tick(self, engine, tick: int) -> None:
+        """Tick-boundary poll: arm due events, return expired steals,
+        deliver phase='pre' cancels. Called once per scheduler loop
+        iteration, before admission."""
+        self._tick = tick
+        # return steals whose window expired (through the allocator's own
+        # release path, so conservation bookkeeping sees them)
+        keep = []
+        for owner, ret in self._steals:
+            if tick >= ret:
+                engine.allocator.release(owner)
+            else:
+                keep.append((owner, ret))
+        self._steals = keep
+        while self._idx < len(self.events) and \
+                self.events[self._idx].tick <= tick:
+            ev = self.events[self._idx]
+            self._idx += 1
+            if ev.kind == "alloc_fail":
+                self._armed_alloc_fails += ev.count
+            elif ev.kind == "restore_delay":
+                self._armed_restore_delays += [ev.delay_s] * ev.count
+            elif ev.kind == "restore_fail":
+                self._armed_restore_fails += ev.count
+            elif ev.kind == "pool_steal":
+                n = min(ev.pages, engine.allocator.num_free)
+                if n > 0:
+                    owner = ("__fault__", self._fired["pool_steal"])
+                    engine.allocator.alloc(n, owner)
+                    self._steals.append((owner, tick + ev.duration))
+            elif ev.kind == "cancel" and ev.phase == "pre":
+                engine.cancel(ev.rid)
+            self._fired[ev.kind] += 1
+
+    def mid_burst_cancels(self) -> list[int]:
+        """rids to cancel between a burst's dispatch and its host commit
+        (the mid-verify window). Consumes every armed phase='mid' cancel
+        whose tick has passed (armed by `on_tick`; delivered here, once)."""
+        out = []
+        for i, e in enumerate(self.events[:self._idx]):
+            if (e.kind == "cancel" and e.phase == "mid"
+                    and i not in self._mid_delivered):
+                self._mid_delivered.add(i)
+                out.append(e.rid)
+        return out
+
+    def take_alloc_fail(self) -> bool:
+        """True when the scheduler's next page allocation must report
+        transient failure (consumes one armed failure)."""
+        if self._armed_alloc_fails > 0:
+            self._armed_alloc_fails -= 1
+            return True
+        return False
+
+    def take_restore_delay(self) -> float:
+        """Seconds the next restore must sleep before uploading (0 = no
+        delay armed)."""
+        if self._armed_restore_delays:
+            return self._armed_restore_delays.pop(0)
+        return 0.0
+
+    def take_restore_fail(self) -> bool:
+        """True when the next restore must fail after allocating its
+        pages (the engine releases them and backs off)."""
+        if self._armed_restore_fails > 0:
+            self._armed_restore_fails -= 1
+            return True
+        return False
+
+    def finish(self, engine) -> None:
+        """Return every outstanding stolen page so end-of-run
+        conservation holds regardless of where the trace ended."""
+        for owner, _ in self._steals:
+            engine.allocator.release(owner)
+        self._steals = []
+
+    def stats(self) -> dict:
+        return dict(self._fired, events=len(self.events),
+                    delivered=self._idx)

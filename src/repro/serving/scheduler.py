@@ -57,12 +57,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import sensitivity
+from repro.core.mixedkv import MixedKVSchedule
+from repro.core.quantizer import KVQuantizer
 from repro.models import attention, common, transformer
 from repro.serving import decode as decoding
 from repro.serving import engine as engine_lib
 from repro.serving import pages as pages_lib
 from repro.serving import prefix as prefix_lib
 from repro.serving import speculate as speculate_lib
+from repro.serving import spill as spill_lib
 from repro.serving.backends import AttentionBackend
 
 
@@ -70,18 +74,39 @@ from repro.serving.backends import AttentionBackend
 class Request:
     """One serving request. `arrival` is seconds relative to trace start
     (0.0 = already queued); `max_new_tokens` caps generation (EOS may end
-    it earlier)."""
+    it earlier).
+
+    SLO class: `priority` orders admission when the scheduler runs in
+    preemptive mode (`SchedulerConfig.preempt`; higher wins, FCFS within
+    a class) and entitles an arrival to preempt strictly-lower-priority
+    victims under resource pressure. `deadline_ms` is an ADMISSION
+    deadline: a request still queued that long after its arrival is shed
+    with a typed result (`status="shed"`) instead of waiting forever —
+    explicit overload behavior, never a hang.
+    """
 
     rid: int
     tokens: np.ndarray  # (plen,) int32 prompt
     max_new_tokens: int
     arrival: float = 0.0
+    priority: int = 0  # higher = more important (preempt mode only)
+    deadline_ms: Optional[float] = None  # admission deadline (any mode)
 
     def __post_init__(self):
         if len(self.tokens) < 1:
             raise ValueError(f"request {self.rid}: empty prompt")
         if self.max_new_tokens < 1:
             raise ValueError(f"request {self.rid}: max_new_tokens < 1")
+        if self.deadline_ms is not None and self.deadline_ms < 0:
+            raise ValueError(
+                f"request {self.rid}: deadline_ms must be >= 0")
+
+
+#: `RequestResult.status` values: "completed" (ran to EOS/budget),
+#: "shed" (admission deadline expired while queued — no tokens),
+#: "cancelled" (`PagedServingEngine.cancel`; carries tokens generated
+#: before the cancel landed).
+RESULT_STATUSES = ("completed", "shed", "cancelled")
 
 
 class RequestResult(NamedTuple):
@@ -100,6 +125,13 @@ class RequestResult(NamedTuple):
     # dispatch-count observability ISSUE 6 adds so O(steps) host syncs
     # cannot sneak back into the hot loop unnoticed
     host_sync_count: int = 0
+    # SLO / robustness accounting (ISSUE 7): how this request ended and
+    # what the pressure ladder did to it on the way
+    status: str = "completed"  # see RESULT_STATUSES
+    priority: int = 0
+    preemptions: int = 0  # times this request was spilled out of its slot
+    restore_retries: int = 0  # transient alloc failures its restores ate
+    degraded: bool = False  # pages recompressed to the tier-2 schedule
 
 
 #: `SchedulerConfig.prefix_cache` modes. "off" is the legacy raw-buffer
@@ -111,6 +143,35 @@ class RequestResult(NamedTuple):
 #: served under "share" emits bitwise-identical greedy tokens to "cold"
 #: while skipping the prefill of every cached prefix block.
 PREFIX_MODES = ("off", "cold", "share")
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradeConfig:
+    """Tiered-precision degradation: under pool pressure, recompress a
+    victim's pages into a second pool built for a lower-bit
+    `MixedKVSchedule` instead of spilling it (the "degrade" rung of the
+    pressure ladder, docs/serving.md). The tier-2 schedule is `schedule`
+    when given, else picked by the sensitivity machinery
+    (`sensitivity.pick_degraded`: the cheapest halving rung of the
+    backend's schedule that stays at or above `floor_angle_bits` mean
+    angle bits/element). The floor is ALWAYS enforced — an explicit
+    schedule below it is rejected at engine construction.
+
+    num_pages: physical size of the tier-2 pool (including its own
+    reserved trash page 0). Degradation only fires for a victim whose
+    full span reservation fits the tier-2 pool; otherwise the ladder
+    falls through to spilling.
+    """
+
+    num_pages: int = 64
+    floor_angle_bits: float = 1.0
+    schedule: Optional[MixedKVSchedule] = None
+
+    def __post_init__(self):
+        if self.num_pages < 2:
+            raise ValueError(
+                f"degrade num_pages must be >= 2 (page 0 is reserved), "
+                f"got {self.num_pages}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -167,6 +228,36 @@ class SchedulerConfig:
     draft_len: int = 4  # draft tokens per verify step (q_len = draft_len+1)
     draft_max_ngram: int = speculate_lib.DEFAULT_MAX_NGRAM
     spec_device: bool = True  # fused on-device spec burst (see docstring)
+    # --- SLO / robustness (ISSUE 7) -------------------------------------
+    # preempt:  priority-ordered admission + preemption-by-spill: when the
+    #           highest-priority arrived request cannot be admitted, a
+    #           strictly-lower-priority victim's pages are spilled to host
+    #           memory (serving/spill.py) and its slot freed; the victim
+    #           resumes later, bitwise-losslessly. Off = legacy FCFS.
+    # degrade:  tiered-precision degradation config (None = off). The
+    #           ladder under pressure is shed -> degrade -> spill ->
+    #           evict (docs/serving.md). Mutually exclusive with
+    #           `speculate` and prefix_cache "share" (the tiered decode
+    #           step composes with neither; spill/preempt compose with
+    #           both).
+    # restore_max_retries / restore_backoff_s: transient-alloc-failure
+    #           retry policy of a spilled request's restore; retries
+    #           beyond the per-tick budget re-queue the restore with
+    #           exponential backoff instead of blocking the loop.
+    # debug_conservation: run `PageAllocator.check_conservation()` (both
+    #           pools) after EVERY admission / burst / preemption tick
+    #           instead of only at the end of run() — on in all
+    #           scheduler/speculate/prefix/preempt tests.
+    # max_wall_s: wall-clock watchdog on run(): a trace exceeding it
+    #           raises `SchedulerWatchdogError` with a diagnostic dump
+    #           (live slots, pool occupancy, last dispatch key) instead
+    #           of hanging CI forever. None = no watchdog.
+    preempt: bool = False
+    degrade: Optional[DegradeConfig] = None
+    restore_max_retries: int = 3
+    restore_backoff_s: float = 0.002
+    debug_conservation: bool = False
+    max_wall_s: Optional[float] = None
 
     def __post_init__(self):
         if self.prefill_chunk % self.page_size:
@@ -190,6 +281,28 @@ class SchedulerConfig:
                     "speculative decoding requires greedy sampling "
                     "(temperature 0): losslessness is argmax equality; "
                     "stochastic acceptance is not implemented")
+        if self.degrade is not None:
+            if self.speculate:
+                raise ValueError(
+                    "degrade is mutually exclusive with speculate: the "
+                    "tiered decode step has no verify variant (spill-based "
+                    "preemption composes with speculation; use that)")
+            if self.prefix_cache == "share":
+                raise ValueError(
+                    "degrade is mutually exclusive with prefix_cache "
+                    "'share': tier migration would strand trie references "
+                    "to recompressed pages")
+        if self.restore_max_retries < 1:
+            raise ValueError(
+                f"restore_max_retries must be >= 1, got "
+                f"{self.restore_max_retries}")
+        if self.restore_backoff_s < 0:
+            raise ValueError(
+                f"restore_backoff_s must be >= 0, got "
+                f"{self.restore_backoff_s}")
+        if self.max_wall_s is not None and self.max_wall_s <= 0:
+            raise ValueError(
+                f"max_wall_s must be > 0 (or None), got {self.max_wall_s}")
         if self.prefix_cache not in PREFIX_MODES:
             raise ValueError(
                 f"prefix_cache must be one of {PREFIX_MODES}, got "
@@ -210,6 +323,20 @@ class SchedulerConfig:
         return pages_lib.pages_for_tokens(self.max_context, self.page_size)
 
 
+class SchedulerWatchdogError(RuntimeError):
+    """The wall-clock watchdog (`SchedulerConfig.max_wall_s`) fired.
+
+    `diagnostic` is the dump the satellite asks for: tick, wall seconds,
+    every live slot (rid / priority / length / tokens generated /
+    remaining budget), pool occupancy for both tiers, pending and spilled
+    rids, and the last device dispatch key — enough to see WHERE a trace
+    hung without re-running it under a debugger."""
+
+    def __init__(self, msg: str, diagnostic: dict):
+        super().__init__(f"{msg}\ndiagnostic: {diagnostic}")
+        self.diagnostic = diagnostic
+
+
 class _Slot:
     """Host-side state of one decode slot's in-flight request."""
 
@@ -224,6 +351,30 @@ class _Slot:
         self.draft_accepted = 0
         self.verify_steps = 0
         self.host_syncs = 1  # the admission readback itself
+        # SLO / pressure-ladder accounting (ISSUE 7)
+        self.priority = req.priority
+        self.preemptions = 0
+        self.restore_retries = 0
+        self.degraded = False
+
+    @classmethod
+    def from_spilled(cls, sp: "spill_lib.SpilledRequest") -> "_Slot":
+        """Rebuild a slot from a restored spill — counters carry over and
+        no first-token is re-sampled (the pending token rode the spill)."""
+        st = cls.__new__(cls)
+        st.req = sp.req
+        st.generated = sp.generated
+        st.t_admit = sp.t_admit
+        st.t_first = sp.t_first
+        st.draft_proposed = sp.draft_proposed
+        st.draft_accepted = sp.draft_accepted
+        st.verify_steps = sp.verify_steps
+        st.host_syncs = sp.host_syncs
+        st.priority = sp.priority
+        st.preemptions = sp.preemptions
+        st.restore_retries = sp.restore_retries
+        st.degraded = sp.degraded
+        return st
 
 
 class PagedServingEngine:
@@ -276,6 +427,45 @@ class PagedServingEngine:
         if sched.prefix_cache == "share":
             self.trie = prefix_lib.PrefixTrie(
                 self.allocator, sched.page_size, sched.prefix_pages)
+        # --- tier-2 (degraded-precision) pool: a second, genuinely
+        # smaller pool built for a lower-bit schedule (narrower packed
+        # words), its own allocator and page table; `tier2[i]` marks a
+        # slot whose pages were migrated there under pressure
+        self.backend2: Optional[AttentionBackend] = None
+        self.allocator2: Optional[pages_lib.PageAllocator] = None
+        self.pool2 = None
+        self.page_table2 = np.zeros((0, 0), np.int32)
+        self.tier2 = np.zeros((s,), bool)
+        if sched.degrade is not None:
+            qz1 = backend.quantizer
+            d = sched.degrade
+            if d.schedule is not None:
+                sched2 = d.schedule
+                if sched2.angle_bits() < d.floor_angle_bits:
+                    raise ValueError(
+                        f"degrade schedule {sched2.describe()} "
+                        f"({sched2.angle_bits():.2f} angle bits/elem) is "
+                        f"below the quality floor {d.floor_angle_bits}")
+            else:
+                sched2 = sensitivity.pick_degraded(
+                    qz1.config.schedule,
+                    floor_angle_bits=d.floor_angle_bits).schedule
+            qz2 = KVQuantizer(
+                dataclasses.replace(qz1.config, schedule=sched2))
+            self.backend2 = dataclasses.replace(backend, quantizer=qz2)
+            self.allocator2 = pages_lib.PageAllocator(d.num_pages)
+            self.pool2 = self.backend2.init_paged_cache(
+                d.num_pages, sched.page_size, s, sched.max_pages)
+            self.page_table2 = np.zeros((s, sched.max_pages), np.int32)
+            # one jitted dequant->requant migration fn; jit caches per
+            # pow-2 page-count bucket internally
+            self._migrate_fn = spill_lib.make_migrate_fn(qz1, qz2)
+        # SLO / preemption control plane
+        self._spilled: dict[int, spill_lib.SpilledRequest] = {}
+        self._cancel_req: set[int] = set()
+        self._last_dispatch_key: Optional[tuple] = None
+        self._faults = None  # FaultInjector of the current run (or None)
+        self._slo: dict = {}
         # device-resident token streams for on-device drafting: slot i's
         # prompt + every emitted token (ending with the pending token),
         # shipped to the spec-burst dispatch and read back only at burst
@@ -321,6 +511,52 @@ class PagedServingEngine:
         s = self.sched.num_slots
         max_burst = self.sched.max_burst
         eos = self.sched.eos_id
+        backend2 = self.backend2
+
+        if backend2 is not None:
+            # tiered variant (DegradeConfig on): the burst body runs
+            # `decode_step_paged_tiered` over BOTH pools — a slot's pages
+            # live in exactly one (the tier2 mask routes appends and
+            # selects attention outputs). Signature grows the tier-2 pool
+            # / table / mask; everything else (burst while_loop, EOS,
+            # sampling) is identical to the single-pool variant below.
+            def run2(params, pk1, pv1, pk2, pv2, table1, table2, tier2,
+                     lengths, active, owned, tokens, remaining, k_steps,
+                     rng):
+                out0 = jnp.full((s, max_burst), -1, jnp.int32)
+                emitted0 = jnp.zeros((s,), jnp.int32)
+
+                def cond(c):
+                    return (c[0] < k_steps) & jnp.any(c[6])
+
+                def body(c):
+                    (step, pk1, pv1, pk2, pv2, lens, act, toks, emitted,
+                     out, rng) = c
+                    rng, sub = jax.random.split(rng)
+                    c1 = pages_lib.PagedKVCache(pk1, pv1, table1, lens)
+                    c2 = pages_lib.PagedKVCache(pk2, pv2, table2, lens)
+                    logits, n1, n2 = decoding.decode_step_paged_tiered(
+                        params, cfg, c1, c2, toks[:, None], act, tier2,
+                        backend=backend, backend2=backend2,
+                        write_mask=owned)
+                    nxt = engine_lib.sample_tokens(sub, logits, sc)
+                    nxt = jnp.where(act, nxt, toks)
+                    out = jax.lax.dynamic_update_slice(
+                        out, jnp.where(act, nxt, -1)[:, None], (0, step))
+                    emitted = emitted + act.astype(jnp.int32)
+                    done = emitted >= remaining
+                    if eos is not None:
+                        done = done | (act & (nxt == eos))
+                    return (step + 1, n1.k, n1.v, n2.k, n2.v, n1.lengths,
+                            act & ~done, nxt, emitted, out, rng)
+
+                init = (jnp.asarray(0, jnp.int32), pk1, pv1, pk2, pv2,
+                        lengths, active, tokens, emitted0, out0, rng)
+                fin = jax.lax.while_loop(cond, body, init)
+                # pools (both tiers), emitted, out
+                return fin[1], fin[2], fin[3], fin[4], fin[8], fin[9]
+
+            return jax.jit(run2, donate_argnums=(1, 2, 3, 4))
 
         def run(params, pool_k, pool_v, page_table, lengths, active, owned,
                 tokens, remaining, k_steps, rng):
@@ -548,6 +784,7 @@ class PagedServingEngine:
         warmup increment `post_warmup_variants` — the counter the
         perf-smoke CI job asserts stays zero.
         """
+        self._last_dispatch_key = key  # watchdog diagnostic breadcrumb
         if key not in self._compiled_keys:
             self._compiled_keys.add(key)
             self._perf["jit_variants_compiled"] += 1
@@ -662,6 +899,13 @@ class PagedServingEngine:
         emit = np.asarray(emit)
         self._perf["host_sync_count"] += 1
         t_now = time.perf_counter() - self._t0
+        # mid-verify cancellation window: cancels injected between the
+        # verify dispatch and this host commit land HERE — the cancelled
+        # slot's speculative tail is popped through the validated
+        # pop_tokens path and its pages free in the same tick
+        if self._faults is not None:
+            for rid in self._faults.mid_burst_cancels():
+                self.cancel(rid)
         for i in range(s):
             if not self.active[i] or emit[i] == 0:
                 continue
@@ -675,19 +919,24 @@ class PagedServingEngine:
             self.ctx_len[i] = cl + e
             self.next_tok[i] = int(targets[i, e - 1])
             finished = self._finished(st)
+            cancelled = (not finished) and st.req.rid in self._cancel_req
             # transactional commit: the verify appended m tokens' K/V
             # optimistically; commit the accepted e, pop the rejected
             # suffix. Pages stay reserved mid-flight (freeing them would
             # re-introduce mid-flight OOM against the admission
-            # reservation); a finishing request frees its emptied
-            # speculative tail through the validated pop path instead.
+            # reservation); a finishing (or mid-verify-cancelled) request
+            # frees its emptied speculative tail through the validated
+            # pop path instead.
             new_len, _ = pages_lib.pop_tokens(
                 self.allocator, st.req.rid, self.page_table[i],
                 int(self.lengths[i]) + m, m - e, ps,
-                min_length=len(st.req.tokens), free_empty=finished)
+                min_length=len(st.req.tokens),
+                free_empty=finished or cancelled)
             self.lengths[i] = new_len
             if finished:
                 self._evict(i, results, t_now)
+            elif cancelled:
+                self._evict(i, results, t_now, status="cancelled")
 
     def _spec_burst(self, remaining: np.ndarray, results: list,
                     queued: bool = False) -> int:
@@ -754,6 +1003,18 @@ class PagedServingEngine:
             self.ctx_len[i] = cl + n
             if self._finished(st):
                 self._evict(i, results, t_now)
+        # mid-verify cancellation window: cancels injected while the fused
+        # burst ran on device land here. No pop dispatch is needed — the
+        # device committed only accepted tokens; eviction reconciles the
+        # page references wholesale, same tick.
+        if self._faults is not None:
+            for rid in self._faults.mid_burst_cancels():
+                self.cancel(rid)
+        if self._cancel_req:
+            for i in range(s):
+                if (self.active[i]
+                        and self.slots[i].req.rid in self._cancel_req):
+                    self._evict(i, results, t_now, status="cancelled")
         return int(n_steps.max(initial=0))
 
     def _prefill_fn(self, width: int, skip: int):
@@ -1031,20 +1292,29 @@ class PagedServingEngine:
             # path; the trie takes its own page refs, LRU-bounded)
             self.trie.insert(req.tokens, page_ids)
 
-    def _evict(self, slot: int, results: list, t_now: float) -> None:
-        """Retire a finished request: drop its page references (exclusive
-        pages return to the free list immediately; prefix pages survive on
-        the trie's / other sharers' refcounts), clear the slot, and record
-        the result."""
+    def _evict(self, slot: int, results: list, t_now: float,
+               status: str = "completed") -> None:
+        """Retire a finished (or cancelled) request: drop its page
+        references — on BOTH allocators; tier-2 frees are a no-op for a
+        tier-1 slot — (exclusive pages return to the free list
+        immediately; prefix pages survive on the trie's / other sharers'
+        refcounts), clear the slot, and record the typed result."""
         st = self.slots[slot]
         self.allocator.free(st.req.rid)
         self.page_table[slot] = 0
+        if self.allocator2 is not None:
+            self.allocator2.free(st.req.rid)
+            self.page_table2[slot] = 0
+        self.tier2[slot] = False
         self.lengths[slot] = 0
         self.active[slot] = False
         self.next_tok[slot] = 0
         self.ctx_buf[slot] = 0
         self.ctx_len[slot] = 0
         self.slots[slot] = None
+        self._cancel_req.discard(st.req.rid)
+        if status == "cancelled" and self._slo:
+            self._slo["cancelled"] += 1
         results.append(RequestResult(
             rid=st.req.rid,
             tokens=np.asarray(st.generated, np.int32),
@@ -1056,6 +1326,11 @@ class PagedServingEngine:
             draft_accepted=st.draft_accepted,
             verify_steps=st.verify_steps,
             host_sync_count=st.host_syncs,
+            status=status,
+            priority=st.priority,
+            preemptions=st.preemptions,
+            restore_retries=st.restore_retries,
+            degraded=st.degraded,
         ))
 
     def _finished(self, st: _Slot) -> bool:
@@ -1064,23 +1339,454 @@ class PagedServingEngine:
             return True
         return len(st.generated) >= st.req.max_new_tokens
 
+    # --------------------------------------------- SLO / pressure ladder --
+    def cancel(self, request_id: int) -> None:
+        """Request cancellation of `request_id` (any state: queued,
+        spilled, or live in a slot — including mid-verify with
+        speculation on).
+
+        The cancel is recorded and lands at the current tick: a live
+        slot's pages free in the SAME scheduler tick (a mid-verify cancel
+        pops its speculative tail through the validated `pop_tokens`
+        path first), and a typed `RequestResult(status="cancelled")`
+        carrying any already-generated tokens is emitted. Unknown /
+        already-finished rids are dropped silently at the next tick
+        boundary."""
+        self._cancel_req.add(int(request_id))
+
+    def _emit_unserved(self, req: Request, results: list, now: float,
+                       status: str, sp=None) -> None:
+        """Typed result for a request retired OUTSIDE a slot: shed from
+        the queue, or cancelled while queued/spilled. `sp` carries a
+        spilled request's partial progress into the result."""
+        if sp is not None:
+            results.append(RequestResult(
+                rid=req.rid,
+                tokens=np.asarray(sp.generated, np.int32),
+                prompt_len=len(req.tokens),
+                ttft_s=sp.t_first - req.arrival,
+                latency_s=now - req.arrival,
+                admitted_s=sp.t_admit - req.arrival,
+                draft_proposed=sp.draft_proposed,
+                draft_accepted=sp.draft_accepted,
+                verify_steps=sp.verify_steps,
+                host_sync_count=sp.host_syncs,
+                status=status, priority=sp.priority,
+                preemptions=sp.preemptions,
+                restore_retries=sp.restore_retries,
+                degraded=sp.degraded))
+        else:
+            results.append(RequestResult(
+                rid=req.rid,
+                tokens=np.zeros((0,), np.int32),
+                prompt_len=len(req.tokens),
+                ttft_s=0.0,
+                latency_s=now - req.arrival,
+                admitted_s=now - req.arrival,
+                status=status, priority=req.priority))
+
+    def _process_cancels(self, pending: list, results: list,
+                         now: float) -> None:
+        """Land every recorded cancel at a tick boundary. Live slots go
+        through `_evict` (pages free now); spilled/queued requests emit
+        their typed result directly; unknown rids are dropped."""
+        for rid in sorted(self._cancel_req):
+            slot = next((i for i in range(self.sched.num_slots)
+                         if self.active[i]
+                         and self.slots[i].req.rid == rid), None)
+            if slot is not None:
+                self._evict(slot, results, now, status="cancelled")
+                continue  # _evict discards the rid
+            if rid in self._spilled:
+                sp = self._spilled.pop(rid)
+                self._emit_unserved(sp.req, results, now, "cancelled",
+                                    sp=sp)
+                self._slo["cancelled"] += 1
+                self._cancel_req.discard(rid)
+                continue
+            hit = next((r for r in pending if r.rid == rid), None)
+            if hit is not None:
+                pending.remove(hit)
+                self._emit_unserved(hit, results, now, "cancelled")
+                self._slo["cancelled"] += 1
+            self._cancel_req.discard(rid)
+
+    def _shed_expired(self, pending: list, results: list,
+                      now: float) -> None:
+        """Admission-deadline shedding (any mode): a request still queued
+        past `arrival + deadline_ms` is retired with status "shed" —
+        explicit overload behavior instead of unbounded queueing. Runs
+        AFTER admission, so a request gets its last admission chance at
+        the deadline tick."""
+        for r in list(pending):
+            if r.deadline_ms is None:
+                continue
+            if now > r.arrival + r.deadline_ms / 1e3:
+                pending.remove(r)
+                self._emit_unserved(r, results, now, "shed")
+                self._slo["shed"] += 1
+
+    def _check_conservation(self) -> None:
+        self.allocator.check_conservation()
+        if self.allocator2 is not None:
+            self.allocator2.check_conservation()
+
+    def _watchdog(self, tick: int, pending: list) -> None:
+        """Wall-clock watchdog (`SchedulerConfig.max_wall_s`): abort a
+        hung trace with a diagnostic dump instead of hanging forever."""
+        if self.sched.max_wall_s is None:
+            return
+        wall = time.perf_counter() - self._t0
+        if wall <= self.sched.max_wall_s:
+            return
+        live = [
+            {"slot": i, "rid": self.slots[i].req.rid,
+             "priority": self.slots[i].priority,
+             "length": int(self.lengths[i]),
+             "generated": len(self.slots[i].generated),
+             "remaining": (self.slots[i].req.max_new_tokens
+                           - len(self.slots[i].generated)),
+             "tier2": bool(self.tier2[i]) if len(self.tier2) else False}
+            for i in range(self.sched.num_slots) if self.active[i]]
+        diag = {
+            "tick": tick,
+            "wall_s": round(wall, 3),
+            "max_wall_s": self.sched.max_wall_s,
+            "live_slots": live,
+            "pool": {"free": self.allocator.num_free,
+                     "live": self.allocator.num_live},
+            "pool2": (None if self.allocator2 is None else
+                      {"free": self.allocator2.num_free,
+                       "live": self.allocator2.num_live}),
+            "pending_rids": [r.rid for r in pending],
+            "spilled_rids": sorted(self._spilled),
+            "last_dispatch_key": self._last_dispatch_key,
+        }
+        raise SchedulerWatchdogError(
+            f"trace exceeded max_wall_s={self.sched.max_wall_s}", diag)
+
+    def _spill_slot(self, slot: int) -> None:
+        """Preempt a live slot: copy its packed pages to host memory,
+        release the page references (shared prefix pages survive on the
+        trie's refs), clear the slot. The request parks in `_spilled`
+        until `_try_restore` resumes it bit-for-bit."""
+        st = self.slots[slot]
+        rid = st.req.rid
+        tier2 = bool(self.tier2[slot]) if len(self.tier2) else False
+        alloc = self.allocator2 if tier2 else self.allocator
+        pool = self.pool2 if tier2 else self.pool
+        row = self.page_table2[slot] if tier2 else self.page_table[slot]
+        n_total = int(np.count_nonzero(row))
+        n_data = pages_lib.pages_for_tokens(int(self.lengths[slot]),
+                                            self.sched.page_size)
+        payload = spill_lib.spill_pages(pool, row[:n_data])
+        alloc.free(rid)
+        sp = spill_lib.SpilledRequest(
+            req=st.req, priority=st.priority, generated=st.generated,
+            next_tok=int(self.next_tok[slot]),
+            length=int(self.lengths[slot]),
+            ctx=self.ctx_buf[slot, :int(self.ctx_len[slot])].copy(),
+            payload=payload, n_pages=n_total, tier2=tier2,
+            t_admit=st.t_admit, t_first=st.t_first,
+            draft_proposed=st.draft_proposed,
+            draft_accepted=st.draft_accepted,
+            verify_steps=st.verify_steps, host_syncs=st.host_syncs,
+            preemptions=st.preemptions + 1,
+            spill_count=st.preemptions + 1,
+            restore_retries=st.restore_retries, degraded=st.degraded)
+        self.page_table[slot] = 0
+        if self.allocator2 is not None:
+            self.page_table2[slot] = 0
+        self.tier2[slot] = False
+        self.lengths[slot] = 0
+        self.active[slot] = False
+        self.next_tok[slot] = 0
+        self.ctx_buf[slot] = 0
+        self.ctx_len[slot] = 0
+        self.slots[slot] = None
+        self._spilled[rid] = sp
+        self._slo["spills"] += 1
+        self._slo["spill_bytes"] += payload.nbytes()
+
+    def _try_restore(self, sp: "spill_lib.SpilledRequest",
+                     now: float) -> str:
+        """Resume a spilled request: allocate its full span reservation,
+        upload the payload, rewrite the page-table row, reactivate the
+        slot. Returns "ok", or why not: "backoff" (transient failures ate
+        the per-tick retry budget — re-queued with exponential backoff),
+        "no_slot", "no_pages" (genuine shortage — the pressure ladder's
+        problem, not a retry's)."""
+        if now < sp.not_before:
+            return "backoff"
+        free = [i for i in range(self.sched.num_slots)
+                if not self.active[i]]
+        if not free:
+            return "no_slot"
+        alloc = self.allocator2 if sp.tier2 else self.allocator
+        faults = self._faults
+        delay = faults.take_restore_delay() if faults is not None else 0.0
+        if delay > 0:
+            time.sleep(delay)
+            self._slo["restore_delays"] += 1
+        backoff = self.sched.restore_backoff_s
+        for attempt in range(self.sched.restore_max_retries):
+            if faults is not None and faults.take_alloc_fail():
+                sp.restore_retries += 1
+                self._slo["restore_retries"] += 1
+                if backoff > 0:
+                    time.sleep(backoff * (2 ** attempt))
+                continue
+            if not alloc.can_alloc(sp.n_pages):
+                return "no_pages"
+            ids = alloc.alloc(sp.n_pages, sp.req.rid)
+            if faults is not None and faults.take_restore_fail():
+                # the upload "failed" after allocation: release and back
+                # off — the alloc/release conservation path under failure
+                alloc.release(sp.req.rid)
+                sp.restore_retries += 1
+                self._slo["restore_retries"] += 1
+                if backoff > 0:
+                    time.sleep(backoff * (2 ** attempt))
+                continue
+            n_data = pages_lib.pages_for_tokens(sp.length,
+                                                self.sched.page_size)
+            if sp.tier2:
+                self.pool2 = spill_lib.restore_pages(
+                    self.pool2, sp.payload, ids[:n_data])
+            else:
+                self.pool = spill_lib.restore_pages(
+                    self.pool, sp.payload, ids[:n_data])
+            slot = free[0]
+            row = np.zeros((self.sched.max_pages,), np.int32)
+            row[:sp.n_pages] = ids
+            if sp.tier2:
+                self.page_table2[slot] = row
+                self.page_table[slot] = 0
+            else:
+                self.page_table[slot] = row
+                if self.allocator2 is not None:
+                    self.page_table2[slot] = 0
+            self.tier2[slot] = sp.tier2
+            self.lengths[slot] = sp.length
+            self.active[slot] = True
+            self.next_tok[slot] = sp.next_tok
+            self.ctx_buf[slot] = 0
+            self.ctx_buf[slot, :len(sp.ctx)] = sp.ctx
+            self.ctx_len[slot] = len(sp.ctx)
+            self.slots[slot] = _Slot.from_spilled(sp)
+            del self._spilled[sp.req.rid]
+            self._slo["restores"] += 1
+            return "ok"
+        # per-tick retry budget exhausted: re-queue with backoff so the
+        # loop never blocks on one unlucky restore
+        sp.not_before = now + backoff * (2 ** self.sched.restore_max_retries)
+        return "backoff"
+
+    def _degrade_slot(self, slot: int) -> bool:
+        """Tier migration (the "degrade" pressure rung): recompress a
+        live tier-1 slot's pages into the lower-bit tier-2 pool, freeing
+        its tier-1 pages WITHOUT preempting it. Lossy by one
+        requantization — recorded on the slot / its result. Only fires
+        when the victim's full span reservation fits tier-2."""
+        st = self.slots[slot]
+        rid = st.req.rid
+        row = self.page_table[slot]
+        n_total = int(np.count_nonzero(row))
+        if not self.allocator2.can_alloc(n_total):
+            return False
+        if self._faults is not None and self._faults.take_alloc_fail():
+            return False
+        n_data = pages_lib.pages_for_tokens(int(self.lengths[slot]),
+                                            self.sched.page_size)
+        ids2 = self.allocator2.alloc(n_total, rid)
+        self.pool2 = spill_lib.migrate_pages(
+            self.pool, row[:n_data], self.backend.quantizer,
+            self.backend2.quantizer, self.pool2, ids2[:n_data],
+            migrate_fn=self._migrate_fn)
+        self.allocator.free(rid)
+        self.page_table[slot] = 0
+        row2 = np.zeros((self.sched.max_pages,), np.int32)
+        row2[:n_total] = ids2
+        self.page_table2[slot] = row2
+        self.tier2[slot] = True
+        st.degraded = True
+        self._slo["degraded"] += 1
+        return True
+
+    def _pick_victim(self, priority: int,
+                     holding_tier2: Optional[bool] = None
+                     ) -> Optional[int]:
+        """Preemption victim: the lowest-priority active slot STRICTLY
+        below `priority`; ties broken by most pages held (frees the
+        most), then slot index. `holding_tier2` restricts to slots whose
+        pages live in that tier (a tier-1 page shortage is only relieved
+        by a tier-1 holder)."""
+        best_key, best = None, None
+        for i in range(self.sched.num_slots):
+            if not self.active[i]:
+                continue
+            t2 = bool(self.tier2[i]) if len(self.tier2) else False
+            if holding_tier2 is not None and t2 != holding_tier2:
+                continue
+            st = self.slots[i]
+            if st.priority >= priority:
+                continue
+            row = self.page_table2[i] if t2 else self.page_table[i]
+            key = (st.priority, -int(np.count_nonzero(row)), i)
+            if best_key is None or key < best_key:
+                best_key, best = key, i
+        return best
+
+    def _apply_pressure(self, priority: int, need_slot: bool,
+                        pool_tier2: bool = False) -> bool:
+        """One pressure-ladder rung on one victim (shed happens in
+        `_shed_expired`; evict happens on its own when requests finish):
+        degrade if the shortage is tier-1 pages and a tier-2 pool exists,
+        else spill. Returns True when resources were freed — the caller
+        re-checks admissibility and may ask again."""
+        if need_slot:
+            victim = self._pick_victim(priority)
+            if victim is None:
+                return False
+            self._spill_slot(victim)
+            return True
+        # page shortage in the pool `pool_tier2` selects
+        if not pool_tier2 and self.backend2 is not None:
+            victim = self._pick_victim(priority, holding_tier2=False)
+            if victim is not None and self._degrade_slot(victim):
+                return True
+        victim = self._pick_victim(priority, holding_tier2=pool_tier2)
+        if victim is None:
+            return False
+        self._spill_slot(victim)
+        return True
+
+    # ------------------------------------------------------------ admission --
+    def _try_admit_one(self, req: Request, pending: list, results: list,
+                       now: float, rng: jax.Array
+                       ) -> tuple[str, jax.Array]:
+        """Admit `req` if a slot + pages are available (the legacy FCFS
+        admission body, verbatim semantics — including the rng split
+        order). Returns ("ok" | "no_slot" | "no_pages" | "fault", rng);
+        only "ok" consumes the request from `pending`."""
+        free_slots = [i for i in range(self.sched.num_slots)
+                      if not self.active[i]]
+        if not free_slots:
+            return "no_slot", rng
+        _, need = self._pages_needed(req)
+        shared, skip = self._match_prefix(req)
+        # take the request's refs on the hit pages FIRST so trie
+        # reclamation below can never free them out from under it
+        self.allocator.share(shared, req.rid)
+        n_fresh = need - len(shared)
+        while (self.trie is not None
+               and not self.allocator.can_alloc(n_fresh)
+               and self.trie.evict_one()):
+            pass  # reclaim cached-but-unused prefix pages
+        if (self._faults is not None and n_fresh > 0
+                and self._faults.take_alloc_fail()):
+            # injected transient allocation failure: plain backpressure —
+            # the request stays queued and retries next tick
+            self.allocator.release(req.rid)
+            return "fault", rng
+        if not self.allocator.can_alloc(n_fresh):
+            self.allocator.release(req.rid)
+            return "no_pages", rng
+        pending.remove(req)
+        if self.trie is not None:
+            self.trie.record(skip)
+        fresh = self.allocator.alloc(n_fresh, req.rid)
+        rng, sub = jax.random.split(rng)
+        slot = free_slots[0]
+        t_pf = time.perf_counter()
+        self._admit(req, slot, shared, fresh, skip, sub, now)
+        self._prefill_wall += time.perf_counter() - t_pf
+        st = self.slots[slot]
+        if self._finished(st):  # budget 1 or instant EOS
+            self._evict(slot, results, time.perf_counter() - self._t0)
+        return "ok", rng
+
+    def _admission_preempt(self, pending: list, results: list, now: float,
+                           rng: jax.Array) -> jax.Array:
+        """Priority-ordered admission with the pressure ladder.
+
+        Candidates are every arrived queued request plus every spilled
+        request, ordered (priority desc, arrival, rid) — restores compete
+        with fresh arrivals at their ORIGINAL priority and arrival time.
+        The head candidate gets the tick's resources; when it cannot be
+        served, one pressure rung fires on a strictly-lower-priority
+        victim and the ladder re-evaluates. Backoff-parked restores are
+        skipped (their shortage is transient, not a resource hole).
+        Head-of-line blocking within the ladder is deliberate: admitting
+        a lower-priority candidate past a resource-starved higher one
+        would invert the SLO ordering."""
+        while True:
+            cands: list[tuple] = [
+                ("req", r.priority, r.arrival, r.rid, r)
+                for r in pending if r.arrival <= now]
+            cands += [
+                ("spill", sp.priority, sp.req.arrival, sp.req.rid, sp)
+                for sp in self._spilled.values()]
+            cands.sort(key=lambda c: (-c[1], c[2], c[3]))
+            progressed = False
+            for kind, prio, _, _, obj in cands:
+                if kind == "spill":
+                    why = self._try_restore(obj, now)
+                    if why == "ok":
+                        progressed = True
+                        break
+                    if why == "backoff":
+                        continue  # transient; next candidate may proceed
+                    if self._apply_pressure(prio, why == "no_slot",
+                                            pool_tier2=obj.tier2):
+                        progressed = True
+                        break
+                    return rng  # resource-starved head of line
+                why, rng = self._try_admit_one(obj, pending, results,
+                                               now, rng)
+                if why == "ok":
+                    progressed = True
+                    break
+                if why == "fault":
+                    return rng  # transient failure: retry next tick
+                if self._apply_pressure(prio, why == "no_slot"):
+                    progressed = True
+                    break
+                return rng
+            if not progressed:
+                return rng
+
     # ------------------------------------------------------------ main loop --
     def run(self, requests: list[Request],
-            rng: Optional[jax.Array] = None) -> tuple[list[RequestResult],
-                                                      dict]:
+            rng: Optional[jax.Array] = None,
+            faults=None) -> tuple[list[RequestResult], dict]:
         """Serve a request trace to completion.
 
         Requests are admitted FCFS as their `arrival` times pass and a
         decode slot plus enough pool pages free up; the call blocks until
-        every request has finished. Raises ValueError up-front for any
-        request whose worst-case span cannot fit the pool or the page
-        table, so admission can never OOM mid-flight.
+        every request has finished (or was shed / cancelled — every
+        request yields exactly one typed `RequestResult`, never a hang).
+        Raises ValueError up-front for any request whose worst-case span
+        cannot fit the pool or the page table, so admission can never OOM
+        mid-flight.
+
+        With `sched.preempt` admission is priority-ordered instead of
+        FCFS and backed by the pressure ladder (shed -> degrade -> spill
+        -> evict, docs/serving.md): a high-priority arrival that cannot
+        be admitted preempts a strictly-lower-priority victim by spilling
+        its pages to host memory; the victim resumes later,
+        bitwise-losslessly. `faults` (serving/faults.py FaultInjector)
+        injects deterministic adversity — forced allocation failures,
+        delayed/failed restores, mid-verify cancels, pool exhaustion —
+        through the exact code paths real failures would take.
 
         Returns `(results, stats)`: per-request `RequestResult`s sorted by
         rid, and an aggregate dict with wall/throughput/latency
-        percentiles, pool accounting, prefill work counters
-        (`prefill_chunks`, `prefill_tokens_computed`, `prefill_wall_s`),
-        in prefix-cache "share" mode a `prefix` sub-dict with this run's
+        percentiles (over COMPLETED requests), pool accounting, prefill
+        work counters (`prefill_chunks`, `prefill_tokens_computed`,
+        `prefill_wall_s`), an `slo` sub-dict (shed/cancelled/spill/
+        restore/degrade counters + per-priority-class latency), in
+        prefix-cache "share" mode a `prefix` sub-dict with this run's
         trie hits/misses/hit_tokens/evictions, and with speculation on a
         `spec` sub-dict (aggregate + per-request draft_proposed /
         draft_accepted / acceptance_rate / verify_steps /
@@ -1112,50 +1818,47 @@ class PagedServingEngine:
         self._t0 = time.perf_counter()
         self._prefill_chunks = 0
         self._prefill_tokens = 0
-        prefill_wall = 0.0
+        self._prefill_wall = 0.0
+        self._faults = faults
+        self._slo = dict(shed=0, cancelled=0, spills=0, spill_bytes=0,
+                         restores=0, restore_retries=0, restore_delays=0,
+                         degraded=0)
         trie0 = self.trie.stats() if self.trie is not None else None
         steps = 0
-        while pending or self.active.any():
+        tick = -1
+        if faults is not None:
+            faults.begin(self)
+        while pending or self._spilled or self.active.any():
+            tick += 1
             now = time.perf_counter() - self._t0
-            # --- admission: FCFS while a slot + pages are available
-            while pending and pending[0].arrival <= now:
-                free_slots = [i for i in range(self.sched.num_slots)
-                              if not self.active[i]]
-                if not free_slots:
-                    break
-                req = pending[0]
-                _, need = self._pages_needed(req)
-                shared, skip = self._match_prefix(req)
-                # take the request's refs on the hit pages FIRST so trie
-                # reclamation below can never free them out from under it
-                self.allocator.share(shared, req.rid)
-                n_fresh = need - len(shared)
-                while (self.trie is not None
-                       and not self.allocator.can_alloc(n_fresh)
-                       and self.trie.evict_one()):
-                    pass  # reclaim cached-but-unused prefix pages
-                if not self.allocator.can_alloc(n_fresh):
-                    self.allocator.release(req.rid)
-                    break  # FCFS head-of-line: wait for an eviction
-                pending.pop(0)
-                if self.trie is not None:
-                    self.trie.record(skip)
-                fresh = self.allocator.alloc(n_fresh, req.rid)
-                rng, sub = jax.random.split(rng)
-                slot = free_slots[0]
-                t_pf = time.perf_counter()
-                self._admit(req, slot, shared, fresh, skip, sub, now)
-                prefill_wall += time.perf_counter() - t_pf
-                st = self.slots[slot]
-                if self._finished(st):  # budget 1 or instant EOS
-                    self._evict(slot, results,
-                                time.perf_counter() - self._t0)
+            self._watchdog(tick, pending)
+            if faults is not None:
+                faults.on_tick(self, tick)
+            if self._cancel_req:
+                self._process_cancels(pending, results, now)
+            # --- admission: priority-ordered + pressure ladder in preempt
+            # mode, legacy FCFS (identical rng order) otherwise
+            if self.sched.preempt:
+                rng = self._admission_preempt(pending, results, now, rng)
+            else:
+                while pending and pending[0].arrival <= now:
+                    why, rng = self._try_admit_one(pending[0], pending,
+                                                   results, now, rng)
+                    if why != "ok":
+                        break  # FCFS head-of-line: wait for an eviction
+            self._shed_expired(pending, results, now)
+            if self.sched.debug_conservation:
+                self._check_conservation()
             if not self.active.any():
                 if pending:  # idle until the next arrival
                     wait = pending[0].arrival - (time.perf_counter()
                                                  - self._t0)
                     if wait > 0:
                         time.sleep(min(wait, 0.01))
+                elif self._spilled:
+                    # every live request is spilled and restores are
+                    # backing off — yield briefly, then retry
+                    time.sleep(0.001)
                 continue
             remaining = np.ones((self.sched.num_slots,), np.int32)
             for i in range(self.sched.num_slots):
@@ -1167,12 +1870,15 @@ class PagedServingEngine:
                 if self.sched.spec_device:
                     # --- fused burst: up to max_burst draft->verify->
                     # accept rounds, ONE dispatch, one host sync
-                    steps += self._spec_burst(remaining, results,
-                                              queued=bool(pending))
+                    steps += self._spec_burst(
+                        remaining, results,
+                        queued=bool(pending or self._spilled))
                 else:
                     # --- host-driven oracle: one round per dispatch
                     self._spec_step(remaining, results)
                     steps += 1
+                if self.sched.debug_conservation:
+                    self._check_conservation()
                 continue
             # --- one decode burst: k fused steps, k = min remaining budget
             k = int(min(self.sched.max_burst,
@@ -1180,14 +1886,32 @@ class PagedServingEngine:
             mp = self._live_table_width(k)
             owned = self._owned_write_mask(k)
             rng, sub = jax.random.split(rng)
-            pk, pv, emitted, out = self._dispatch(
-                ("decode", mp), self._decode_fn,
-                self.params, self.pool.k, self.pool.v,
-                jnp.asarray(self.page_table[:, :mp]),
-                jnp.asarray(self.lengths),
-                jnp.asarray(self.active), jnp.asarray(owned),
-                jnp.asarray(self.next_tok),
-                jnp.asarray(remaining), jnp.asarray(k, jnp.int32), sub)
+            if self.backend2 is not None:
+                # tiered dispatch: both pools ride the burst; a slot's
+                # pages live in exactly one (tier2 routes)
+                pk, pv, pk2, pv2, emitted, out = self._dispatch(
+                    ("decode", mp), self._decode_fn,
+                    self.params, self.pool.k, self.pool.v,
+                    self.pool2.k, self.pool2.v,
+                    jnp.asarray(self.page_table[:, :mp]),
+                    jnp.asarray(self.page_table2[:, :mp]),
+                    jnp.asarray(self.tier2),
+                    jnp.asarray(self.lengths),
+                    jnp.asarray(self.active), jnp.asarray(owned),
+                    jnp.asarray(self.next_tok),
+                    jnp.asarray(remaining), jnp.asarray(k, jnp.int32),
+                    sub)
+                self.pool2 = self.pool2._replace(k=pk2, v=pv2)
+            else:
+                pk, pv, emitted, out = self._dispatch(
+                    ("decode", mp), self._decode_fn,
+                    self.params, self.pool.k, self.pool.v,
+                    jnp.asarray(self.page_table[:, :mp]),
+                    jnp.asarray(self.lengths),
+                    jnp.asarray(self.active), jnp.asarray(owned),
+                    jnp.asarray(self.next_tok),
+                    jnp.asarray(remaining), jnp.asarray(k, jnp.int32),
+                    sub)
             self.pool = self.pool._replace(k=pk, v=pv)
             emitted = np.asarray(emitted)
             out = np.asarray(out)
@@ -1207,12 +1931,29 @@ class PagedServingEngine:
                 self.ctx_len[i] = cl + n
                 if self._finished(self.slots[i]):
                     self._evict(i, results, t_now)
+            # mid-burst cancellation window (plain decode): cancels
+            # injected while the burst ran land here, same tick
+            if faults is not None:
+                for rid in faults.mid_burst_cancels():
+                    self.cancel(rid)
+            if self._cancel_req:
+                for i in range(self.sched.num_slots):
+                    if (self.active[i]
+                            and self.slots[i].req.rid in self._cancel_req):
+                        self._evict(i, results, t_now, status="cancelled")
+            if self.sched.debug_conservation:
+                self._check_conservation()
         wall = time.perf_counter() - self._t0
-        self.allocator.check_conservation()
+        if faults is not None:
+            faults.finish(self)  # return stolen pages before the audit
+        self._faults = None
+        self._check_conservation()
         results.sort(key=lambda r: r.rid)
+        completed = [r for r in results if r.status == "completed"]
         total_new = int(sum(len(r.tokens) for r in results))
-        lat = np.asarray([r.latency_s for r in results] or [0.0])
-        ttft = np.asarray([r.ttft_s for r in results] or [0.0])
+        lat = np.asarray([r.latency_s for r in completed] or [0.0])
+        ttft = np.asarray([r.ttft_s for r in completed] or [0.0])
+        prefill_wall = self._prefill_wall
         stats = {
             "num_requests": len(results),
             "decode_steps": steps,
@@ -1233,6 +1974,24 @@ class PagedServingEngine:
         # lifetime (compile cost is paid once and amortized across runs —
         # see serving/compile_cache.py and docs/serving.md "Performance")
         stats["perf"] = dict(self._perf, warmed=self._warmed)
+        # SLO / pressure-ladder accounting for THIS run: what the ladder
+        # did (spill/restore/degrade/shed/cancel counters) and how each
+        # priority class fared (completed requests only)
+        per_class = {}
+        for p in sorted({r.priority for r in completed}):
+            cl = [r.latency_s for r in completed if r.priority == p]
+            per_class[str(p)] = {
+                "n": len(cl),
+                "latency_p50_s": float(np.percentile(cl, 50)),
+                "latency_p99_s": float(np.percentile(cl, 99)),
+            }
+        stats["slo"] = dict(
+            self._slo,
+            completed=len(completed),
+            preempted=sum(1 for r in results if r.preemptions > 0),
+            per_class=per_class)
+        if faults is not None:
+            stats["faults"] = faults.stats()
         if self.sched.speculate:
             # draft/verify accounting: a request's decode-emitted tokens
             # exclude its first token (sampled by prefill), so
@@ -1242,7 +2001,9 @@ class PagedServingEngine:
             proposed = sum(r.draft_proposed for r in results)
             accepted = sum(r.draft_accepted for r in results)
             vsteps = sum(r.verify_steps for r in results)
-            decode_tokens = total_new - len(results)
+            # each served request's first token came from prefill, not a
+            # verify step (shed requests contribute zero either way)
+            decode_tokens = sum(max(len(r.tokens) - 1, 0) for r in results)
             stats["spec"] = {
                 "draft_len": self.sched.draft_len,
                 "draft_proposed": proposed,

@@ -1,0 +1,437 @@
+"""SLO-aware preemption: spill/restore bitwise losslessness (both quant
+backends), priority preemption + resume token parity, deadline shedding,
+cancellation (queued / active / mid-verify speculative), tiered-precision
+degradation, the wall-clock watchdog, restore retry/backoff under injected
+faults, and a seeded op-sequence conservation/aliasing property test over
+the allocator + spill/restore/pop_tokens machinery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.core import mixedkv, rates, sensitivity
+from repro.core.quantizer import KVQuantizer, QuantizerConfig
+from repro.models import transformer
+from repro.serving import backends as backends_lib
+from repro.serving import engine
+from repro.serving import pages
+from repro.serving import scheduler
+from repro.serving import spill
+from repro.serving.faults import FaultEvent, FaultInjector
+
+
+def _cfg(**kw):
+    base = dict(name="pre", family="decoder", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=128,
+                head_dim=32)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _qz(cfg):
+    return KVQuantizer(QuantizerConfig(
+        head_dim=cfg.head_dim, schedule=mixedkv.uniform(cfg.num_layers),
+        k_norm=rates.NORM_K8, v_norm=rates.NORM_V4_LOG, storage="bitpack"))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    qz = _qz(cfg)
+    params, _ = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, qz, params
+
+
+def _req(rid, rng, plen, budget, arrival=0.0, priority=0, deadline_ms=None):
+    return scheduler.Request(
+        rid=rid, tokens=rng.integers(0, 128, plen).astype(np.int32),
+        max_new_tokens=budget, arrival=arrival, priority=priority,
+        deadline_ms=deadline_ms)
+
+
+def _static_ref(params, cfg, be, req):
+    ref = engine.generate(params, cfg, be, jnp.asarray(req.tokens)[None],
+                          max_new_tokens=req.max_new_tokens)
+    return np.asarray(ref.tokens)[0][:req.max_new_tokens]
+
+
+# ------------------------------------------------------ spill mechanics ---
+@pytest.mark.parametrize("backend_name", ["pallas", "xla"])
+def test_preempt_spill_restore_bitwise_parity(setup, backend_name):
+    """A high-priority arrival preempts a low-priority victim by spilling
+    its pages to host memory; the victim resumes and every request's
+    greedy tokens are BITWISE the static engine's — spill -> restore ->
+    decode is lossless on both quant backends. Injected restore failures
+    and delays (the retry/backoff path) must not change a single token."""
+    cfg, qz, params = setup
+    if backend_name == "pallas":
+        be = backends_lib.QuantPallasBackend(cfg, qz, interpret=True)
+    else:
+        be = backends_lib.QuantXLABackend(cfg, qz, y_dtype=jnp.float32)
+    rng = np.random.default_rng(11)
+    reqs = [_req(0, rng, 10, 12, 0.0, 0), _req(1, rng, 10, 12, 0.0, 0),
+            _req(2, rng, 10, 5, 0.02, 1)]
+    sched = scheduler.SchedulerConfig(
+        num_slots=2, page_size=4, num_pages=40, max_context=64,
+        prefill_chunk=8, max_burst=4, preempt=True,
+        debug_conservation=True, max_wall_s=300.0)
+    eng = scheduler.PagedServingEngine(params, cfg, be, sched)
+    faults = FaultInjector([
+        # consumed only by restores: forces the alloc/release-under-
+        # failure path, then an injected slow host->device link
+        FaultEvent("restore_fail", tick=0, count=2),
+        FaultEvent("restore_delay", tick=0, count=1, delay_s=0.002),
+    ])
+    results, stats = eng.run(list(reqs), faults=faults)
+    assert [r.rid for r in results] == [0, 1, 2]
+    assert all(r.status == "completed" for r in results)
+    by = {r.rid: r for r in results}
+    # the hi-prio arrival preempted exactly one lo-prio victim
+    assert stats["slo"]["spills"] >= 1
+    assert stats["slo"]["restores"] == stats["slo"]["spills"]
+    assert stats["slo"]["preempted"] >= 1
+    assert stats["slo"]["restore_retries"] >= 2  # both injected failures
+    assert stats["slo"]["restore_delays"] == 1
+    assert by[2].preemptions == 0  # priority 1 is never the victim
+    victim = max(results, key=lambda r: r.preemptions)
+    assert victim.preemptions >= 1 and victim.restore_retries >= 1
+    for req in reqs:  # bitwise parity, preempted or not
+        np.testing.assert_array_equal(by[req.rid].tokens,
+                                      _static_ref(params, cfg, be, req))
+    assert eng.allocator.num_free == sched.num_pages - 1  # zero leaks
+    assert not eng._spilled and not eng._cancel_req
+
+
+def test_spill_restore_roundtrip_pages_exact(setup):
+    """spill_pages -> restore_pages into DIFFERENT page ids is a byte-exact
+    round trip (pages are position-independent packed bytes)."""
+    cfg, qz, params = setup
+    be = backends_lib.QuantPallasBackend(cfg, qz, interpret=True)
+    pool = be.init_paged_cache(16, 4, 2, 8)
+    rng = np.random.default_rng(0)
+    # scribble recognizable bytes into pages 1..3 of every layer
+    def scribble(a):
+        host = np.array(a)  # np.asarray of a jax array is read-only
+        host[:, 1:4] = rng.integers(
+            0, 200, host[:, 1:4].shape).astype(host.dtype)
+        return jnp.asarray(host)
+    pool = pool._replace(k=jax.tree.map(scribble, pool.k),
+                         v=jax.tree.map(scribble, pool.v))
+    before = [np.asarray(a) for a in jax.tree.leaves((pool.k, pool.v))]
+    payload = spill.spill_pages(pool, np.asarray([1, 2, 3], np.int32))
+    assert payload.n_pages == 3 and payload.nbytes() > 0
+    pool2 = spill.restore_pages(pool, payload,
+                                np.asarray([5, 7, 6], np.int32))
+    after = [np.asarray(a) for a in jax.tree.leaves((pool2.k, pool2.v))]
+    for b, a in zip(before, after):
+        np.testing.assert_array_equal(a[:, [5, 7, 6]], b[:, [1, 2, 3]])
+    with pytest.raises(ValueError):  # page-count mismatch is rejected
+        spill.restore_pages(pool, payload, np.asarray([5], np.int32))
+
+
+# ----------------------------------------------------------- shed/cancel ---
+def test_deadline_shedding_typed_result(setup):
+    """A request whose admission deadline expires while queued is shed
+    with a typed result instead of waiting forever; the served request is
+    untouched."""
+    cfg, qz, params = setup
+    be = backends_lib.QuantPallasBackend(cfg, qz, interpret=True)
+    rng = np.random.default_rng(12)
+    reqs = [_req(0, rng, 8, 10, 0.0, 0),
+            _req(1, rng, 8, 4, 0.0, 0, deadline_ms=0.0)]
+    sched = scheduler.SchedulerConfig(
+        num_slots=1, page_size=4, num_pages=16, max_context=32,
+        prefill_chunk=8, max_burst=4, debug_conservation=True,
+        max_wall_s=300.0)
+    eng = scheduler.PagedServingEngine(params, cfg, be, sched)
+    results, stats = eng.run(list(reqs))
+    by = {r.rid: r for r in results}
+    assert by[0].status == "completed"
+    assert by[1].status == "shed" and len(by[1].tokens) == 0
+    assert by[1].latency_s >= 0 and stats["slo"]["shed"] == 1
+    np.testing.assert_array_equal(by[0].tokens,
+                                  _static_ref(params, cfg, be, reqs[0]))
+    assert eng.allocator.num_free == sched.num_pages - 1
+
+
+def test_cancel_active_and_queued_frees_same_tick(setup):
+    """cancel() lands at the tick boundary: an active request's pages are
+    freed the same tick and its typed result carries the tokens generated
+    so far (a bitwise prefix of the uncancelled run); a queued request is
+    retired with zero tokens."""
+    cfg, qz, params = setup
+    be = backends_lib.QuantPallasBackend(cfg, qz, interpret=True)
+    rng = np.random.default_rng(13)
+    reqs = [_req(0, rng, 8, 24, 0.0), _req(1, rng, 8, 4, 0.0)]
+    sched = scheduler.SchedulerConfig(
+        num_slots=1, page_size=4, num_pages=16, max_context=40,
+        prefill_chunk=8, max_burst=2, debug_conservation=True,
+        max_wall_s=300.0)
+    eng = scheduler.PagedServingEngine(params, cfg, be, sched)
+    faults = FaultInjector([
+        FaultEvent("cancel", tick=2, rid=0, phase="pre"),
+        FaultEvent("cancel", tick=0, rid=1, phase="pre"),  # still queued
+        FaultEvent("cancel", tick=3, rid=99, phase="pre"),  # unknown: noop
+    ])
+    results, stats = eng.run(list(reqs), faults=faults)
+    by = {r.rid: r for r in results}
+    assert by[0].status == "cancelled"
+    assert 0 < len(by[0].tokens) < 24  # partial progress rode the result
+    ref = _static_ref(params, cfg, be, reqs[0])
+    np.testing.assert_array_equal(by[0].tokens,
+                                  ref[:len(by[0].tokens)])
+    assert by[1].status == "cancelled" and len(by[1].tokens) == 0
+    assert stats["slo"]["cancelled"] == 2
+    assert eng.allocator.num_free == sched.num_pages - 1
+    assert not eng._cancel_req  # unknown rid was dropped, not leaked
+
+
+@pytest.mark.parametrize("spec_device", [False, True])
+def test_cancel_mid_verify_speculative(setup, spec_device):
+    """A cancel landing in the mid-verify window (between the device
+    dispatch and the host commit) frees the slot's pages the same tick —
+    the speculative tail through the validated pop_tokens path on the
+    host-driven oracle — and the partial tokens are a bitwise prefix of
+    the uncancelled greedy stream."""
+    cfg, qz, params = setup
+    be = backends_lib.QuantPallasBackend(cfg, qz, interpret=True)
+    rng = np.random.default_rng(14)
+    base = rng.integers(0, 128, 6).astype(np.int32)
+    prompt = np.concatenate([base, base])  # repeats: drafts accept
+    req = scheduler.Request(0, prompt, max_new_tokens=40)
+    sched = scheduler.SchedulerConfig(
+        num_slots=1, page_size=4, num_pages=32, max_context=64,
+        prefill_chunk=8, max_burst=4, speculate=True, draft_len=4,
+        spec_device=spec_device, debug_conservation=True, max_wall_s=300.0)
+    eng = scheduler.PagedServingEngine(params, cfg, be, sched)
+    faults = FaultInjector([
+        FaultEvent("cancel", tick=1, rid=0, phase="mid")])
+    results, stats = eng.run([req], faults=faults)
+    (r,) = results
+    assert r.status == "cancelled"
+    assert 0 < len(r.tokens) < 40
+    ref = _static_ref(params, cfg, be, req)
+    np.testing.assert_array_equal(r.tokens, ref[:len(r.tokens)])
+    assert stats["faults"]["cancel"] == 1
+    assert eng.allocator.num_free == sched.num_pages - 1
+
+
+# -------------------------------------------------------------- degrade ---
+def test_degrade_recompresses_victim_tier2(setup):
+    """Under tier-1 page pressure with a free slot, the ladder degrades a
+    lo-prio victim (dequant -> requant into the tier-2 pool) instead of
+    spilling it: the victim keeps running, its result is flagged, the
+    hi-prio request is untouched bitwise, and BOTH pools conserve."""
+    cfg, qz, params = setup
+    be = backends_lib.QuantPallasBackend(cfg, qz, interpret=True)
+    rng = np.random.default_rng(15)
+    reqs = [_req(0, rng, 10, 12, 0.0, 0),
+            _req(1, rng, 10, 5, 0.02, 1)]
+    # rid 0 reserves 6 of 8 usable tier-1 pages; rid 1 needs 4 -> page
+    # shortage with a free slot -> degrade rung fires
+    sched = scheduler.SchedulerConfig(
+        num_slots=2, page_size=4, num_pages=9, max_context=64,
+        prefill_chunk=8, max_burst=4, preempt=True,
+        degrade=scheduler.DegradeConfig(num_pages=16),
+        debug_conservation=True, max_wall_s=300.0)
+    eng = scheduler.PagedServingEngine(params, cfg, be, sched)
+    assert eng.backend2 is not None
+    assert (eng.backend2.quantizer.config.schedule.angle_bits()
+            < qz.config.schedule.angle_bits())
+    results, stats = eng.run(list(reqs))
+    by = {r.rid: r for r in results}
+    assert all(r.status == "completed" for r in results)
+    assert by[0].degraded and stats["slo"]["degraded"] == 1
+    assert not by[1].degraded
+    np.testing.assert_array_equal(by[1].tokens,
+                                  _static_ref(params, cfg, be, reqs[1]))
+    assert len(by[0].tokens) == 12  # lossy but served to completion
+    assert eng.allocator.num_free == sched.num_pages - 1
+    assert eng.allocator2.num_free == 16 - 1
+
+
+def test_degrade_config_validation(setup):
+    cfg, qz, params = setup
+    be = backends_lib.QuantPallasBackend(cfg, qz, interpret=True)
+    with pytest.raises(ValueError):  # degrade x speculate
+        scheduler.SchedulerConfig(
+            speculate=True, degrade=scheduler.DegradeConfig())
+    with pytest.raises(ValueError):  # degrade x prefix share
+        scheduler.SchedulerConfig(
+            prefix_cache="share", degrade=scheduler.DegradeConfig())
+    with pytest.raises(ValueError):
+        scheduler.DegradeConfig(num_pages=1)
+    with pytest.raises(ValueError):  # explicit schedule below the floor
+        scheduler.PagedServingEngine(
+            params, cfg, be,
+            scheduler.SchedulerConfig(degrade=scheduler.DegradeConfig(
+                schedule=mixedkv.uniform(cfg.num_layers, 4, 4),
+                floor_angle_bits=2.5)))
+    with pytest.raises(ValueError):
+        scheduler.SchedulerConfig(restore_max_retries=0)
+    with pytest.raises(ValueError):
+        scheduler.SchedulerConfig(max_wall_s=0.0)
+    with pytest.raises(ValueError):
+        scheduler.Request(0, np.zeros((3,), np.int32), 4, deadline_ms=-1)
+
+
+def test_pick_degraded_ladder():
+    """degrade_ladder halves codebooks toward the floor; pick_degraded
+    returns the cheapest rung at/above it (or budget-constrained with an
+    eval_fn) and raises when no rung exists."""
+    s = mixedkv.uniform(4)  # K128V64, 3.25 angle bits
+    ladder = mixedkv.degrade_ladder(s, floor_angle_bits=1.0)
+    assert len(ladder) >= 2
+    bits = [r.angle_bits() for r in ladder]
+    assert bits == sorted(bits, reverse=True)  # most precise first
+    assert all(b >= 1.0 for b in bits)
+    cheapest = sensitivity.pick_degraded(s, floor_angle_bits=1.0)
+    assert cheapest.schedule.angle_bits() == bits[-1]
+    # eval_fn + budget: cheapest rung whose score fits
+    scored = sensitivity.pick_degraded(
+        s, floor_angle_bits=1.0,
+        eval_fn=lambda sc: 10.0 - sc.angle_bits(), max_score=8.0)
+    assert 10.0 - scored.schedule.angle_bits() <= 8.0
+    with pytest.raises(ValueError):  # nothing below an already-min sched
+        sensitivity.pick_degraded(mixedkv.uniform(4, 4, 4),
+                                  floor_angle_bits=1.0)
+    with pytest.raises(ValueError):
+        mixedkv.degraded(s, factor=1)
+
+
+# ------------------------------------------------------------- watchdog ---
+def test_watchdog_aborts_with_diagnostic(setup):
+    cfg, qz, params = setup
+    be = backends_lib.QuantPallasBackend(cfg, qz, interpret=True)
+    rng = np.random.default_rng(16)
+    sched = scheduler.SchedulerConfig(
+        num_slots=1, page_size=4, num_pages=32, max_context=96,
+        prefill_chunk=8, max_burst=1, max_wall_s=0.05)
+    eng = scheduler.PagedServingEngine(params, cfg, be, sched)
+    with pytest.raises(scheduler.SchedulerWatchdogError) as ei:
+        eng.run([_req(0, rng, 8, 64)])
+    d = ei.value.diagnostic
+    assert d["wall_s"] > 0.05 and d["tick"] >= 1
+    assert {"live_slots", "pool", "pending_rids", "spilled_rids",
+            "last_dispatch_key"} <= set(d)
+    assert d["live_slots"] and d["live_slots"][0]["rid"] == 0
+    assert str(d["tick"]) in str(ei.value)  # dump rides the message
+
+
+# ---------------------------------------------------- fault injector unit --
+def test_fault_injector_validation_and_determinism():
+    with pytest.raises(ValueError):
+        FaultEvent("meteor_strike")
+    with pytest.raises(ValueError):
+        FaultEvent("cancel")  # needs a rid
+    with pytest.raises(ValueError):
+        FaultEvent("pool_steal", pages=0)
+    with pytest.raises(ValueError):
+        FaultEvent("cancel", rid=1, phase="post")
+    a = FaultInjector.random(7, 50, rids=(1, 2, 3))
+    b = FaultInjector.random(7, 50, rids=(1, 2, 3))
+    assert a.events == b.events  # same seed -> same campaign
+    c = FaultInjector.random(8, 50, rids=(1, 2, 3))
+    assert a.events != c.events
+
+
+# -------------------------------------------- property: conservation -------
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6))
+def test_alloc_spill_restore_pop_conservation(seed):
+    """Seeded op-sequence interpreter over interleaved alloc / share /
+    spill / restore / release / pop_tokens: page conservation holds after
+    EVERY op, exclusive pages are never aliased (each holds its owner's
+    stamp), and a restore's payload survives any interleaving byte-exact.
+    """
+    rng = np.random.default_rng(seed)
+    num_pages, ps = 24, 4
+    alloc = pages.PageAllocator(num_pages)
+    stamps = np.zeros((num_pages,), np.int64)  # fake pool payload
+    live = {}  # owner -> dict(pages, stamp, row, length)
+    spilled = {}  # owner -> (payload, n_pages, stamp)
+    next_owner, next_stamp = 0, 1
+
+    def check_no_aliasing():
+        alloc.check_conservation()
+        for ow, st_ in live.items():
+            for p in st_["pages"]:
+                rc = alloc.refcount(p)
+                assert rc >= 1, f"owner {ow} holds dead page {p}"
+                if rc == 1:  # exclusively held: nobody may have clobbered
+                    assert stamps[p] == st_["stamp"], (
+                        f"page {p} of owner {ow} was clobbered")
+
+    def exclusive(st_):
+        return [p for p in st_["pages"] if alloc.refcount(p) == 1]
+
+    for _ in range(60):
+        op = rng.choice(["alloc", "share", "spill", "restore", "release",
+                         "pop"])
+        if op == "alloc":
+            n = int(rng.integers(1, 5))
+            if not alloc.can_alloc(n):
+                continue
+            ow = f"o{next_owner}"
+            next_owner += 1
+            ids = alloc.alloc(n, ow)
+            stamps[ids] = next_stamp
+            row = np.zeros((8,), np.int32)
+            row[:n] = ids
+            live[ow] = dict(pages=list(map(int, ids)), stamp=next_stamp,
+                            row=row, length=n * ps)
+            next_stamp += 1
+        elif op == "share" and live:
+            src = live[list(live)[int(rng.integers(len(live)))]]
+            ow = f"o{next_owner}"
+            next_owner += 1
+            take = src["pages"][:int(rng.integers(1, len(src["pages"]) + 1))]
+            alloc.share(np.asarray(take, np.int32), ow)
+            live[ow] = dict(pages=list(take), stamp=src["stamp"],
+                            row=None, length=0)
+        elif op == "spill" and live:
+            ow = list(live)[int(rng.integers(len(live)))]
+            st_ = live.pop(ow)
+            # exclusively-held pages carry this owner's bytes to host;
+            # shared ones stay alive under their co-owners
+            own = exclusive(st_)
+            payload = stamps[own].copy()
+            alloc.release(ow)
+            spilled[ow] = (payload, len(own), st_["stamp"])
+        elif op == "restore" and spilled:
+            ow = list(spilled)[int(rng.integers(len(spilled)))]
+            payload, n, stamp = spilled[ow]
+            if n == 0 or not alloc.can_alloc(n):
+                continue
+            del spilled[ow]
+            ids = alloc.alloc(n, ow)
+            stamps[ids] = payload  # upload the spilled bytes
+            np.testing.assert_array_equal(stamps[ids], payload)
+            row = np.zeros((8,), np.int32)
+            row[:n] = ids
+            live[ow] = dict(pages=list(map(int, ids)), stamp=stamp,
+                            row=row, length=n * ps)
+        elif op == "release" and live:
+            ow = list(live)[int(rng.integers(len(live)))]
+            live.pop(ow)
+            alloc.release(ow)
+        elif op == "pop" and live:
+            ow = list(live)[int(rng.integers(len(live)))]
+            st_ = live[ow]
+            if (st_["row"] is None or st_["length"] <= 1
+                    or len(exclusive(st_)) != len(st_["pages"])):
+                continue
+            n_pop = int(rng.integers(1, st_["length"]))
+            new_len, _ = pages.pop_tokens(
+                alloc, ow, st_["row"], st_["length"], n_pop, ps,
+                free_empty=True)
+            st_["length"] = new_len
+            st_["pages"] = [int(p) for p in st_["row"] if p != 0]
+        check_no_aliasing()
+    for ow in list(live):
+        alloc.release(ow)
+    alloc.check_conservation()
+    assert alloc.num_free == num_pages - 1

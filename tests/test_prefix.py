@@ -213,7 +213,8 @@ def test_scheduler_raises_on_cow_violation():
     be = backends_lib.QuantPallasBackend(cfg, qz, interpret=True)
     sched = scheduler.SchedulerConfig(
         num_slots=1, page_size=4, num_pages=32, max_context=32,
-        prefill_chunk=8, max_burst=4, prefix_cache="share", prefix_pages=8)
+        prefill_chunk=8, max_burst=4, prefix_cache="share", prefix_pages=8,
+        debug_conservation=True)
     eng = scheduler.PagedServingEngine(params, cfg, be, sched)
     rng = np.random.default_rng(2)
     req = scheduler.Request(0, rng.integers(0, 128, 6).astype(np.int32), 4)
@@ -269,7 +270,7 @@ def test_shared_prefix_bitwise_matches_cold_both_backends(setup,
         sched = scheduler.SchedulerConfig(
             num_slots=2, page_size=4, num_pages=96, max_context=48,
             prefill_chunk=8, max_burst=4, prefix_cache=mode,
-            prefix_pages=16)
+            prefix_pages=16, debug_conservation=True)
         eng = scheduler.PagedServingEngine(params, cfg, be, sched)
         res, stats = eng.run(reqs)
         eng.allocator.check_conservation()
@@ -297,7 +298,7 @@ def test_share_reuses_trie_across_runs_and_respects_small_bound(setup):
     sched = scheduler.SchedulerConfig(
         num_slots=2, page_size=4, num_pages=96, max_context=48,
         prefill_chunk=8, max_burst=4, prefix_cache="share",
-        prefix_pages=3)  # < one prompt's full blocks: constant eviction
+        prefix_pages=3, debug_conservation=True)  # < one prompt's full blocks: constant eviction
     eng = scheduler.PagedServingEngine(params, cfg, be, sched)
     res1, _ = eng.run(reqs)
     res2, stats2 = eng.run(reqs)

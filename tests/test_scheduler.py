@@ -57,7 +57,7 @@ def test_paged_scheduler_matches_static_engine_per_request(setup):
     reqs = _requests(5, rng, plen_hi=20, budget_hi=6)  # 20 > chunk=8: multi
     sched = scheduler.SchedulerConfig(
         num_slots=2, page_size=4, num_pages=48, max_context=40,
-        prefill_chunk=8, max_burst=4)
+        prefill_chunk=8, max_burst=4, debug_conservation=True)
     eng = scheduler.PagedServingEngine(params, cfg, be, sched)
     results, stats = eng.run(reqs)
     assert stats["num_requests"] == len(reqs)
@@ -81,7 +81,7 @@ def test_scheduler_admission_backpressure_small_pool(setup):
     # usable pages fits at most ~2 in flight
     sched = scheduler.SchedulerConfig(
         num_slots=3, page_size=4, num_pages=8, max_context=16,
-        prefill_chunk=8, max_burst=4)
+        prefill_chunk=8, max_burst=4, debug_conservation=True)
     eng = scheduler.PagedServingEngine(params, cfg, be, sched)
     results, _ = eng.run(reqs)
     assert len(results) == len(reqs)
@@ -106,7 +106,7 @@ def test_scheduler_eos_evicts_and_frees_immediately(setup):
     eos = int(toks[1])
     sched = scheduler.SchedulerConfig(
         num_slots=1, page_size=4, num_pages=16, max_context=24,
-        prefill_chunk=8, max_burst=8, eos_id=eos)
+        prefill_chunk=8, max_burst=8, eos_id=eos, debug_conservation=True)
     eng = scheduler.PagedServingEngine(params, cfg, be, sched)
     results, _ = eng.run([scheduler.Request(0, prompt, max_new_tokens=8)])
     got = results[0].tokens

@@ -62,7 +62,7 @@ def _requests(n, rng, plen_hi=14, budget_hi=10):
 
 def _sched(speculate_on, **kw):
     base = dict(num_slots=2, page_size=4, num_pages=64, max_context=48,
-                prefill_chunk=8, max_burst=4)
+                prefill_chunk=8, max_burst=4, debug_conservation=True)
     base.update(kw)
     return scheduler.SchedulerConfig(
         speculate=speculate_on, **base)
