@@ -271,6 +271,11 @@ def main(argv=None) -> int:
                     help="tiny trace for CI")
     ap.add_argument("--out", type=Path, default=Path("BENCH_soak.json"))
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", type=Path, default=None,
+                    help="write the soak run's telemetry ring buffer as "
+                         "Chrome/Perfetto trace_event JSON — the "
+                         "replayable timeline that ships with BENCH_soak "
+                         "(open at https://ui.perfetto.dev)")
     args = ap.parse_args(argv)
     p = SMOKE if args.smoke else FULL
 
@@ -294,6 +299,11 @@ def main(argv=None) -> int:
                           num_slots=p["soak_slots"]), args.seed + 1)):
         eng = make_engine(params, backend, p, **kw)
         runs[name] = run_one(eng, reqs, refs, faults_seed=fs, fault_p=p)
+        if name == "soak" and args.trace_out is not None:
+            args.trace_out.write_text(
+                eng.telemetry.tracer.to_perfetto_json() + "\n")
+            print(f"wrote {args.trace_out} "
+                  f"({len(eng.telemetry.tracer.events())} trace events)")
         del eng
 
     def p99(run):

@@ -48,6 +48,8 @@ from repro.serving import backends as backends_lib
 from repro.serving import engine
 from repro.serving import pages as pages_lib
 from repro.serving import scheduler as scheduler_lib
+from repro.serving import server as server_lib
+from repro.serving import telemetry as telemetry_lib
 
 
 def main(argv=None):
@@ -142,6 +144,27 @@ def main(argv=None):
                     help="paged: skip the AOT warmup (variants then "
                          "compile lazily inside the serve, smearing "
                          "compile wall across the first requests)")
+    ap.add_argument("--serve-http", action="store_true",
+                    help="paged: serve the batch through the HTTP/SSE "
+                         "front-end (serving/server.py) instead of "
+                         "calling the engine in-process — each request "
+                         "goes over a real socket as POST /generate and "
+                         "streams its tokens back as SSE events")
+    ap.add_argument("--port", type=int, default=0,
+                    help="with --serve-http: TCP port to bind "
+                         "(0 = ephemeral; the chosen port is printed)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="paged: print the metrics registry in Prometheus "
+                         "text exposition format after the run (what "
+                         "GET /metrics serves)")
+    ap.add_argument("--trace-out", type=str, default=None,
+                    help="paged: write the telemetry ring buffer as "
+                         "Chrome/Perfetto trace_event JSON to this path "
+                         "after the run")
+    ap.add_argument("--no-telemetry", action="store_true",
+                    help="paged: disable the event tracer (metrics "
+                         "counters stay on — they are host arithmetic "
+                         "and never touch device state)")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="stop a sequence when it samples this token")
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -257,11 +280,16 @@ def _serve_paged(args, cfg, qz, backend, params, tokens, lens):
             num_pages=args.degrade_pages,
             floor_angle_bits=args.degrade_floor_bits)
             if args.degrade_pages else None),
-        max_wall_s=args.max_wall_s)
+        max_wall_s=args.max_wall_s,
+        telemetry=not args.no_telemetry)
     eng = scheduler_lib.PagedServingEngine(params, cfg, backend, sched)
     if not args.no_warmup:
         eng.warmup()
-    results, stats = eng.run(requests, rng=jax.random.PRNGKey(args.seed))
+    if args.serve_http:
+        results, stats = _serve_http(args, eng, requests)
+    else:
+        results, stats = eng.run(requests,
+                                 rng=jax.random.PRNGKey(args.seed))
     print(f"backend: {backend.name} (paged); slots={args.slots} "
           f"page_size={args.page_size} pool={num_pages - 1} pages; "
           f"decode steps: {stats['decode_steps']}")
@@ -289,6 +317,10 @@ def _serve_paged(args, cfg, qz, backend, params, tokens, lens):
           f"p99 {stats['latency_p99_s'] * 1e3:.1f} ms; prefill "
           f"{stats['prefill_tokens_computed']} tok in "
           f"{stats['prefill_chunks']} chunks")
+    # per-run latency distributions, as histogram views over the metrics
+    # registry (the same buckets GET /metrics exposes cumulatively)
+    print(telemetry_lib.format_histogram(stats["ttft_hist"], "TTFT"))
+    print(telemetry_lib.format_histogram(stats["tpot_hist"], "TPOT"))
     if "spec" in stats:
         sp = stats["spec"]
         print(f"speculative: draft_len {sp['draft_len']}; "
@@ -318,7 +350,53 @@ def _serve_paged(args, cfg, qz, backend, params, tokens, lens):
     page_kb = pages_lib.page_payload_bytes(qz, cfg, args.page_size) / 1e3
     print(f"pool-resident payload: {pool_mb:.2f} MB "
           f"({page_kb:.2f} kB/page x {stats['pages_total']} pages)")
+    if args.metrics:
+        print("--- /metrics " + "-" * 51)
+        print(eng.telemetry.registry.render_prometheus(), end="")
+    if args.trace_out:
+        with open(args.trace_out, "w") as f:
+            f.write(eng.telemetry.tracer.to_perfetto_json())
+        print(f"trace: {len(eng.telemetry.tracer.events())} events -> "
+              f"{args.trace_out} (open at https://ui.perfetto.dev)")
     return 0
+
+
+def _serve_http(args, eng, requests):
+    """Serve the request batch through the HTTP/SSE front-end: boot the
+    server on the warmed engine, submit every request as POST /generate
+    over a real socket, collect the streamed tokens, and shut down.
+    Returns (results, stats) shaped like `PagedServingEngine.run`."""
+    import concurrent.futures
+
+    fe = server_lib.HTTPFrontend(eng, port=args.port)
+    fe.start()
+    print(f"http: listening on 127.0.0.1:{fe.port} "
+          f"(POST /generate; GET /metrics /trace /healthz)")
+
+    def one(req):
+        rid, toks = None, []
+        for ev, doc in server_lib.sse_generate(fe.port, {
+                "prompt": [int(t) for t in req.tokens],
+                "max_new_tokens": req.max_new_tokens,
+                "priority": req.priority,
+                "deadline_ms": req.deadline_ms}):
+            if ev == "tokens":
+                toks.extend(doc["tokens"])
+            elif ev == "result":
+                rid = doc["rid"]
+        return rid, toks
+
+    with concurrent.futures.ThreadPoolExecutor(
+            max_workers=max(len(requests), 1)) as ex:
+        streamed = dict(ex.map(one, requests))
+    stats = fe.stop()
+    results = fe.results()
+    for res in results:
+        if streamed.get(res.rid) != [int(t) for t in res.tokens]:
+            raise AssertionError(
+                f"SSE stream for rid {res.rid} diverged from its typed "
+                f"result: {streamed.get(res.rid)} != {list(res.tokens)}")
+    return results, stats
 
 
 if __name__ == "__main__":

@@ -163,6 +163,7 @@ def generate(
     eos_id: Optional[int] = None,
     pad_id: int = 0,
     rng: Optional[jax.Array] = None,
+    telemetry=None,
 ) -> GenerationResult:
     """Generate continuations for a (possibly ragged) batch of prompts.
 
@@ -187,6 +188,9 @@ def generate(
         eos_id: stop a row once it samples this id (None: never).
         pad_id: filler written after a row's EOS in the output buffer.
         rng: sampling key (defaults to PRNGKey(0) for reproducibility).
+        telemetry: optional `serving.telemetry.Telemetry`; when given, the
+            call emits a "generate" span (batch/width/steps) and bumps
+            `generate_calls` / `generate_tokens` counters.
 
     Returns:
         GenerationResult with (B, max_new_tokens) tokens, per-row
@@ -225,6 +229,16 @@ def generate(
     fn = _build_generate(cfg, backend, sampling, int(max_new_tokens),
                          None if eos_id is None else int(eos_id),
                          int(pad_id))
+    t0 = telemetry.tracer.now() if telemetry is not None else 0.0
     tokens, num, steps, cache = fn(params, prompts, prompt_lengths, rng)
+    if telemetry is not None:
+        n_new = int(jnp.sum(num))
+        telemetry.registry.counter(
+            "generate_calls", help="static-batch generate() calls").inc()
+        telemetry.registry.counter(
+            "generate_tokens", help="tokens emitted by generate()"
+        ).inc(n_new)
+        telemetry.tracer.span("generate", t0, batch=b, width=s_max,
+                              steps=int(steps), tokens=n_new)
     return GenerationResult(tokens=tokens, num_generated=num, steps=steps,
                             cache=cache)

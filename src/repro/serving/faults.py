@@ -90,6 +90,8 @@ class FaultInjector:
         self._mid_delivered: set[int] = set()
         self._idx = 0
         self._tick = 0
+        self._tracer = None  # bound by begin() to the engine's tracer
+        self._m = None  # faults_fired{kind} counters, ditto
 
     @classmethod
     def random(cls, seed: int, n_ticks: int, *, rids=(),
@@ -124,6 +126,14 @@ class FaultInjector:
     # ------------------------------------------------------------- hooks --
     def begin(self, engine) -> None:
         self._tick = 0
+        tel = getattr(engine, "telemetry", None)
+        if tel is not None:
+            self._tracer = tel.tracer
+            self._m = {
+                k: tel.registry.counter(
+                    "faults_fired", help="injected fault events armed",
+                    kind=k)
+                for k in FAULT_KINDS}
 
     def on_tick(self, engine, tick: int) -> None:
         """Tick-boundary poll: arm due events, return expired steals,
@@ -158,6 +168,12 @@ class FaultInjector:
             elif ev.kind == "cancel" and ev.phase == "pre":
                 engine.cancel(ev.rid)
             self._fired[ev.kind] += 1
+            if self._m is not None:
+                self._m[ev.kind].inc()
+            if self._tracer is not None:
+                self._tracer.instant(
+                    "fault", kind=ev.kind, tick=tick, count=ev.count,
+                    pages=ev.pages, rid=ev.rid, phase=ev.phase)
 
     def mid_burst_cancels(self) -> list[int]:
         """rids to cancel between a burst's dispatch and its host commit

@@ -47,6 +47,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.serving import telemetry as telemetry_lib
 from repro.serving.pages import PageAllocator
 
 
@@ -71,7 +72,8 @@ class PrefixTrie:
     OWNER = "__prefix_trie__"
 
     def __init__(self, allocator: PageAllocator, page_size: int,
-                 max_pages: int):
+                 max_pages: int,
+                 telemetry: Optional[telemetry_lib.Telemetry] = None):
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         if max_pages < 0:
@@ -82,11 +84,34 @@ class PrefixTrie:
         self._roots: dict[bytes, _Node] = {}
         self._clock = 0
         self.num_nodes = 0
-        # observability: the serve CLI / benchmark report these
+        # observability: the serve CLI / benchmark report these. The trie
+        # keeps its own plain counters (they predate the registry and some
+        # tests read them directly) and mirrors every bump into the shared
+        # registry; a private disabled Telemetry keeps the code branch-free
+        # when the trie is constructed standalone.
         self.hits = 0
         self.misses = 0
         self.hit_tokens = 0
-        self.evictions = 0
+        self.evictions = 0  # total, = evictions_lru + evictions_reclaim
+        self.evictions_lru = 0  # insert-path LRU turnover
+        self.evictions_reclaim = 0  # scheduler pool-pressure reclaim
+        tel = telemetry or telemetry_lib.Telemetry(enabled=False)
+        self._tracer = tel.tracer
+        reg = tel.registry
+        self._m = {
+            "hits": reg.counter("prefix_hits",
+                                help="requests served >=1 shared block"),
+            "misses": reg.counter("prefix_misses",
+                                  help="requests served no shared blocks"),
+            "hit_tokens": reg.counter(
+                "prefix_hit_tokens",
+                help="prompt tokens mapped from shared pages"),
+            "ev_lru": reg.counter("prefix_evictions",
+                                  help="trie nodes evicted", reason="lru"),
+            "ev_reclaim": reg.counter("prefix_evictions",
+                                      help="trie nodes evicted",
+                                      reason="reclaim"),
+        }
 
     # ------------------------------------------------------------ internals --
     def _tick(self) -> int:
@@ -135,8 +160,13 @@ class PrefixTrie:
         if served_tokens:
             self.hits += 1
             self.hit_tokens += served_tokens
+            self._m["hits"].inc()
+            self._m["hit_tokens"].inc(served_tokens)
+            self._tracer.instant("prefix-hit", tokens=served_tokens)
         else:
             self.misses += 1
+            self._m["misses"].inc()
+            self._tracer.instant("prefix-miss")
 
     # ------------------------------------------------------------ insert -----
     def insert(self, tokens: np.ndarray, page_ids: np.ndarray) -> int:
@@ -183,9 +213,11 @@ class PrefixTrie:
                 else:
                     yield level, key, node
 
-    def _evict_lru(self, protect: list) -> bool:
+    def _evict_lru(self, protect: list, reason: str = "lru") -> bool:
         """Drop the least-recently-used leaf node; False when none exists
-        outside the protected path."""
+        outside the protected path. `reason` distinguishes insert-path LRU
+        turnover ("lru") from the scheduler's pool-pressure reclamation
+        ("reclaim") in stats and trace events."""
         protected = {id(n) for n in protect}
         best = None
         for level, key, node in self._leaves():
@@ -199,6 +231,13 @@ class PrefixTrie:
         del level[key]
         self.num_nodes -= 1
         self.evictions += 1
+        if reason == "reclaim":
+            self.evictions_reclaim += 1
+            self._m["ev_reclaim"].inc()
+        else:
+            self.evictions_lru += 1
+            self._m["ev_lru"].inc()
+        self._tracer.instant("prefix-evict", reason=reason, page=node.page)
         self.allocator.release_pages(self.OWNER, [node.page])
         return True
 
@@ -206,7 +245,7 @@ class PrefixTrie:
         """Drop the single least-recently-used leaf (the scheduler's
         pool-pressure reclamation hook). Returns False when the trie is
         empty."""
-        return self._evict_lru(protect=[])
+        return self._evict_lru(protect=[], reason="reclaim")
 
     def clear(self) -> int:
         """Release every cached page back toward the allocator; returns how
@@ -249,6 +288,8 @@ class PrefixTrie:
             "misses": self.misses,
             "hit_tokens": self.hit_tokens,
             "evictions": self.evictions,
+            "evictions_lru": self.evictions_lru,
+            "evictions_reclaim": self.evictions_reclaim,
         }
 
 

@@ -67,6 +67,7 @@ from repro.serving import pages as pages_lib
 from repro.serving import prefix as prefix_lib
 from repro.serving import speculate as speculate_lib
 from repro.serving import spill as spill_lib
+from repro.serving import telemetry as telemetry_lib
 from repro.serving.backends import AttentionBackend
 
 
@@ -132,6 +133,12 @@ class RequestResult(NamedTuple):
     preemptions: int = 0  # times this request was spilled out of its slot
     restore_retries: int = 0  # transient alloc failures its restores ate
     degraded: bool = False  # pages recompressed to the tier-2 schedule
+    # per-request observability (ISSUE 8): decode-phase seconds per token
+    # (excluding the prefill-sampled first token) and the lifecycle
+    # timeline — ((label, trace_seconds), ...) over arrival / admit /
+    # first_token / spill / restore / degrade / done, in event order
+    tpot_s: float = 0.0
+    timeline: tuple = ()
 
 
 #: `SchedulerConfig.prefix_cache` modes. "off" is the legacy raw-buffer
@@ -258,8 +265,22 @@ class SchedulerConfig:
     restore_backoff_s: float = 0.002
     debug_conservation: bool = False
     max_wall_s: Optional[float] = None
+    # --- observability (ISSUE 8) ----------------------------------------
+    # telemetry: gates the structured event TRACER (serving/telemetry.py).
+    #           Metrics (counters/gauges/histograms) stay on either way —
+    #           they are the same host-side arithmetic the stats dicts
+    #           always did and never touch device state or rng, so a
+    #           telemetry-off run is bitwise-identical by construction
+    #           (pinned in tests/test_telemetry.py).
+    # trace_capacity: ring-buffer bound on recorded trace events (oldest
+    #           fall off first), keeping soak-length traces memory-safe.
+    telemetry: bool = True
+    trace_capacity: int = 4096
 
     def __post_init__(self):
+        if self.trace_capacity < 16:
+            raise ValueError(
+                f"trace_capacity must be >= 16, got {self.trace_capacity}")
         if self.prefill_chunk % self.page_size:
             raise ValueError(
                 f"prefill_chunk ({self.prefill_chunk}) must be a multiple "
@@ -329,8 +350,10 @@ class SchedulerWatchdogError(RuntimeError):
     `diagnostic` is the dump the satellite asks for: tick, wall seconds,
     every live slot (rid / priority / length / tokens generated /
     remaining budget), pool occupancy for both tiers, pending and spilled
-    rids, and the last device dispatch key — enough to see WHERE a trace
-    hung without re-running it under a debugger."""
+    rids, the last device dispatch key, AND `trace_tail` — the last N
+    structured trace events from the telemetry ring buffer, so a watchdog
+    fire ships its own flight recorder: WHAT the scheduler was doing
+    leading up to the hang, not just a state snapshot."""
 
     def __init__(self, msg: str, diagnostic: dict):
         super().__init__(f"{msg}\ndiagnostic: {diagnostic}")
@@ -356,6 +379,9 @@ class _Slot:
         self.preemptions = 0
         self.restore_retries = 0
         self.degraded = False
+        # lifecycle timeline (trace-relative seconds) -> RequestResult
+        self.marks = [("arrival", req.arrival), ("admit", t_admit),
+                      ("first_token", t_first)]
 
     @classmethod
     def from_spilled(cls, sp: "spill_lib.SpilledRequest") -> "_Slot":
@@ -366,6 +392,7 @@ class _Slot:
         st.generated = sp.generated
         st.t_admit = sp.t_admit
         st.t_first = sp.t_first
+        st.marks = sp.marks
         st.draft_proposed = sp.draft_proposed
         st.draft_accepted = sp.draft_accepted
         st.verify_steps = sp.verify_steps
@@ -395,7 +422,8 @@ class PagedServingEngine:
     """
 
     def __init__(self, params, cfg: ModelConfig,
-                 backend: AttentionBackend, sched: SchedulerConfig):
+                 backend: AttentionBackend, sched: SchedulerConfig,
+                 telemetry: Optional[telemetry_lib.Telemetry] = None):
         if cfg.family != "decoder":
             raise ValueError(
                 f"paged serving is defined for family 'decoder', not "
@@ -423,10 +451,24 @@ class PagedServingEngine:
         self.active = np.zeros((s,), bool)
         self.next_tok = np.zeros((s,), np.int32)
         self.slots: list[Optional[_Slot]] = [None] * s
+        # --- telemetry spine (ISSUE 8, serving/telemetry.py): the metrics
+        # registry is ALWAYS live (host-side arithmetic only — the
+        # stats[...] blocks run() returns are per-run delta views over it,
+        # one source of truth); the tracer ring is gated by
+        # sched.telemetry. Streaming consumers (serving/server.py) hook
+        # `on_tokens(rid, [ids])` / `on_result(RequestResult)`.
+        self.telemetry = telemetry or telemetry_lib.Telemetry(
+            enabled=sched.telemetry, trace_capacity=sched.trace_capacity)
+        self._tracer = self.telemetry.tracer
+        self._m = self._build_metrics(self.telemetry.registry)
+        self.on_tokens = None
+        self.on_result = None
+        self._tick = 0
         self.trie: Optional[prefix_lib.PrefixTrie] = None
         if sched.prefix_cache == "share":
             self.trie = prefix_lib.PrefixTrie(
-                self.allocator, sched.page_size, sched.prefix_pages)
+                self.allocator, sched.page_size, sched.prefix_pages,
+                telemetry=self.telemetry)
         # --- tier-2 (degraded-precision) pool: a second, genuinely
         # smaller pool built for a lower-bit schedule (narrower packed
         # words), its own allocator and page table; `tier2[i]` marks a
@@ -465,7 +507,6 @@ class PagedServingEngine:
         self._cancel_req: set[int] = set()
         self._last_dispatch_key: Optional[tuple] = None
         self._faults = None  # FaultInjector of the current run (or None)
-        self._slo: dict = {}
         # device-resident token streams for on-device drafting: slot i's
         # prompt + every emitted token (ending with the pending token),
         # shipped to the spec-burst dispatch and read back only at burst
@@ -489,6 +530,104 @@ class PagedServingEngine:
         self._perf = dict(jit_variants_compiled=0, compile_wall_s=0.0,
                           warmup_wall_s=0.0, host_sync_count=0,
                           post_warmup_variants=0)
+
+    # ------------------------------------------------------------ telemetry --
+    def _build_metrics(self, reg: telemetry_lib.MetricsRegistry) -> dict:
+        """Resolve every scheduler metric handle once (get-or-create), so
+        instrumentation sites are plain attribute arithmetic. Names are
+        the contract docs/observability.md pins; the stats[...] blocks
+        run() returns are per-run deltas over exactly these metrics."""
+        c, g, h = reg.counter, reg.gauge, reg.histogram
+        m = {
+            # pressure ladder / SLO (stats["slo"] views)
+            "shed": c("sched_shed", "requests shed past their admission "
+                      "deadline"),
+            "cancelled": c("sched_cancelled", "requests cancelled (any "
+                           "state: queued, spilled, or live)"),
+            "spills": c("sched_spills", "live slots preempted by spilling "
+                        "their pages to host memory"),
+            "spill_bytes": c("sched_spill_bytes", "packed page bytes "
+                             "copied device->host by spills"),
+            "restores": c("sched_restores", "spilled requests resumed "
+                          "into a slot"),
+            "restore_retries": c("sched_restore_retries", "transient "
+                                 "alloc failures eaten by restores"),
+            "restore_delays": c("sched_restore_delays", "restores that "
+                                "served an injected upload delay"),
+            "degraded": c("sched_degraded", "live slots recompressed "
+                          "into the tier-2 (lower-bit) pool"),
+            # work counters (top-level stats views)
+            "prefill_chunks": c("prefill_chunks", "chunked-prefill device "
+                                "chunks computed (pow-2 padding included)"),
+            "prefill_tokens": c("prefill_tokens", "prefill tokens "
+                                "computed (pow-2 padding included)"),
+            "prefill_wall_s": c("prefill_wall_s", "seconds spent in "
+                                "admission prefill dispatches"),
+            "decode_steps": c("decode_steps", "sequential decode/verify "
+                              "steps the device executed"),
+            "new_tokens": c("new_tokens", "generated tokens delivered in "
+                            "RequestResults"),
+            "host_syncs": c("host_syncs", "device->host readbacks on the "
+                            "serving hot path"),
+            # speculative decoding (stats["spec"] views)
+            "draft_proposed": c("spec_draft_proposed", "draft tokens fed "
+                                "to verify steps"),
+            "draft_accepted": c("spec_draft_accepted", "draft tokens the "
+                                "model confirmed"),
+            "verify_steps": c("spec_verify_steps", "sequential verify "
+                              "forward passes"),
+            # request outcomes
+            "fin_completed": c("requests_finished", "requests retired, by "
+                               "terminal status", status="completed"),
+            "fin_shed": c("requests_finished", "requests retired, by "
+                          "terminal status", status="shed"),
+            "fin_cancelled": c("requests_finished", "requests retired, by "
+                               "terminal status", status="cancelled"),
+            # latency distributions (completed requests only, seconds)
+            "ttft": h("ttft_seconds", "arrival -> first token"),
+            "tpot": h("tpot_seconds", "decode seconds per token after "
+                      "the first"),
+            "latency": h("request_latency_seconds", "arrival -> last "
+                         "token"),
+            # point-in-time occupancy (refreshed every scheduler tick)
+            "pool_free": g("pool_free_pages", "free physical pages",
+                           tier="1"),
+            "pool_live": g("pool_live_pages", "referenced physical pages",
+                           tier="1"),
+            "slots_active": g("slots_active", "live decode slots"),
+            "pending": g("requests_pending", "arrived requests waiting "
+                         "for admission"),
+            "spilled": g("requests_spilled", "preempted requests parked "
+                         "in host memory"),
+            "spec_rate": g("spec_acceptance_rate", "lifetime draft "
+                           "acceptance rate"),
+            "variants": g("jit_variants_compiled", "distinct jit variant "
+                          "keys dispatched"),
+            "post_warmup": g("post_warmup_variants", "variant keys first "
+                             "seen after warmup (CI pins 0)"),
+        }
+        if self.sched.degrade is not None:
+            m["pool_free2"] = g("pool_free_pages", "free physical pages",
+                                tier="2")
+            m["pool_live2"] = g("pool_live_pages",
+                                "referenced physical pages", tier="2")
+        return m
+
+    def _refresh_gauges(self, n_pending: int) -> None:
+        m = self._m
+        m["pool_free"].set(self.allocator.num_free)
+        m["pool_live"].set(self.allocator.num_live)
+        if self.allocator2 is not None:
+            m["pool_free2"].set(self.allocator2.num_free)
+            m["pool_live2"].set(self.allocator2.num_live)
+        m["slots_active"].set(int(self.active.sum()))
+        m["pending"].set(n_pending)
+        m["spilled"].set(len(self._spilled))
+        m["variants"].set(self._perf["jit_variants_compiled"])
+        m["post_warmup"].set(self._perf["post_warmup_variants"])
+        prop = m["draft_proposed"].value
+        if prop:
+            m["spec_rate"].set(m["draft_accepted"].value / prop)
 
     # ------------------------------------------------------------ builders --
     def _build_decode(self):
@@ -862,6 +1001,7 @@ class PagedServingEngine:
         s = self.sched.num_slots
         ps = self.sched.page_size
         q_len = self.sched.draft_len + 1
+        t_span = self._tracer.now()
         fed = np.zeros((s, q_len), np.int32)
         n_fed = np.ones((s,), np.int32)
         for i in range(s):
@@ -872,13 +1012,15 @@ class PagedServingEngine:
                                   np.asarray(st.generated, np.int32)])
             draft = speculate_lib.propose_draft(
                 ctx, min(self.sched.draft_len, int(remaining[i]) - 1),
-                self.sched.draft_max_ngram)
+                self.sched.draft_max_ngram, tracer=self._tracer)
             m = 1 + len(draft)
             fed[i, 0] = self.next_tok[i]
             fed[i, 1:m] = draft
             n_fed[i] = m
             st.draft_proposed += m - 1
             st.verify_steps += 1
+            self._m["draft_proposed"].inc(m - 1)
+            self._m["verify_steps"].inc()
         # jit-variant discipline (see kernels/qattn: verify_rows): the
         # dispatch shape is the STATIC q_len — acceptance counts and short
         # drafts ride in n_fed — and the page table is sliced to the same
@@ -898,6 +1040,7 @@ class PagedServingEngine:
         targets = np.asarray(targets)
         emit = np.asarray(emit)
         self._perf["host_sync_count"] += 1
+        self._m["host_syncs"].inc()
         t_now = time.perf_counter() - self._t0
         # mid-verify cancellation window: cancels injected between the
         # verify dispatch and this host commit land HERE — the cancelled
@@ -914,6 +1057,10 @@ class PagedServingEngine:
             st.generated.extend(int(t) for t in targets[i, :e])
             st.draft_accepted += e - 1
             st.host_syncs += 1
+            self._m["draft_accepted"].inc(e - 1)
+            if self.on_tokens is not None:
+                self.on_tokens(st.req.rid,
+                               [int(t) for t in targets[i, :e]])
             cl = int(self.ctx_len[i])
             self.ctx_buf[i, cl:cl + e] = targets[i, :e]
             self.ctx_len[i] = cl + e
@@ -937,6 +1084,9 @@ class PagedServingEngine:
                 self._evict(i, results, t_now)
             elif cancelled:
                 self._evict(i, results, t_now, status="cancelled")
+        self._tracer.span(
+            "spec-round", t_span, tick=self._tick, rounds=1,
+            proposed=int(n_fed.sum() - s), accepted=int(emit.sum()))
 
     def _spec_burst(self, remaining: np.ndarray, results: list,
                     queued: bool = False) -> int:
@@ -953,6 +1103,7 @@ class PagedServingEngine:
         """
         s = self.sched.num_slots
         q_len = self.sched.draft_len + 1
+        t_span = self._tracer.now()
         rem_act = remaining[self.active]
         rem_max = int(rem_act.max())
         mp = self._live_table_width(rem_max + q_len)
@@ -984,6 +1135,7 @@ class PagedServingEngine:
         n_prop, n_acc, n_steps = (np.asarray(a) for a in
                                   (n_prop, n_acc, n_steps))
         self._perf["host_sync_count"] += 1
+        self._m["host_syncs"].inc()
         t_now = time.perf_counter() - self._t0
         for i in range(s):
             if not self.active[i] or emitted[i] == 0:
@@ -996,6 +1148,11 @@ class PagedServingEngine:
             st.draft_accepted += int(n_acc[i])
             st.verify_steps += int(n_steps[i])
             st.host_syncs += 1
+            self._m["draft_proposed"].inc(int(n_prop[i]))
+            self._m["draft_accepted"].inc(int(n_acc[i]))
+            self._m["verify_steps"].inc(int(n_steps[i]))
+            if self.on_tokens is not None:
+                self.on_tokens(st.req.rid, [int(t) for t in toks])
             self.next_tok[i] = int(toks[-1])
             self.lengths[i] += n
             cl = int(self.ctx_len[i])
@@ -1015,7 +1172,12 @@ class PagedServingEngine:
                 if (self.active[i]
                         and self.slots[i].req.rid in self._cancel_req):
                     self._evict(i, results, t_now, status="cancelled")
-        return int(n_steps.max(initial=0))
+        rounds = int(n_steps.max(initial=0))
+        self._tracer.span(
+            "spec-round", t_span, tick=self._tick, rounds=rounds,
+            width=mp, proposed=int(n_prop.sum()),
+            accepted=int(n_acc.sum()), emitted=int(emitted.sum()))
+        return rounds
 
     def _prefill_fn(self, width: int, skip: int):
         """Chunked prefill for a `width`-token suffix after a `skip`-token
@@ -1252,6 +1414,7 @@ class PagedServingEngine:
         groups = np.zeros((n_chunks, pages_per_chunk), np.int32)
         groups[:n_real] = fresh_ids[:n_real * pages_per_chunk].reshape(
             n_real, pages_per_chunk)
+        t_pfc = self._tracer.now()
         if skip:
             pfx_k, pfx_v = self._dispatch(
                 ("prefix_load", skip // ps),
@@ -1268,10 +1431,14 @@ class PagedServingEngine:
             jnp.asarray(last_off, jnp.int32), pfx_k, pfx_v, rng,
             self.pool.k, self.pool.v)
         self.pool = self.pool._replace(k=pk, v=pv)
-        self._prefill_chunks += n_chunks
-        self._prefill_tokens += width
+        self._m["prefill_chunks"].inc(n_chunks)
+        self._m["prefill_tokens"].inc(width)
         self._perf["host_sync_count"] += 1  # first-token readback
+        self._m["host_syncs"].inc()
         first = int(tok[0])
+        self._tracer.span(
+            "prefill-chunk", t_pfc, tid=slot + 1, rid=req.rid,
+            tick=self._tick, chunks=n_chunks, width=width, skip=skip)
         page_ids = np.concatenate([shared_ids, fresh_ids]).astype(np.int32)
         row = np.zeros((self.sched.max_pages,), np.int32)
         row[:len(page_ids)] = page_ids
@@ -1287,6 +1454,8 @@ class PagedServingEngine:
         self.ctx_len[slot] = plen + 1
         self.slots[slot] = _Slot(req, first, t_admit,
                                  time.perf_counter() - self._t0)
+        if self.on_tokens is not None:
+            self.on_tokens(req.rid, [first])
         if self.trie is not None:
             # register every full prompt block (idempotent along the hit
             # path; the trie takes its own page refs, LRU-bounded)
@@ -1313,14 +1482,28 @@ class PagedServingEngine:
         self.ctx_len[slot] = 0
         self.slots[slot] = None
         self._cancel_req.discard(st.req.rid)
-        if status == "cancelled" and self._slo:
-            self._slo["cancelled"] += 1
+        if status == "cancelled":
+            self._m["cancelled"].inc()
+            self._tracer.instant("cancel", tid=slot + 1, rid=st.req.rid,
+                                 tick=self._tick,
+                                 generated=len(st.generated))
+        ttft = st.t_first - st.req.arrival
+        latency = t_now - st.req.arrival
+        tpot = (latency - ttft) / max(len(st.generated) - 1, 1)
+        self._m["fin_" + status].inc()
+        self._m["new_tokens"].inc(len(st.generated))
+        if status == "completed":
+            # the latency distributions the stats percentiles summarize —
+            # completed requests only, matching those percentiles
+            self._m["ttft"].observe(ttft)
+            self._m["tpot"].observe(tpot)
+            self._m["latency"].observe(latency)
         results.append(RequestResult(
             rid=st.req.rid,
             tokens=np.asarray(st.generated, np.int32),
             prompt_len=len(st.req.tokens),
-            ttft_s=st.t_first - st.req.arrival,
-            latency_s=t_now - st.req.arrival,
+            ttft_s=ttft,
+            latency_s=latency,
             admitted_s=st.t_admit - st.req.arrival,
             draft_proposed=st.draft_proposed,
             draft_accepted=st.draft_accepted,
@@ -1331,7 +1514,11 @@ class PagedServingEngine:
             preemptions=st.preemptions,
             restore_retries=st.restore_retries,
             degraded=st.degraded,
+            tpot_s=tpot,
+            timeline=tuple(st.marks) + (("done", t_now),),
         ))
+        if self.on_result is not None:
+            self.on_result(results[-1])
 
     def _finished(self, st: _Slot) -> bool:
         if (self.sched.eos_id is not None
@@ -1359,13 +1546,17 @@ class PagedServingEngine:
         """Typed result for a request retired OUTSIDE a slot: shed from
         the queue, or cancelled while queued/spilled. `sp` carries a
         spilled request's partial progress into the result."""
+        self._tracer.instant("cancel" if status == "cancelled" else status,
+                             rid=req.rid, tick=self._tick, queued=sp is None)
         if sp is not None:
+            ttft = sp.t_first - req.arrival
+            latency = now - req.arrival
             results.append(RequestResult(
                 rid=req.rid,
                 tokens=np.asarray(sp.generated, np.int32),
                 prompt_len=len(req.tokens),
-                ttft_s=sp.t_first - req.arrival,
-                latency_s=now - req.arrival,
+                ttft_s=ttft,
+                latency_s=latency,
                 admitted_s=sp.t_admit - req.arrival,
                 draft_proposed=sp.draft_proposed,
                 draft_accepted=sp.draft_accepted,
@@ -1374,7 +1565,10 @@ class PagedServingEngine:
                 status=status, priority=sp.priority,
                 preemptions=sp.preemptions,
                 restore_retries=sp.restore_retries,
-                degraded=sp.degraded))
+                degraded=sp.degraded,
+                tpot_s=(latency - ttft) / max(len(sp.generated) - 1, 1),
+                timeline=tuple(sp.marks) + (("done", now),)))
+            self._m["new_tokens"].inc(len(sp.generated))
         else:
             results.append(RequestResult(
                 rid=req.rid,
@@ -1383,7 +1577,11 @@ class PagedServingEngine:
                 ttft_s=0.0,
                 latency_s=now - req.arrival,
                 admitted_s=now - req.arrival,
-                status=status, priority=req.priority))
+                status=status, priority=req.priority,
+                timeline=(("arrival", req.arrival), ("done", now))))
+        self._m["fin_" + status].inc()
+        if self.on_result is not None:
+            self.on_result(results[-1])
 
     def _process_cancels(self, pending: list, results: list,
                          now: float) -> None:
@@ -1401,14 +1599,14 @@ class PagedServingEngine:
                 sp = self._spilled.pop(rid)
                 self._emit_unserved(sp.req, results, now, "cancelled",
                                     sp=sp)
-                self._slo["cancelled"] += 1
+                self._m["cancelled"].inc()
                 self._cancel_req.discard(rid)
                 continue
             hit = next((r for r in pending if r.rid == rid), None)
             if hit is not None:
                 pending.remove(hit)
                 self._emit_unserved(hit, results, now, "cancelled")
-                self._slo["cancelled"] += 1
+                self._m["cancelled"].inc()
             self._cancel_req.discard(rid)
 
     def _shed_expired(self, pending: list, results: list,
@@ -1424,7 +1622,7 @@ class PagedServingEngine:
             if now > r.arrival + r.deadline_ms / 1e3:
                 pending.remove(r)
                 self._emit_unserved(r, results, now, "shed")
-                self._slo["shed"] += 1
+                self._m["shed"].inc()
 
     def _check_conservation(self) -> None:
         self.allocator.check_conservation()
@@ -1439,6 +1637,12 @@ class PagedServingEngine:
         wall = time.perf_counter() - self._t0
         if wall <= self.sched.max_wall_s:
             return
+        # emit the fire itself FIRST so the flight-recorder tail below is
+        # never empty, even when the watchdog trips on the very first tick
+        self._tracer.instant(
+            "watchdog", tick=tick, wall_s=round(wall, 3),
+            max_wall_s=self.sched.max_wall_s,
+            last_dispatch_key=self._last_dispatch_key)
         live = [
             {"slot": i, "rid": self.slots[i].req.rid,
              "priority": self.slots[i].priority,
@@ -1461,6 +1665,9 @@ class PagedServingEngine:
             "pending_rids": [r.rid for r in pending],
             "spilled_rids": sorted(self._spilled),
             "last_dispatch_key": self._last_dispatch_key,
+            # the flight recorder: the last N structured trace events
+            # leading up to the fire ([] only when tracing is disabled)
+            "trace_tail": self._tracer.tail(64),
         }
         raise SchedulerWatchdogError(
             f"trace exceeded max_wall_s={self.sched.max_wall_s}", diag)
@@ -1472,6 +1679,7 @@ class PagedServingEngine:
         until `_try_restore` resumes it bit-for-bit."""
         st = self.slots[slot]
         rid = st.req.rid
+        t_span = self._tracer.now()
         tier2 = bool(self.tier2[slot]) if len(self.tier2) else False
         alloc = self.allocator2 if tier2 else self.allocator
         pool = self.pool2 if tier2 else self.pool
@@ -1479,8 +1687,10 @@ class PagedServingEngine:
         n_total = int(np.count_nonzero(row))
         n_data = pages_lib.pages_for_tokens(int(self.lengths[slot]),
                                             self.sched.page_size)
-        payload = spill_lib.spill_pages(pool, row[:n_data])
+        payload = spill_lib.spill_pages(pool, row[:n_data],
+                                        tracer=self._tracer)
         alloc.free(rid)
+        st.marks.append(("spill", time.perf_counter() - self._t0))
         sp = spill_lib.SpilledRequest(
             req=st.req, priority=st.priority, generated=st.generated,
             next_tok=int(self.next_tok[slot]),
@@ -1493,7 +1703,8 @@ class PagedServingEngine:
             verify_steps=st.verify_steps, host_syncs=st.host_syncs,
             preemptions=st.preemptions + 1,
             spill_count=st.preemptions + 1,
-            restore_retries=st.restore_retries, degraded=st.degraded)
+            restore_retries=st.restore_retries, degraded=st.degraded,
+            marks=st.marks)
         self.page_table[slot] = 0
         if self.allocator2 is not None:
             self.page_table2[slot] = 0
@@ -1505,8 +1716,11 @@ class PagedServingEngine:
         self.ctx_len[slot] = 0
         self.slots[slot] = None
         self._spilled[rid] = sp
-        self._slo["spills"] += 1
-        self._slo["spill_bytes"] += payload.nbytes()
+        self._m["spills"].inc()
+        self._m["spill_bytes"].inc(payload.nbytes())
+        self._tracer.span(
+            "spill", t_span, tid=slot + 1, rid=rid, tick=self._tick,
+            pages=n_total, bytes=payload.nbytes(), tier2=tier2)
 
     def _try_restore(self, sp: "spill_lib.SpilledRequest",
                      now: float) -> str:
@@ -1524,15 +1738,16 @@ class PagedServingEngine:
             return "no_slot"
         alloc = self.allocator2 if sp.tier2 else self.allocator
         faults = self._faults
+        t_span = self._tracer.now()
         delay = faults.take_restore_delay() if faults is not None else 0.0
         if delay > 0:
             time.sleep(delay)
-            self._slo["restore_delays"] += 1
+            self._m["restore_delays"].inc()
         backoff = self.sched.restore_backoff_s
         for attempt in range(self.sched.restore_max_retries):
             if faults is not None and faults.take_alloc_fail():
                 sp.restore_retries += 1
-                self._slo["restore_retries"] += 1
+                self._m["restore_retries"].inc()
                 if backoff > 0:
                     time.sleep(backoff * (2 ** attempt))
                 continue
@@ -1544,7 +1759,7 @@ class PagedServingEngine:
                 # off — the alloc/release conservation path under failure
                 alloc.release(sp.req.rid)
                 sp.restore_retries += 1
-                self._slo["restore_retries"] += 1
+                self._m["restore_retries"].inc()
                 if backoff > 0:
                     time.sleep(backoff * (2 ** attempt))
                 continue
@@ -1552,10 +1767,12 @@ class PagedServingEngine:
                                                 self.sched.page_size)
             if sp.tier2:
                 self.pool2 = spill_lib.restore_pages(
-                    self.pool2, sp.payload, ids[:n_data])
+                    self.pool2, sp.payload, ids[:n_data],
+                    tracer=self._tracer)
             else:
                 self.pool = spill_lib.restore_pages(
-                    self.pool, sp.payload, ids[:n_data])
+                    self.pool, sp.payload, ids[:n_data],
+                    tracer=self._tracer)
             slot = free[0]
             row = np.zeros((self.sched.max_pages,), np.int32)
             row[:sp.n_pages] = ids
@@ -1573,9 +1790,15 @@ class PagedServingEngine:
             self.ctx_buf[slot] = 0
             self.ctx_buf[slot, :len(sp.ctx)] = sp.ctx
             self.ctx_len[slot] = len(sp.ctx)
+            sp.marks.append(("restore", time.perf_counter() - self._t0))
             self.slots[slot] = _Slot.from_spilled(sp)
             del self._spilled[sp.req.rid]
-            self._slo["restores"] += 1
+            self._m["restores"].inc()
+            self._tracer.span(
+                "restore", t_span, tid=slot + 1, rid=sp.req.rid,
+                tick=self._tick, pages=sp.n_pages,
+                bytes=sp.payload.nbytes(), retries=sp.restore_retries,
+                tier2=sp.tier2)
             return "ok"
         # per-tick retry budget exhausted: re-queue with backoff so the
         # loop never blocks on one unlucky restore
@@ -1596,6 +1819,7 @@ class PagedServingEngine:
             return False
         if self._faults is not None and self._faults.take_alloc_fail():
             return False
+        t_span = self._tracer.now()
         n_data = pages_lib.pages_for_tokens(int(self.lengths[slot]),
                                             self.sched.page_size)
         ids2 = self.allocator2.alloc(n_total, rid)
@@ -1610,7 +1834,11 @@ class PagedServingEngine:
         self.page_table2[slot] = row2
         self.tier2[slot] = True
         st.degraded = True
-        self._slo["degraded"] += 1
+        st.marks.append(("degrade", time.perf_counter() - self._t0))
+        self._m["degraded"].inc()
+        self._tracer.span(
+            "degrade", t_span, tid=slot + 1, rid=rid, tick=self._tick,
+            pages=n_total)
         return True
 
     def _pick_victim(self, priority: int,
@@ -1699,8 +1927,13 @@ class PagedServingEngine:
         rng, sub = jax.random.split(rng)
         slot = free_slots[0]
         t_pf = time.perf_counter()
+        t_span = self._tracer.now()
         self._admit(req, slot, shared, fresh, skip, sub, now)
-        self._prefill_wall += time.perf_counter() - t_pf
+        self._m["prefill_wall_s"].inc(time.perf_counter() - t_pf)
+        self._tracer.span(
+            "admit", t_span, tid=slot + 1, rid=req.rid, tick=self._tick,
+            prompt_len=len(req.tokens), pages=need,
+            shared_pages=len(shared), skip=skip, priority=req.priority)
         st = self.slots[slot]
         if self._finished(st):  # budget 1 or instant EOS
             self._evict(slot, results, time.perf_counter() - self._t0)
@@ -1757,9 +1990,31 @@ class PagedServingEngine:
                 return rng
 
     # ------------------------------------------------------------ main loop --
+    def validate_request(self, r: Request) -> None:
+        """Reject a request whose worst-case span cannot fit the pool or
+        the page table — checked up-front (and per intake arrival) so
+        admission can never OOM mid-flight. The HTTP front-end
+        (serving/server.py) runs the same check at submit time to turn
+        the ValueError into a 400 instead of killing the serve loop."""
+        width, need = self._pages_needed(r)
+        if need > self.sched.num_pages - 1:
+            raise ValueError(
+                f"request {r.rid} needs {need} pages; pool only has "
+                f"{self.sched.num_pages - 1}")
+        if need > self.sched.max_pages:
+            # the chunk-bucketed prefill width also bounds the span:
+            # a prompt bucketed past max_context would overflow the
+            # page-table row even if plen + max_new fits
+            raise ValueError(
+                f"request {r.rid} span (bucketed prompt {width} + "
+                f"generation, {need} pages) exceeds max_context "
+                f"{self.sched.max_context} ({self.sched.max_pages} "
+                f"pages)")
+
     def run(self, requests: list[Request],
             rng: Optional[jax.Array] = None,
-            faults=None) -> tuple[list[RequestResult], dict]:
+            faults=None, *, intake=None,
+            stop=None) -> tuple[list[RequestResult], dict]:
         """Serve a request trace to completion.
 
         Requests are admitted FCFS as their `arrival` times pass and a
@@ -1795,43 +2050,67 @@ class PagedServingEngine:
         The engine is reusable: a second `run` on the same instance keeps
         compiled executables and (in "share" mode) the populated prefix
         trie, which is how repeated traces get warm-prefix service.
+
+        Streaming mode (serving/server.py): `intake` is an optional
+        zero-arg callable returning newly-submitted Requests, drained at
+        every tick boundary — each drained request is re-stamped with
+        `arrival = now` (trace-relative), so queueing delay is measured
+        from when the scheduler saw it. `stop` is an optional zero-arg
+        predicate: while it returns False the loop keeps running (idling
+        cheaply when empty) even with nothing queued; once True, the loop
+        drains in-flight work and returns. Both default to None, which is
+        exactly the legacy batch behavior.
+
+        The returned `stats[...]` blocks are per-run DELTA VIEWS over the
+        engine's metrics registry (`self.telemetry.registry`, one source
+        of truth — what `GET /metrics` exposes cumulatively), plus
+        `ttft_hist` / `tpot_hist` / `latency_hist` histogram views.
         """
         if rng is None:
             rng = jax.random.PRNGKey(0)
         for r in requests:
-            width, need = self._pages_needed(r)
-            if need > self.sched.num_pages - 1:
-                raise ValueError(
-                    f"request {r.rid} needs {need} pages; pool only has "
-                    f"{self.sched.num_pages - 1}")
-            if need > self.sched.max_pages:
-                # the chunk-bucketed prefill width also bounds the span:
-                # a prompt bucketed past max_context would overflow the
-                # page-table row even if plen + max_new fits
-                raise ValueError(
-                    f"request {r.rid} span (bucketed prompt {width} + "
-                    f"generation, {need} pages) exceeds max_context "
-                    f"{self.sched.max_context} ({self.sched.max_pages} "
-                    f"pages)")
+            self.validate_request(r)
         pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
         results: list[RequestResult] = []
         self._t0 = time.perf_counter()
-        self._prefill_chunks = 0
-        self._prefill_tokens = 0
-        self._prefill_wall = 0.0
         self._faults = faults
-        self._slo = dict(shed=0, cancelled=0, spills=0, spill_bytes=0,
-                         restores=0, restore_retries=0, restore_delays=0,
-                         degraded=0)
+        # stats are built from the per-run registry delta at the end —
+        # the registry itself stays cumulative across runs (Prometheus
+        # counter semantics; the engine is reusable)
+        snap0 = self.telemetry.registry.snapshot()
+        self._tracer.reset_epoch()
+        self._tracer.instant("run-start", n_requests=len(requests),
+                             streaming=intake is not None)
         trie0 = self.trie.stats() if self.trie is not None else None
-        steps = 0
         tick = -1
         if faults is not None:
             faults.begin(self)
-        while pending or self._spilled or self.active.any():
+        while (pending or self._spilled or self.active.any()
+               or (stop is not None and not stop())):
             tick += 1
+            self._tick = tick
             now = time.perf_counter() - self._t0
+            if intake is not None:
+                fresh = intake()
+                if fresh:
+                    for r in fresh:
+                        try:
+                            self.validate_request(r)
+                        except ValueError:
+                            # an unservable mid-flight submission must
+                            # not kill the serve loop: retire it typed
+                            # (the front-end 400s these before intake,
+                            # so this is defense in depth)
+                            self._emit_unserved(r, results, now, "shed")
+                            self._m["shed"].inc()
+                            continue
+                        # stamp arrival trace-relative: queueing delay
+                        # runs from the tick the scheduler saw it
+                        pending.append(
+                            dataclasses.replace(r, arrival=now))
+                    pending.sort(key=lambda r: (r.arrival, r.rid))
             self._watchdog(tick, pending)
+            self._refresh_gauges(len(pending))
             if faults is not None:
                 faults.on_tick(self, tick)
             if self._cancel_req:
@@ -1859,6 +2138,10 @@ class PagedServingEngine:
                     # every live request is spilled and restores are
                     # backing off — yield briefly, then retry
                     time.sleep(0.001)
+                elif stop is not None:
+                    # streaming server, nothing to do: idle cheaply
+                    # until the next intake or the stop signal
+                    time.sleep(0.002)
                 continue
             remaining = np.ones((self.sched.num_slots,), np.int32)
             for i in range(self.sched.num_slots):
@@ -1870,13 +2153,13 @@ class PagedServingEngine:
                 if self.sched.spec_device:
                     # --- fused burst: up to max_burst draft->verify->
                     # accept rounds, ONE dispatch, one host sync
-                    steps += self._spec_burst(
+                    self._m["decode_steps"].inc(self._spec_burst(
                         remaining, results,
-                        queued=bool(pending or self._spilled))
+                        queued=bool(pending or self._spilled)))
                 else:
                     # --- host-driven oracle: one round per dispatch
                     self._spec_step(remaining, results)
-                    steps += 1
+                    self._m["decode_steps"].inc()
                 if self.sched.debug_conservation:
                     self._check_conservation()
                 continue
@@ -1885,6 +2168,7 @@ class PagedServingEngine:
                         remaining[self.active].min()))
             mp = self._live_table_width(k)
             owned = self._owned_write_mask(k)
+            t_burst = self._tracer.now()
             rng, sub = jax.random.split(rng)
             if self.backend2 is not None:
                 # tiered dispatch: both pools ride the burst; a slot's
@@ -1916,7 +2200,8 @@ class PagedServingEngine:
             emitted = np.asarray(emitted)
             out = np.asarray(out)
             self._perf["host_sync_count"] += 1
-            steps += int(emitted.max(initial=0))
+            self._m["host_syncs"].inc()
+            self._m["decode_steps"].inc(int(emitted.max(initial=0)))
             t_now = time.perf_counter() - self._t0
             for i in range(self.sched.num_slots):
                 if not self.active[i] or emitted[i] == 0:
@@ -1926,11 +2211,17 @@ class PagedServingEngine:
                 self.next_tok[i] = out[i, n - 1]
                 self.slots[i].generated.extend(int(t) for t in out[i, :n])
                 self.slots[i].host_syncs += 1
+                if self.on_tokens is not None:
+                    self.on_tokens(self.slots[i].req.rid,
+                                   [int(t) for t in out[i, :n]])
                 cl = int(self.ctx_len[i])
                 self.ctx_buf[i, cl:cl + n] = out[i, :n]
                 self.ctx_len[i] = cl + n
                 if self._finished(self.slots[i]):
                     self._evict(i, results, t_now)
+            self._tracer.span(
+                "decode-burst", t_burst, tick=tick, k=k, width=mp,
+                emitted=int(emitted.sum()))
             # mid-burst cancellation window (plain decode): cancels
             # injected while the burst ran land here, same tick
             if faults is not None:
@@ -1948,15 +2239,20 @@ class PagedServingEngine:
             faults.finish(self)  # return stolen pages before the audit
         self._faults = None
         self._check_conservation()
+        self._refresh_gauges(0)
+        self._tracer.instant("run-end", n_results=len(results), wall_s=wall)
         results.sort(key=lambda r: r.rid)
         completed = [r for r in results if r.status == "completed"]
         total_new = int(sum(len(r.tokens) for r in results))
         lat = np.asarray([r.latency_s for r in completed] or [0.0])
         ttft = np.asarray([r.ttft_s for r in completed] or [0.0])
-        prefill_wall = self._prefill_wall
+        # stats are per-run views over the registry: the registry itself is
+        # cumulative across run() calls (Prometheus counter semantics), so
+        # everything below is a delta against the snapshot taken at entry
+        d = self.telemetry.registry.delta(snap0)
         stats = {
             "num_requests": len(results),
-            "decode_steps": steps,
+            "decode_steps": int(d.value("decode_steps")),
             "wall_s": wall,
             "new_tokens": total_new,
             "tokens_per_sec": total_new / max(wall, 1e-9),
@@ -1966,10 +2262,15 @@ class PagedServingEngine:
             "pool_bytes": pages_lib.cache_physical_bytes(self.pool),
             "pages_total": self.sched.num_pages - 1,
             "page_size": self.sched.page_size,
-            "prefill_chunks": self._prefill_chunks,
-            "prefill_tokens_computed": self._prefill_tokens,
-            "prefill_wall_s": prefill_wall,
+            "prefill_chunks": int(d.value("prefill_chunks")),
+            "prefill_tokens_computed": int(d.value("prefill_tokens")),
+            "prefill_wall_s": float(d.value("prefill_wall_s")),
+            "ttft_hist": d.hist("ttft_seconds"),
+            "tpot_hist": d.hist("tpot_seconds"),
+            "latency_hist": d.hist("request_latency_seconds"),
         }
+        assert int(d.value("new_tokens")) == total_new, \
+            "registry/results disagree on emitted token count"
         # dispatch/compile observability: cumulative over the engine's
         # lifetime (compile cost is paid once and amortized across runs —
         # see serving/compile_cache.py and docs/serving.md "Performance")
@@ -1986,7 +2287,14 @@ class PagedServingEngine:
                 "latency_p99_s": float(np.percentile(cl, 99)),
             }
         stats["slo"] = dict(
-            self._slo,
+            shed=int(d.value("sched_shed")),
+            cancelled=int(d.value("sched_cancelled")),
+            spills=int(d.value("sched_spills")),
+            spill_bytes=int(d.value("sched_spill_bytes")),
+            restores=int(d.value("sched_restores")),
+            restore_retries=int(d.value("sched_restore_retries")),
+            restore_delays=int(d.value("sched_restore_delays")),
+            degraded=int(d.value("sched_degraded")),
             completed=len(completed),
             preempted=sum(1 for r in results if r.preemptions > 0),
             per_class=per_class)
@@ -2027,7 +2335,7 @@ class PagedServingEngine:
             self.trie.check_bound()
             t1 = self.trie.stats()
             stats["prefix"] = dict(
-                t1, **{k: t1[k] - trie0[k]
-                       for k in ("hits", "misses", "hit_tokens",
-                                 "evictions")})
+                t1, **{k: t1[k] - trie0.get(k, 0)
+                       for k in ("hits", "misses", "hit_tokens", "evictions",
+                                 "evictions_lru", "evictions_reclaim")})
         return results, stats

@@ -1,0 +1,429 @@
+"""Async HTTP/SSE front-end over the paged serving engine.
+
+The scheduler's streaming mode (`PagedServingEngine.run(intake=...,
+stop=...)`) turns the batch serve loop into a long-running server tick
+loop; this module is the network surface on top of it, zero-dependency
+(stdlib asyncio + sockets — no web framework):
+
+  POST /generate   submit a request; the response is a Server-Sent-Events
+                   stream of `tokens` events (emitted the same host commit
+                   that appended them) followed by one `result` event (the
+                   full typed RequestResult). `{"stream": false}` in the
+                   body returns a single JSON document instead. A client
+                   that disconnects mid-stream routes to the engine's
+                   same-tick `cancel()` path — its pages free at the next
+                   tick boundary, exactly like an in-process cancel.
+  GET  /metrics    the engine's metrics registry in Prometheus text
+                   exposition format (cumulative across runs).
+  GET  /trace      the telemetry ring buffer as Chrome/Perfetto
+                   trace_event JSON (load at https://ui.perfetto.dev).
+  GET  /healthz    pool occupancy, slot/queue state, watchdog config and
+                   whether the engine loop is alive (a watchdog fire
+                   leaves its SchedulerWatchdogError here).
+
+Threading model — three actors, two queues:
+
+  * the ENGINE thread runs `engine.run([], intake=..., stop=...)`; it is
+    the only thread that touches device state. It pulls newly-submitted
+    requests from the front-end's intake list (drained at tick
+    boundaries) and pushes emitted tokens/results through the engine's
+    `on_tokens` / `on_result` callbacks.
+  * the EVENT-LOOP thread runs the asyncio server. Engine callbacks hand
+    items across with `loop.call_soon_threadsafe` into per-request
+    `asyncio.Queue`s, so SSE handlers never poll.
+  * the CALLER's thread only uses `start()` / `stop()` / `submit()`.
+
+Request ids are assigned by the front-end (monotonic), so HTTP clients
+never pick rids and two streams can never collide.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import json
+import socket
+import threading
+import urllib.request
+from typing import Optional
+
+import numpy as np
+
+from repro.serving import scheduler as scheduler_lib
+
+#: SSE event names a /generate stream may carry, in order of appearance.
+SSE_EVENTS = ("tokens", "result", "error")
+
+
+def _result_doc(res) -> dict:
+    """JSON-safe view of a scheduler RequestResult."""
+    return {
+        "rid": res.rid,
+        "tokens": [int(t) for t in res.tokens],
+        "status": res.status,
+        "prompt_len": res.prompt_len,
+        "ttft_s": res.ttft_s,
+        "tpot_s": res.tpot_s,
+        "latency_s": res.latency_s,
+        "admitted_s": res.admitted_s,
+        "priority": res.priority,
+        "preemptions": res.preemptions,
+        "degraded": res.degraded,
+        "timeline": [[name, t] for name, t in res.timeline],
+    }
+
+
+def _sse(event: str, doc: dict) -> bytes:
+    return (f"event: {event}\ndata: {json.dumps(doc)}\n\n").encode()
+
+
+def _http(status: str, body: bytes, ctype: str) -> bytes:
+    return (f"HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\n"
+            f"Content-Length: {len(body)}\r\nConnection: close\r\n"
+            f"\r\n").encode() + body
+
+
+class _Stream:
+    """Per-request channel from the engine thread to one SSE handler."""
+
+    def __init__(self, loop: asyncio.AbstractEventLoop):
+        self.loop = loop
+        self.q: asyncio.Queue = asyncio.Queue()
+
+    def push(self, item) -> None:  # called from the engine thread
+        self.loop.call_soon_threadsafe(self.q.put_nowait, item)
+
+
+class HTTPFrontend:
+    """The serving front-end: engine loop + asyncio HTTP server.
+
+    `port=0` binds an ephemeral port (read `self.port` after `start()`),
+    which is how the tests and the CI smoke job run it. The engine must
+    be warmed (`compile_cache.warmup`) BEFORE `start()` if the
+    `post_warmup_variants == 0` contract matters — the front-end never
+    compiles anything itself.
+    """
+
+    def __init__(self, engine, host: str = "127.0.0.1", port: int = 0):
+        self.engine = engine
+        self.host = host
+        self.port = port
+        self._lock = threading.Lock()
+        self._intake: list = []
+        self._streams: dict[int, _Stream] = {}
+        self._results: dict[int, object] = {}  # retained typed results
+        self._next_rid = 0
+        self._stop_flag = False
+        self._engine_error: Optional[BaseException] = None
+        self._engine_thread: Optional[threading.Thread] = None
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._loop_thread: Optional[threading.Thread] = None
+        self._server = None
+        self.final_stats: Optional[dict] = None
+        engine.on_tokens = self._on_tokens
+        engine.on_result = self._on_result
+
+    # ------------------------------------------------------------ lifecycle --
+    def start(self) -> None:
+        """Bind the socket, start the event-loop and engine threads.
+        Returns once `self.port` is listening and the engine loop ticks."""
+        self._loop = asyncio.new_event_loop()
+        self._loop_thread = threading.Thread(
+            target=self._loop.run_forever, name="serve-http", daemon=True)
+        self._loop_thread.start()
+        fut = asyncio.run_coroutine_threadsafe(self._serve(), self._loop)
+        self.port = fut.result(timeout=30)
+        self._engine_thread = threading.Thread(
+            target=self._engine_main, name="serve-engine", daemon=True)
+        self._engine_thread.start()
+
+    def stop(self, timeout: float = 60.0) -> Optional[dict]:
+        """Signal the engine loop to drain and shut both threads down.
+        Returns the engine's final per-run `stats` dict (None if the
+        engine died)."""
+        self._stop_flag = True
+        if self._engine_thread is not None:
+            self._engine_thread.join(timeout=timeout)
+        if self._loop is not None:
+            asyncio.run_coroutine_threadsafe(
+                self._close(), self._loop).result(timeout=10)
+            self._loop.call_soon_threadsafe(self._loop.stop)
+            self._loop_thread.join(timeout=10)
+        if self._engine_error is not None:
+            raise self._engine_error
+        return self.final_stats
+
+    def _engine_main(self) -> None:
+        try:
+            _, stats = self.engine.run(
+                [], intake=self._drain_intake,
+                stop=lambda: self._stop_flag)
+            self.final_stats = stats
+        except BaseException as e:  # keep the error for /healthz + stop()
+            self._engine_error = e
+
+    async def _serve(self) -> int:
+        self._server = await asyncio.start_server(
+            self._handle, self.host, self.port)
+        return self._server.sockets[0].getsockname()[1]
+
+    async def _close(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+
+    # ------------------------------------------------------------ submission --
+    def _drain_intake(self) -> list:
+        with self._lock:
+            out, self._intake = self._intake, []
+        return out
+
+    def submit(self, tokens, max_new_tokens: int, *, priority: int = 0,
+               deadline_ms: Optional[float] = None) -> int:
+        """Queue one request; returns its front-end-assigned rid.
+        Raises ValueError (the engine's admission validation) before the
+        request ever reaches the serve loop."""
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
+        req = scheduler_lib.Request(
+            rid=rid, tokens=np.asarray(tokens, np.int32),
+            max_new_tokens=int(max_new_tokens), priority=int(priority),
+            deadline_ms=deadline_ms)
+        self.engine.validate_request(req)
+        if self._loop is not None:
+            with self._lock:
+                self._streams[rid] = _Stream(self._loop)
+        with self._lock:
+            self._intake.append(req)
+        return rid
+
+    def results(self) -> list:
+        """Typed RequestResults retained for every finished request,
+        sorted by rid (the front-end keeps them even after their SSE
+        stream closed)."""
+        return [self._results[k] for k in sorted(self._results)]
+
+    # engine-thread callbacks ------------------------------------------------
+    def _on_tokens(self, rid: int, toks: list) -> None:
+        st = self._streams.get(rid)
+        if st is not None:
+            st.push(("tokens", {"rid": rid, "tokens": list(toks)}))
+
+    def _on_result(self, res) -> None:
+        self._results[res.rid] = res
+        st = self._streams.get(res.rid)
+        if st is not None:
+            st.push(("result", _result_doc(res)))
+
+    # ------------------------------------------------------------ handlers ---
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        try:
+            head = await reader.readuntil(b"\r\n\r\n")
+        except (asyncio.IncompleteReadError, asyncio.LimitOverrunError):
+            writer.close()
+            return
+        try:
+            lines = head.decode("latin-1").split("\r\n")
+            method, target, _ = lines[0].split(" ", 2)
+            headers = {}
+            for ln in lines[1:]:
+                if ":" in ln:
+                    k, v = ln.split(":", 1)
+                    headers[k.strip().lower()] = v.strip()
+            body = b""
+            n = int(headers.get("content-length", "0"))
+            if n:
+                body = await reader.readexactly(n)
+            await self._route(method, target.split("?", 1)[0], body,
+                              reader, writer)
+        except (ConnectionError, asyncio.IncompleteReadError):
+            pass
+        except Exception as e:  # malformed request: answer, don't die
+            try:
+                writer.write(_http("500 Internal Server Error",
+                                   json.dumps({"error": repr(e)}).encode(),
+                                   "application/json"))
+                await writer.drain()
+            except ConnectionError:
+                pass
+        finally:
+            try:
+                writer.close()
+            except Exception:
+                pass
+
+    async def _route(self, method, path, body, reader, writer) -> None:
+        tel = self.engine.telemetry
+        if method == "GET" and path == "/metrics":
+            writer.write(_http(
+                "200 OK", tel.registry.render_prometheus().encode(),
+                "text/plain; version=0.0.4; charset=utf-8"))
+            await writer.drain()
+        elif method == "GET" and path == "/trace":
+            writer.write(_http("200 OK",
+                               tel.tracer.to_perfetto_json().encode(),
+                               "application/json"))
+            await writer.drain()
+        elif method == "GET" and path == "/healthz":
+            writer.write(_http("200 OK",
+                               json.dumps(self.health()).encode(),
+                               "application/json"))
+            await writer.drain()
+        elif method == "POST" and path == "/generate":
+            await self._generate(body, reader, writer)
+        else:
+            writer.write(_http("404 Not Found",
+                               json.dumps({"error": "no such route"})
+                               .encode(), "application/json"))
+            await writer.drain()
+
+    def health(self) -> dict:
+        eng = self.engine
+        alive = (self._engine_thread is not None
+                 and self._engine_thread.is_alive())
+        return {
+            "ok": alive and self._engine_error is None,
+            "engine_alive": alive,
+            "engine_error": (None if self._engine_error is None
+                             else repr(self._engine_error)),
+            "pool": {"free": eng.allocator.num_free,
+                     "live": eng.allocator.num_live,
+                     "total": eng.sched.num_pages - 1},
+            "pool2": (None if eng.allocator2 is None else
+                      {"free": eng.allocator2.num_free,
+                       "live": eng.allocator2.num_live}),
+            "slots_active": int(eng.active.sum()),
+            "spilled": len(eng._spilled),
+            "watchdog_max_wall_s": eng.sched.max_wall_s,
+            "telemetry_enabled": eng.telemetry.enabled,
+            "trace_events": len(eng.telemetry.tracer.events()),
+        }
+
+    async def _generate(self, body, reader, writer) -> None:
+        try:
+            doc = json.loads(body or b"{}")
+            rid = self.submit(
+                doc["prompt"], doc.get("max_new_tokens", 32),
+                priority=int(doc.get("priority", 0)),
+                deadline_ms=doc.get("deadline_ms"))
+        except (ValueError, KeyError, TypeError) as e:
+            writer.write(_http("400 Bad Request",
+                               json.dumps({"error": str(e)}).encode(),
+                               "application/json"))
+            await writer.drain()
+            return
+        stream = self._streams[rid]
+        if not json.loads(body or b"{}").get("stream", True):
+            # buffered mode: wait for the typed result, answer once
+            while True:
+                kind, payload = await stream.q.get()
+                if kind == "result":
+                    break
+            del self._streams[rid]
+            writer.write(_http("200 OK", json.dumps(payload).encode(),
+                               "application/json"))
+            await writer.drain()
+            return
+        writer.write(b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream"
+                     b"\r\nCache-Control: no-cache\r\nConnection: close"
+                     b"\r\n\r\n")
+        await writer.drain()
+        # a read on the (otherwise idle) request socket returning EOF is
+        # the disconnect signal: mid-stream disconnects route to the
+        # engine's same-tick cancel path
+        eof_task = asyncio.ensure_future(reader.read(64))
+        try:
+            done = False
+            while not done:
+                get_task = asyncio.ensure_future(stream.q.get())
+                disconnected = False
+                while not get_task.done():
+                    await asyncio.wait({get_task, eof_task},
+                                       return_when=asyncio.FIRST_COMPLETED)
+                    # disconnect wins over queued tokens — nobody is
+                    # listening anymore; the cancel lands at the next tick
+                    # boundary and emits a typed result (stray bytes from
+                    # the client are not a disconnect: re-arm the watch)
+                    if eof_task.done():
+                        if (eof_task.exception() is None
+                                and eof_task.result()):
+                            eof_task = asyncio.ensure_future(
+                                reader.read(64))
+                        else:
+                            get_task.cancel()
+                            self.engine.cancel(rid)
+                            disconnected = True
+                            break
+                if disconnected:
+                    break
+                kind, payload = get_task.result()
+                writer.write(_sse(kind, payload))
+                try:
+                    await writer.drain()
+                except ConnectionError:
+                    self.engine.cancel(rid)
+                    break
+                done = kind == "result"
+        finally:
+            if not eof_task.done():
+                eof_task.cancel()
+            self._streams.pop(rid, None)
+
+
+# ---------------------------------------------------------------- clients ---
+def http_get(port: int, path: str, host: str = "127.0.0.1",
+             timeout: float = 30.0) -> str:
+    """Tiny blocking GET helper (tests / smoke tooling)."""
+    with urllib.request.urlopen(
+            f"http://{host}:{port}{path}", timeout=timeout) as r:
+        return r.read().decode()
+
+
+def sse_generate(port: int, doc: dict, host: str = "127.0.0.1",
+                 timeout: float = 120.0, disconnect_after: int = -1):
+    """Blocking SSE client for POST /generate: yields (event, payload)
+    tuples until the `result` event. `disconnect_after` >= 0 closes the
+    socket after that many `tokens` events — the mid-stream-disconnect
+    path the server must turn into an engine cancel."""
+    body = json.dumps(doc).encode()
+    sk = socket.create_connection((host, port), timeout=timeout)
+    try:
+        sk.sendall(
+            b"POST /generate HTTP/1.1\r\nHost: x\r\n"
+            b"Content-Type: application/json\r\n"
+            + f"Content-Length: {len(body)}\r\n\r\n".encode() + body)
+        buf = b""
+        n_tok = 0
+        while True:
+            chunk = sk.recv(65536)
+            if not chunk:
+                return
+            buf += chunk
+            if b"\r\n\r\n" in buf:  # strip the response head once
+                head, buf = buf.split(b"\r\n\r\n", 1)
+                if b"200" not in head.split(b"\r\n", 1)[0]:
+                    raise RuntimeError(f"bad status: {head!r}")
+                break
+        while True:
+            while b"\n\n" in buf:
+                raw, buf = buf.split(b"\n\n", 1)
+                event, data = None, None
+                for ln in raw.decode().splitlines():
+                    if ln.startswith("event: "):
+                        event = ln[len("event: "):]
+                    elif ln.startswith("data: "):
+                        data = json.loads(ln[len("data: "):])
+                yield event, data
+                if event == "tokens":
+                    n_tok += 1
+                    if disconnect_after >= 0 and n_tok >= disconnect_after:
+                        return
+                if event == "result":
+                    return
+            chunk = sk.recv(65536)
+            if not chunk:
+                return
+            buf += chunk
+    finally:
+        sk.close()

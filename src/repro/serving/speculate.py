@@ -62,7 +62,8 @@ DEFAULT_MAX_NGRAM = 3
 
 
 def propose_draft(context: np.ndarray, draft_len: int,
-                  max_ngram: int = DEFAULT_MAX_NGRAM) -> np.ndarray:
+                  max_ngram: int = DEFAULT_MAX_NGRAM,
+                  tracer=None) -> np.ndarray:
     """Prompt-lookup (n-gram) self-draft: the continuation after the most
     recent earlier occurrence of the context's trailing n-gram.
 
@@ -83,7 +84,8 @@ def propose_draft(context: np.ndarray, draft_len: int,
     `context` is the request's full visible stream — prompt followed by
     every emitted token, ending with the pending token about to be fed —
     so drafting needs no model state and costs O(len * max_ngram) numpy
-    compares per step, host-side.
+    compares per step, host-side. `tracer` (a telemetry.Tracer) gets a
+    "draft" instant recording the matched n-gram length and proposal size.
     """
     ctx = np.ascontiguousarray(np.asarray(context, np.int32))
     n = len(ctx)
@@ -98,7 +100,12 @@ def propose_draft(context: np.ndarray, draft_len: int,
         if hits.size:
             start = int(hits[-1]) + ng  # most recent occurrence wins
             period = n - start  # match-to-end distance = assumed period
+            if tracer is not None:
+                tracer.instant("draft", ngram=ng, proposed=draft_len,
+                               period=period)
             return ctx[start + np.arange(draft_len) % period].copy()
+    if tracer is not None:
+        tracer.instant("draft", ngram=0, proposed=0)
     return np.zeros((0,), np.int32)
 
 

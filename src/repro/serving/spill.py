@@ -68,18 +68,24 @@ class SpilledPages:
         return int(sum(a.nbytes for a in (*self.k, *self.v)))
 
 
-def spill_pages(pool, page_ids: np.ndarray) -> SpilledPages:
+def spill_pages(pool, page_ids: np.ndarray, tracer=None) -> SpilledPages:
     """Device -> host copy of `page_ids` out of a paged pool.
 
     `pool` is any object with QuantizedKV `.k`/`.v` pool trees of arrays
     (L, P, page_size, n_kv, X). Returns the packed payload; the caller
     releases the page references afterwards (the bytes here are a copy,
-    not a view)."""
+    not a view). `tracer` (a telemetry.Tracer) gets a "spill-copy" span
+    covering the device->host transfer."""
+    t0 = tracer.now() if tracer is not None else 0.0
     ids = _pow2_pad_ids(np.asarray(page_ids, np.int32))
     idx = jnp.asarray(ids)
     k = jax.tree.map(lambda a: np.asarray(a[:, idx]), pool.k)
     v = jax.tree.map(lambda a: np.asarray(a[:, idx]), pool.v)
-    return SpilledPages(k, v, len(page_ids))
+    out = SpilledPages(k, v, len(page_ids))
+    if tracer is not None:
+        tracer.span("spill-copy", t0, pages=len(page_ids),
+                    bucket=len(ids), bytes=out.nbytes())
+    return out
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -89,23 +95,29 @@ def _upload(pool_a, host_a, ids):
     return pool_a.at[:, ids].set(host_a.astype(pool_a.dtype))
 
 
-def restore_pages(pool, spilled: SpilledPages, new_ids: np.ndarray):
+def restore_pages(pool, spilled: SpilledPages, new_ids: np.ndarray,
+                  tracer=None):
     """Host -> device upload of a spilled payload into freshly allocated
     pages. `new_ids` must have exactly `spilled.n_pages` entries; the ids
     need not match the original ones (pages are position-independent).
     Returns the new pool (buffers donated-in-spirit via jit; the caller
     replaces its pool reference). Padded payload rows scatter into the
     trash page 0 — duplicate trash writes are unordered but the trash
-    page holds no data by contract."""
+    page holds no data by contract. `tracer` gets a "restore-copy" span
+    covering the host->device upload."""
     new_ids = np.asarray(new_ids, np.int32)
     if len(new_ids) != spilled.n_pages:
         raise ValueError(
             f"restore needs {spilled.n_pages} pages, got {len(new_ids)}")
+    t0 = tracer.now() if tracer is not None else 0.0
     ids = jnp.asarray(_pow2_pad_ids(new_ids))
     k = jax.tree.map(lambda a, h: _upload(a, jnp.asarray(h), ids),
                      pool.k, spilled.k)
     v = jax.tree.map(lambda a, h: _upload(a, jnp.asarray(h), ids),
                      pool.v, spilled.v)
+    if tracer is not None:
+        tracer.span("restore-copy", t0, pages=spilled.n_pages,
+                    bucket=int(ids.shape[0]), bytes=spilled.nbytes())
     return pool._replace(k=k, v=v)
 
 
@@ -142,6 +154,9 @@ class SpilledRequest:
     spill_count: int = 0
     restore_retries: int = 0
     degraded: bool = False
+    # per-request timeline marks (name, t) carried across the round trip
+    # so RequestResult.timeline spans preemptions
+    marks: list = dataclasses.field(default_factory=list)
     # transient-failure backoff: do not retry before this trace time
     not_before: float = 0.0
 

@@ -1,0 +1,129 @@
+#!/usr/bin/env python
+"""Compare two BENCH_*.json files and fail on headline regression.
+
+Every benchmark under `benchmarks/` writes a report with a `summary` dict
+of scalar headline metrics (speedups, byte ratios, p99 latencies,
+acceptance rates, leak counters). This tool diffs the summaries of a
+baseline and a candidate report of the SAME benchmark and exits non-zero
+when a headline metric regressed beyond `--tolerance` (relative), so CI
+can gate a PR on "no benchmark got worse" without pinning absolute
+numbers that vary across runners.
+
+Metric direction is classified by name:
+
+  higher-is-better  *speedup*, *reduction*, *acceptance_rate*,
+                    *tokens_per_sec*, *hit_tokens*
+  lower-is-better   *p50* / *p99* latencies, *wall_s*, *steps_per_token*,
+                    *ratios.* (bytes-read ratios), *host_syncs*,
+                    *leaked*, *post_warmup_variants*
+  must-hold         tokens_match (exact-parity booleans never regress)
+
+Unclassified metrics are reported but never gate. Nested summary dicts
+(e.g. decode's per-T ratio tables) are flattened with dotted keys.
+
+Usage:
+  python tools/bench_diff.py BASELINE.json CANDIDATE.json \
+      [--tolerance 0.05] [--quiet]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+HIGHER_PATTERNS = ("speedup", "reduction", "acceptance_rate",
+                   "tokens_per_sec", "hit_tokens")
+LOWER_PATTERNS = ("p50", "p99", "wall_s", "steps_per_token", "ratios.",
+                  "host_syncs", "leaked", "post_warmup_variants")
+MUST_HOLD = ("tokens_match",)
+
+
+def flatten(d: dict, prefix: str = "") -> dict:
+    """Nested summary dict -> flat {dotted.key: scalar}."""
+    out = {}
+    for k, v in d.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(flatten(v, key + "."))
+        elif isinstance(v, (int, float, bool)):
+            out[key] = v
+    return out
+
+
+def classify(key: str) -> str:
+    """'higher' | 'lower' | 'hold' | 'info' for a flattened metric key."""
+    if any(p in key for p in MUST_HOLD):
+        return "hold"
+    if any(p in key for p in HIGHER_PATTERNS):
+        return "higher"
+    if any(p in key for p in LOWER_PATTERNS):
+        return "lower"
+    return "info"
+
+
+def compare(base: dict, cand: dict, tolerance: float) -> list[dict]:
+    """Per-metric verdict rows; a row with verdict 'REGRESSED' or
+    'MISSING' gates (tokens_match flips and vanished baseline headline
+    metrics both count as regressions)."""
+    b = flatten(base.get("summary", {}))
+    c = flatten(cand.get("summary", {}))
+    rows = []
+    for key in sorted(set(b) | set(c)):
+        kind = classify(key)
+        row = {"key": key, "kind": kind, "base": b.get(key),
+               "cand": c.get(key)}
+        if key not in c:
+            row["verdict"] = "MISSING" if kind != "info" else "info"
+        elif key not in b:
+            row["verdict"] = "new"
+        elif kind == "hold":
+            row["verdict"] = "ok" if bool(c[key]) == bool(b[key]) and \
+                bool(b[key]) else "REGRESSED"
+        elif kind == "higher":
+            row["verdict"] = ("REGRESSED"
+                              if c[key] < b[key] * (1.0 - tolerance)
+                              else "ok")
+        elif kind == "lower":
+            # a zero baseline (e.g. leaked_pages_total) tolerates nothing
+            bound = b[key] * (1.0 + tolerance) if b[key] else 0.0
+            row["verdict"] = "REGRESSED" if c[key] > bound else "ok"
+        else:
+            row["verdict"] = "info"
+        rows.append(row)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two BENCH_*.json summaries; exit 1 on "
+                    "headline regression")
+    ap.add_argument("baseline", help="baseline BENCH_*.json")
+    ap.add_argument("candidate", help="candidate BENCH_*.json")
+    ap.add_argument("--tolerance", type=float, default=0.05,
+                    help="relative slack before a gated metric counts as "
+                         "regressed (default 0.05)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="print only regressions")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.candidate) as f:
+        cand = json.load(f)
+    rows = compare(base, cand, args.tolerance)
+    bad = [r for r in rows if r["verdict"] in ("REGRESSED", "MISSING")]
+    for r in rows:
+        if args.quiet and r["verdict"] not in ("REGRESSED", "MISSING"):
+            continue
+        print(f"{r['verdict']:>9}  {r['kind']:>6}  {r['key']}: "
+              f"{r['base']} -> {r['cand']}")
+    if bad:
+        print(f"\n{len(bad)} headline metric(s) regressed "
+              f"(tolerance {args.tolerance})", file=sys.stderr)
+        return 1
+    print(f"\nok: {sum(r['verdict'] == 'ok' for r in rows)} gated "
+          f"metric(s) within tolerance {args.tolerance}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
