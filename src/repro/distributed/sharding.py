@@ -72,6 +72,48 @@ def param_shardings(specs, mesh: Mesh, rules: ShardingRules,
     )
 
 
+# ----------------------------------------------- paged serving pool --------
+def paged_pool_pspec() -> P:
+    """PartitionSpec for paged-pool QuantizedKV leaves.
+
+    Every pool leaf is rank 5 — (L, num_pages, page_size, n_kv, X) where X
+    is the packed trailing dim (index words / norm codes / range scalars) —
+    so one spec covers the whole tree: shard the kv-head axis over "model",
+    replicate everything else. The trailing dim is implicitly replicated
+    (a PartitionSpec is a prefix)."""
+    return P(None, None, None, "model")
+
+
+def kv_shard_count(cfg, mesh: Mesh) -> int:
+    """Model-axis size for sharded paged serving, with divisibility checks.
+
+    Unlike `spec_for`'s silent degrade-to-replication (right for weights),
+    the paged pool REQUIRES the head split — a non-divisible config is a
+    deployment error, not something to paper over."""
+    if "model" not in mesh.axis_names:
+        raise ValueError(f"mesh {mesh.axis_names} has no 'model' axis")
+    n = int(mesh.shape["model"])
+    if cfg.num_kv_heads % n != 0 or cfg.num_heads % n != 0:
+        raise ValueError(
+            f"cannot shard {cfg.num_kv_heads} kv-heads / {cfg.num_heads} "
+            f"q-heads over a {n}-way model axis")
+    return n
+
+
+def shard_paged_pool(tree, mesh: Mesh):
+    """Commit a QuantizedKV pool tree (or any rank-5 pool leaves) to the
+    kv-head sharding. Re-applied after restore/migrate so pressure-path
+    scatters never silently drop the layout."""
+    sh = NamedSharding(mesh, paged_pool_pspec())
+    return jax.tree.map(lambda a: jax.device_put(a, sh), tree)
+
+
+def replicate(tree, mesh: Mesh):
+    """Commit a pytree (params, tables) to full replication over the mesh."""
+    sh = NamedSharding(mesh, P())
+    return jax.tree.map(lambda a: jax.device_put(a, sh), tree)
+
+
 # ----------------------------------------------------- data shardings ------
 def batch_spec(mesh: Mesh, global_batch: int) -> P:
     """Shard the batch dim over (pod, data) when divisible."""

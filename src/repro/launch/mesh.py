@@ -9,6 +9,7 @@ touches jax device state (the dry-run sets XLA_FLAGS before first init).
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -21,6 +22,23 @@ def make_host_mesh():
     """Degenerate 1x1 mesh on the local device (tests / examples)."""
     n = len(jax.devices())
     return jax.make_mesh((1, n) if n > 1 else (1, 1), ("data", "model"))
+
+
+def make_sim_mesh(n_model: int, devices=None):
+    """(1, n_model) ("data", "model") mesh over the first n_model devices.
+
+    The simulated-mesh entry point for sharded-serving tests and
+    tools/shard_diff.py: with XLA_FLAGS=--xla_force_host_platform_device_count=8
+    set before the first jax import, a CPU host exposes 8 devices and sub-
+    meshes of size 1/2/4/8 can be built from the same process."""
+    devs = list(jax.devices() if devices is None else devices)
+    if len(devs) < n_model:
+        raise ValueError(
+            f"need {n_model} devices for a {n_model}-way model mesh, "
+            f"have {len(devs)} (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=8 before importing jax)")
+    arr = np.array(devs[:n_model]).reshape(1, n_model)
+    return jax.sharding.Mesh(arr, ("data", "model"))
 
 
 def batch_axes(mesh) -> tuple[str, ...]:

@@ -27,6 +27,17 @@ stalls every live request behind a compile. After `warmup(engine)`:
 
 Shapes are described with `jax.ShapeDtypeStruct` — warmup never runs the
 model, touches the pool, or consumes RNG; it only compiles.
+
+Mesh engines (SchedulerConfig.mesh set) take a different route: their
+step functions are `jit(shard_map(...))`, and AOT-compiled executables
+are brittle about input shardings there, so instead of installing
+`_exec` entries, `_mesh_warmup` primes the LAZY jit cache by CALLING
+every variant once with the engine's real pools (donated and reassigned,
+values untouched: bursts run zero steps, masked writes land only on the
+reserved trash page 0) and all-False active masks. Dispatch then falls
+through `_exec` to the warm `fn(*args)` path; `_compiled_keys` is
+pre-populated either way, so `post_warmup_variants` stays zero on both
+routes.
 """
 from __future__ import annotations
 
@@ -132,6 +143,91 @@ def enumerate_variants(engine, skips=(0,)) -> list[tuple]:
     return out
 
 
+def _mesh_warmup(engine, skips=(0,)) -> dict:
+    """Warm a mesh engine by harmless real calls — see the module
+    docstring. Pool arguments are the engine's live pools: they are
+    donated through each call and reassigned from the outputs, and the
+    calls cannot alter pool *data* (decode/spec bursts run k=0 steps;
+    verify/prefill run with inactive slots and all-zero page tables, so
+    every masked write lands on trash page 0, which holds no data by
+    contract)."""
+    t_start = time.perf_counter()
+    sched, cfg = engine.sched, engine.cfg
+    s = sched.num_slots
+    i32 = jnp.int32
+    zvec = jnp.zeros((s,), i32)
+    fmask = jnp.zeros((s,), jnp.bool_)
+    zscalar = jnp.zeros((), i32)
+    rng = jax.random.PRNGKey(0)
+    compile_wall = 0.0
+    new = 0
+    for vkey, fn, _ in enumerate_variants(engine, skips=skips):
+        if vkey in engine._compiled_keys:
+            continue
+        t0 = time.perf_counter()
+        kind = vkey[0]
+        if kind == "spec":
+            mp = vkey[1]
+            table = jnp.zeros((s, mp), i32)
+            ctx = jnp.zeros(engine.ctx_buf.shape, i32)
+            o = fn(engine.params, engine.pool.k, engine.pool.v, table,
+                   zvec, fmask, fmask, ctx, zvec, zvec, zscalar)
+            engine.pool = engine.pool._replace(k=o[0], v=o[1])
+        elif kind == "verify":
+            mp = vkey[1]
+            table = jnp.zeros((s, mp), i32)
+            fed = jnp.zeros((s, sched.draft_len + 1), i32)
+            o = fn(engine.params, engine.pool.k, engine.pool.v, table,
+                   zvec, fmask, fmask, fed, zvec)
+            engine.pool = engine.pool._replace(k=o[0], v=o[1])
+        elif kind == "decode" and engine.backend2 is not None:
+            mp = vkey[1]
+            table = jnp.zeros((s, mp), i32)
+            o = fn(engine.params, engine.pool.k, engine.pool.v,
+                   engine.pool2.k, engine.pool2.v, table, table, fmask,
+                   zvec, fmask, fmask, zvec, zvec, zscalar, rng)
+            engine.pool = engine.pool._replace(k=o[0], v=o[1])
+            engine.pool2 = engine.pool2._replace(k=o[2], v=o[3])
+        elif kind == "decode":
+            mp = vkey[1]
+            table = jnp.zeros((s, mp), i32)
+            o = fn(engine.params, engine.pool.k, engine.pool.v, table,
+                   zvec, fmask, fmask, zvec, zvec, zscalar, rng)
+            engine.pool = engine.pool._replace(k=o[0], v=o[1])
+        elif kind == "prefix_load":
+            n = vkey[1]
+            fn(jnp.zeros((n,), i32), engine.pool.k, engine.pool.v)
+        elif kind == "prefill":
+            width, skip = vkey[1], vkey[2]
+            nc = width // sched.prefill_chunk
+            toks = jnp.zeros((nc, sched.prefill_chunk), i32)
+            grp = jnp.zeros((nc, sched.prefill_chunk // sched.page_size),
+                            i32)
+            pfx = jnp.zeros(
+                (cfg.num_layers, 1, skip, cfg.num_kv_heads, cfg.head_dim),
+                jnp.dtype(cfg.compute_dtype))
+            o = fn(engine.params, toks, grp, zscalar, zscalar, pfx, pfx,
+                   rng, engine.pool.k, engine.pool.v)
+            engine.pool = engine.pool._replace(k=o[1], v=o[2])
+        else:  # pragma: no cover — enumerate_variants defines the kinds
+            raise AssertionError(f"unknown warmup variant {vkey}")
+        jax.block_until_ready(engine.pool.k)
+        compile_wall += time.perf_counter() - t0
+        new += 1
+        engine._compiled_keys.add(vkey)
+        engine._perf["jit_variants_compiled"] += 1
+    engine._perf["compile_wall_s"] += compile_wall
+    engine._perf["warmup_wall_s"] += time.perf_counter() - t_start
+    engine._warmed = True
+    return {
+        "variants": len(engine._compiled_keys),
+        "new_variants": new,
+        "compile_wall_s": compile_wall,
+        "warmup_wall_s": time.perf_counter() - t_start,
+        "keys": sorted(engine._compiled_keys),
+    }
+
+
 def warmup(engine, skips=(0,)) -> dict:
     """AOT-compile every enumerable dispatch variant into the engine.
 
@@ -146,6 +242,8 @@ def warmup(engine, skips=(0,)) -> dict:
       warmup_wall_s   — total wall of this call (enumeration included)
       keys            — the installed variant keys
     """
+    if getattr(engine, "_shard", None) is not None:
+        return _mesh_warmup(engine, skips=skips)
     t_start = time.perf_counter()
     compile_wall = 0.0
     new = 0

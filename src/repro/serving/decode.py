@@ -13,6 +13,7 @@ decode correctly: each row appends at its own slot and masks its own tail.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, NamedTuple, Optional
 
 import jax
@@ -30,6 +31,35 @@ class DecodeState(NamedTuple):
 
     cache: Any  # RawKVCache | QuantKVCache | None
     states: Any  # recurrent states (hybrid/xlstm) or None
+
+
+class ShardInfo(NamedTuple):
+    """KV-head sharding of the paged pool, threaded into the step functions.
+
+    `axis` is the mesh axis name the pool's kv-head dim is split over;
+    `size` its extent. Inside `shard_map` each device holds
+    num_kv_heads/size contiguous kv-heads (and the matching contiguous
+    GQA group of q-heads), so the per-shard attend is bit-identical to the
+    corresponding head slice of the full computation; only the attention
+    outputs are all-gathered (head order == device order with
+    `tiled=True`), which preserves the FP accumulation order of the wo
+    projection and everything downstream."""
+
+    axis: str
+    size: int
+
+
+def _shard_backend(cfg: ModelConfig, backend: AttentionBackend,
+                   shard: ShardInfo):
+    """Backend viewing only this device's head slice of the pool.
+
+    Returns (local backend, local q-heads, local kv-heads). Both backends
+    are frozen dataclasses, so a config-swap copy is cheap and keeps the
+    quantizer (head_dim-indexed, shard-invariant) intact."""
+    nq = cfg.num_heads // shard.size
+    nkv = cfg.num_kv_heads // shard.size
+    lcfg = dataclasses.replace(cfg, num_heads=nq, num_kv_heads=nkv)
+    return dataclasses.replace(backend, cfg=lcfg), nq, nkv
 
 
 def _resolve_backend(cfg: ModelConfig, backend: Optional[AttentionBackend],
@@ -174,6 +204,7 @@ def decode_step_paged(
     *,
     backend: AttentionBackend,
     write_mask: Optional[jax.Array] = None,  # (B,) bool — slot may append
+    shard: Optional[ShardInfo] = None,  # pool kv-heads split over a mesh axis
 ) -> tuple[jax.Array, object]:
     """One decode step over the paged pool -> (logits (B, V), new cache).
 
@@ -205,6 +236,10 @@ def decode_step_paged(
     may_write = active if write_mask is None else active & write_mask
     positions = lengths[:, None]  # (B, 1) — each slot at its own position
     nk, nv = transformer._layer_bins(qz, cfg.num_layers)
+    be = backend
+    if shard is not None:
+        be, nq_l, nkv_l = _shard_backend(cfg, backend, shard)
+        sidx = jax.lax.axis_index(shard.axis)
 
     def body(carry, xs):
         layer_params, ck, cv, lnk, lnv = xs
@@ -213,10 +248,21 @@ def decode_step_paged(
             layer_params["attn"],
             common.rms_norm(carry, layer_params["norm1"], cfg.norm_eps),
             positions, cfg)
-        new_c = backend.paged_append(
+        if shard is not None:
+            # projection is replicated; each shard keeps its contiguous
+            # head slice (q follows its GQA group) and touches only its
+            # local pool shard
+            q = jax.lax.dynamic_slice_in_dim(q, sidx * nq_l, nq_l, axis=2)
+            k = jax.lax.dynamic_slice_in_dim(k, sidx * nkv_l, nkv_l, axis=2)
+            v = jax.lax.dynamic_slice_in_dim(v, sidx * nkv_l, nkv_l, axis=2)
+        new_c = be.paged_append(
             (ck, cv), k, v, lnk, lnv, page_table, lengths, may_write)
-        out = backend.paged_attend(
+        out = be.paged_attend(
             q, new_c, lnk, lnv, page_table, lengths + 1)
+        if shard is not None:
+            # device order == head order, so the gathered tensor is
+            # bitwise the unsharded attend's output
+            out = jax.lax.all_gather(out, shard.axis, axis=2, tiled=True)
         out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim
                           ).astype(carry.dtype)
         h = jnp.einsum("bsk,kd->bsd", out, layer_params["attn"]["wo"])
@@ -246,6 +292,7 @@ def decode_step_paged_tiered(
     backend: AttentionBackend,
     backend2: AttentionBackend,
     write_mask: Optional[jax.Array] = None,  # (B,) bool — slot may append
+    shard: Optional[ShardInfo] = None,  # pool kv-heads split over a mesh axis
 ) -> tuple[jax.Array, object, object]:
     """`decode_step_paged` over TWO pools: the tier-2 pool holds requests
     whose pages were recompressed to a lower-bit schedule under pool
@@ -275,6 +322,11 @@ def decode_step_paged_tiered(
     positions = lengths[:, None]
     nk1, nv1 = transformer._layer_bins(backend.quantizer, cfg.num_layers)
     nk2, nv2 = transformer._layer_bins(backend2.quantizer, cfg.num_layers)
+    be1, be2 = backend, backend2
+    if shard is not None:
+        be1, nq_l, nkv_l = _shard_backend(cfg, backend, shard)
+        be2, _, _ = _shard_backend(cfg, backend2, shard)
+        sidx = jax.lax.axis_index(shard.axis)
 
     def body(carry, xs):
         (layer_params, ck1, cv1, lnk1, lnv1, ck2, cv2, lnk2, lnv2) = xs
@@ -283,15 +335,22 @@ def decode_step_paged_tiered(
             layer_params["attn"],
             common.rms_norm(carry, layer_params["norm1"], cfg.norm_eps),
             positions, cfg)
-        new_c1 = backend.paged_append(
+        if shard is not None:
+            q = jax.lax.dynamic_slice_in_dim(q, sidx * nq_l, nq_l, axis=2)
+            k = jax.lax.dynamic_slice_in_dim(k, sidx * nkv_l, nkv_l, axis=2)
+            v = jax.lax.dynamic_slice_in_dim(v, sidx * nkv_l, nkv_l, axis=2)
+        new_c1 = be1.paged_append(
             (ck1, cv1), k, v, lnk1, lnv1, cache1.page_table, lengths, w1)
-        new_c2 = backend2.paged_append(
+        new_c2 = be2.paged_append(
             (ck2, cv2), k, v, lnk2, lnv2, cache2.page_table, lengths, w2)
-        out1 = backend.paged_attend(
+        out1 = be1.paged_attend(
             q, new_c1, lnk1, lnv1, cache1.page_table, lengths + 1)
-        out2 = backend2.paged_attend(
+        out2 = be2.paged_attend(
             q, new_c2, lnk2, lnv2, cache2.page_table, lengths + 1)
+        # select per slot locally, then gather heads once
         out = jnp.where(tier2[:, None, None, None], out2, out1)
+        if shard is not None:
+            out = jax.lax.all_gather(out, shard.axis, axis=2, tiled=True)
         out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim
                           ).astype(carry.dtype)
         h = jnp.einsum("bsk,kd->bsd", out, layer_params["attn"]["wo"])
@@ -323,6 +382,7 @@ def verify_step_paged(
     *,
     backend: AttentionBackend,
     write_mask: Optional[jax.Array] = None,  # (B,) bool — slot may append
+    shard: Optional[ShardInfo] = None,  # pool kv-heads split over a mesh axis
 ) -> tuple[jax.Array, object]:
     """One speculative VERIFY step -> (logits (B, q_len, V), new cache).
 
@@ -363,6 +423,10 @@ def verify_step_paged(
     positions = lengths[:, None] + jnp.arange(q_len,
                                               dtype=lengths.dtype)[None, :]
     nk, nv = transformer._layer_bins(qz, cfg.num_layers)
+    be = backend
+    if shard is not None:
+        be, nq_l, nkv_l = _shard_backend(cfg, backend, shard)
+        sidx = jax.lax.axis_index(shard.axis)
 
     def body(carry, xs):
         layer_params, ck, cv, lnk, lnv = xs
@@ -370,10 +434,16 @@ def verify_step_paged(
             layer_params["attn"],
             common.rms_norm(carry, layer_params["norm1"], cfg.norm_eps),
             positions, cfg)
-        new_c = backend.paged_append_multi(
+        if shard is not None:
+            q = jax.lax.dynamic_slice_in_dim(q, sidx * nq_l, nq_l, axis=2)
+            k = jax.lax.dynamic_slice_in_dim(k, sidx * nkv_l, nkv_l, axis=2)
+            v = jax.lax.dynamic_slice_in_dim(v, sidx * nkv_l, nkv_l, axis=2)
+        new_c = be.paged_append_multi(
             (ck, cv), k, v, lnk, lnv, page_table, lengths, valid)
-        out = backend.paged_attend_multi(
+        out = be.paged_attend_multi(
             q, new_c, lnk, lnv, page_table, lengths)
+        if shard is not None:
+            out = jax.lax.all_gather(out, shard.axis, axis=2, tiled=True)
         out = out.reshape(b, q_len, cfg.num_heads * cfg.head_dim
                           ).astype(carry.dtype)
         h = jnp.einsum("bsk,kd->bsd", out, layer_params["attn"]["wo"])

@@ -419,3 +419,96 @@ class PageAllocator:
         if by_owner != self._refs:
             raise AssertionError(
                 "refcount drift: per-owner holdings disagree with refs")
+
+
+class ShardedPageAllocators:
+    """N mirror `PageAllocator`s kept in lockstep by construction.
+
+    Sharded serving splits the pool's kv-head axis over N devices but keeps
+    ONE logical page space: page i holds shard s's heads of the same tokens
+    on device s, so every allocator decision must land identically on all
+    shards. Rather than trusting call sites, this wrapper presents the full
+    PageAllocator interface, mirrors every operation to all N allocators,
+    and asserts the returned values (and, in `check_conservation`, the full
+    free/owned/refcount state) agree across shards — divergence is a bug
+    surfaced at the op that caused it, not a corrupted pool later.
+
+    The scheduler and the prefix trie hold one of these exactly as they
+    would a plain allocator; with n_shards=1 it degenerates to a checked
+    pass-through."""
+
+    def __init__(self, num_pages: int, n_shards: int):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.num_pages = num_pages
+        self.n_shards = n_shards
+        self.shards = [PageAllocator(num_pages) for _ in range(n_shards)]
+
+    def _agree(self, name: str, results):
+        r0 = results[0]
+        for i, r in enumerate(results[1:], 1):
+            same = (np.array_equal(r0, r) if isinstance(r0, np.ndarray)
+                    else r0 == r)
+            if not same:
+                raise AssertionError(
+                    f"shard allocator lockstep broken: {name} returned "
+                    f"{r0!r} on shard 0 but {r!r} on shard {i}")
+        return r0
+
+    def _mirror(self, name: str, *args, **kw):
+        return self._agree(
+            name, [getattr(a, name)(*args, **kw) for a in self.shards])
+
+    def reset(self) -> None:
+        self._mirror("reset")
+
+    @property
+    def num_free(self) -> int:
+        return self._agree("num_free", [a.num_free for a in self.shards])
+
+    @property
+    def num_live(self) -> int:
+        return self._agree("num_live", [a.num_live for a in self.shards])
+
+    @property
+    def total_refs(self) -> int:
+        return self._agree("total_refs", [a.total_refs for a in self.shards])
+
+    def live_pages(self, owner=None) -> list:
+        return self._mirror("live_pages", owner)
+
+    def refcount(self, page: int) -> int:
+        return self._mirror("refcount", page)
+
+    def can_alloc(self, n: int) -> bool:
+        return self._mirror("can_alloc", n)
+
+    def alloc(self, n: int, owner) -> np.ndarray:
+        return self._mirror("alloc", n, owner)
+
+    def share(self, pages, owner) -> None:
+        return self._mirror("share", pages, owner)
+
+    def release(self, owner) -> int:
+        return self._mirror("release", owner)
+
+    def release_pages(self, owner, pages) -> int:
+        return self._mirror("release_pages", owner, pages)
+
+    # historical name, matching PageAllocator
+    free = release
+
+    def check_conservation(self) -> None:
+        """Per-shard conservation, then full cross-shard state equality."""
+        for i, a in enumerate(self.shards):
+            try:
+                a.check_conservation()
+            except AssertionError as e:
+                raise AssertionError(f"shard {i}: {e}") from e
+        a0 = self.shards[0]
+        for i, a in enumerate(self.shards[1:], 1):
+            if (a._free != a0._free or a._refs != a0._refs
+                    or a._owned != a0._owned):
+                raise AssertionError(
+                    f"shard allocator lockstep broken: shard {i} state "
+                    f"diverged from shard 0")

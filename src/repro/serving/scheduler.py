@@ -60,6 +60,7 @@ from repro.configs.base import ModelConfig
 from repro.core import sensitivity
 from repro.core.mixedkv import MixedKVSchedule
 from repro.core.quantizer import KVQuantizer
+from repro.distributed import sharding as sharding_lib
 from repro.models import attention, common, transformer
 from repro.serving import decode as decoding
 from repro.serving import engine as engine_lib
@@ -276,6 +277,18 @@ class SchedulerConfig:
     #           fall off first), keeping soak-length traces memory-safe.
     telemetry: bool = True
     trace_capacity: int = 4096
+    # --- multi-device sharding (ISSUE 9) --------------------------------
+    # mesh: a jax Mesh with a "model" axis — the paged pool's kv-head dim
+    #           (and the matching GQA q-head groups) shards over it, every
+    #           jit'd step runs under shard_map, and per-shard
+    #           PageAllocators are kept in lockstep
+    #           (pages.ShardedPageAllocators). The page table, params and
+    #           all control-plane state stay replicated, so admission /
+    #           spill / evict remain single host-side decisions applied to
+    #           all shards atomically. None = the legacy single-device
+    #           path, bitwise- and dispatch-count-identical to pre-mesh
+    #           builds (docs/sharding.md).
+    mesh: Optional[jax.sharding.Mesh] = None
 
     def __post_init__(self):
         if self.trace_capacity < 16:
@@ -324,6 +337,10 @@ class SchedulerConfig:
         if self.max_wall_s is not None and self.max_wall_s <= 0:
             raise ValueError(
                 f"max_wall_s must be > 0 (or None), got {self.max_wall_s}")
+        if self.mesh is not None and "model" not in self.mesh.axis_names:
+            raise ValueError(
+                f"sharded serving needs a 'model' mesh axis, got "
+                f"{self.mesh.axis_names}")
         if self.prefix_cache not in PREFIX_MODES:
             raise ValueError(
                 f"prefix_cache must be one of {PREFIX_MODES}, got "
@@ -440,10 +457,20 @@ class PagedServingEngine:
         self.cfg = cfg
         self.backend = backend
         self.sched = sched
-        self.allocator = pages_lib.PageAllocator(sched.num_pages)
-        self.pool = backend.init_paged_cache(
+        # --- kv-head sharding (ISSUE 9): with a mesh, the pool's head
+        # axis splits over "model", params/tables replicate, each shard
+        # gets a mirror allocator kept in lockstep, and every jit'd step
+        # runs under shard_map (`_mesh_jit`). mesh=None is the legacy
+        # single-device path, bitwise- and dispatch-count-identical.
+        self._shard: Optional[decoding.ShardInfo] = None
+        if sched.mesh is not None:
+            n_sh = sharding_lib.kv_shard_count(cfg, sched.mesh)
+            self._shard = decoding.ShardInfo("model", n_sh)
+            self.params = sharding_lib.replicate(self.params, sched.mesh)
+        self.allocator = self._make_allocator(sched.num_pages)
+        self.pool = self._commit_pool(backend.init_paged_cache(
             sched.num_pages, sched.page_size, sched.num_slots,
-            sched.max_pages)
+            sched.max_pages))
         # host-side control plane (shipped per step; tiny)
         s = sched.num_slots
         self.page_table = np.zeros((s, sched.max_pages), np.int32)
@@ -495,9 +522,9 @@ class PagedServingEngine:
             qz2 = KVQuantizer(
                 dataclasses.replace(qz1.config, schedule=sched2))
             self.backend2 = dataclasses.replace(backend, quantizer=qz2)
-            self.allocator2 = pages_lib.PageAllocator(d.num_pages)
-            self.pool2 = self.backend2.init_paged_cache(
-                d.num_pages, sched.page_size, s, sched.max_pages)
+            self.allocator2 = self._make_allocator(d.num_pages)
+            self.pool2 = self._commit_pool(self.backend2.init_paged_cache(
+                d.num_pages, sched.page_size, s, sched.max_pages))
             self.page_table2 = np.zeros((s, sched.max_pages), np.int32)
             # one jitted dequant->requant migration fn; jit caches per
             # pow-2 page-count bucket internally
@@ -530,6 +557,27 @@ class PagedServingEngine:
         self._perf = dict(jit_variants_compiled=0, compile_wall_s=0.0,
                           warmup_wall_s=0.0, host_sync_count=0,
                           post_warmup_variants=0)
+
+    # ------------------------------------------------------------ sharding --
+    def _make_allocator(self, num_pages: int):
+        """One PageAllocator — or N lockstep mirrors under a mesh."""
+        if self._shard is None:
+            return pages_lib.PageAllocator(num_pages)
+        return pages_lib.ShardedPageAllocators(num_pages, self._shard.size)
+
+    def _commit_pool(self, pool):
+        """(Re-)commit a pool's k/v trees to the kv-head sharding.
+
+        Applied at init and after every pressure-path scatter that builds
+        fresh pool arrays outside shard_map (restore, tier migration), so
+        the decode hot path never sees a silently resharded operand. No-op
+        without a mesh."""
+        if self._shard is None or pool is None:
+            return pool
+        mesh = self.sched.mesh
+        return pool._replace(
+            k=sharding_lib.shard_paged_pool(pool.k, mesh),
+            v=sharding_lib.shard_paged_pool(pool.v, mesh))
 
     # ------------------------------------------------------------ telemetry --
     def _build_metrics(self, reg: telemetry_lib.MetricsRegistry) -> dict:
@@ -630,6 +678,29 @@ class PagedServingEngine:
             m["spec_rate"].set(m["draft_accepted"].value / prop)
 
     # ------------------------------------------------------------ builders --
+    def _mesh_jit(self, fn, *, n_in, pool_in, n_out, pool_out, donate):
+        """jit one step function — plain on the legacy path, under
+        `shard_map` when the engine has a mesh.
+
+        `pool_in`/`pool_out` index the arguments/outputs that are paged
+        pool trees (kv-head-sharded, `paged_pool_pspec`); everything else
+        is replicated. Specs are pytree prefixes, so one spec covers a
+        whole QuantizedKV tree. check_rep=False: the replicated outputs
+        (logits, tokens, counters) are replicated by construction — every
+        device runs the same math on the same replicated operands after
+        the all-gather — but shard_map cannot infer that statically."""
+        if self._shard is None:
+            return jax.jit(fn, donate_argnums=donate)
+        from jax.experimental.shard_map import shard_map
+
+        pp = sharding_lib.paged_pool_pspec()
+        rep = jax.sharding.PartitionSpec()
+        in_specs = tuple(pp if i in pool_in else rep for i in range(n_in))
+        out_specs = tuple(pp if i in pool_out else rep for i in range(n_out))
+        wrapped = shard_map(fn, mesh=self.sched.mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_rep=False)
+        return jax.jit(wrapped, donate_argnums=donate)
+
     def _build_decode(self):
         """Burst decode: up to `k_steps` (<= max_burst) decode steps fused
         into ONE device dispatch — a jitted while_loop whose body is
@@ -651,6 +722,7 @@ class PagedServingEngine:
         max_burst = self.sched.max_burst
         eos = self.sched.eos_id
         backend2 = self.backend2
+        shard = self._shard
 
         if backend2 is not None:
             # tiered variant (DegradeConfig on): the burst body runs
@@ -677,7 +749,7 @@ class PagedServingEngine:
                     logits, n1, n2 = decoding.decode_step_paged_tiered(
                         params, cfg, c1, c2, toks[:, None], act, tier2,
                         backend=backend, backend2=backend2,
-                        write_mask=owned)
+                        write_mask=owned, shard=shard)
                     nxt = engine_lib.sample_tokens(sub, logits, sc)
                     nxt = jnp.where(act, nxt, toks)
                     out = jax.lax.dynamic_update_slice(
@@ -695,7 +767,9 @@ class PagedServingEngine:
                 # pools (both tiers), emitted, out
                 return fin[1], fin[2], fin[3], fin[4], fin[8], fin[9]
 
-            return jax.jit(run2, donate_argnums=(1, 2, 3, 4))
+            return self._mesh_jit(run2, n_in=15, pool_in={1, 2, 3, 4},
+                                  n_out=6, pool_out={0, 1, 2, 3},
+                                  donate=(1, 2, 3, 4))
 
         def run(params, pool_k, pool_v, page_table, lengths, active, owned,
                 tokens, remaining, k_steps, rng):
@@ -711,7 +785,7 @@ class PagedServingEngine:
                 cache = pages_lib.PagedKVCache(pk, pv, page_table, lens)
                 logits, new_cache = decoding.decode_step_paged(
                     params, cfg, cache, toks[:, None], act, backend=backend,
-                    write_mask=owned)
+                    write_mask=owned, shard=shard)
                 nxt = engine_lib.sample_tokens(sub, logits, sc)
                 nxt = jnp.where(act, nxt, toks)
                 out = jax.lax.dynamic_update_slice(
@@ -729,7 +803,8 @@ class PagedServingEngine:
             fin = jax.lax.while_loop(cond, body, init)
             return fin[1], fin[2], fin[6], fin[7]  # pool_k, pool_v, emitted, out
 
-        return jax.jit(run, donate_argnums=(1, 2))
+        return self._mesh_jit(run, n_in=11, pool_in={1, 2}, n_out=4,
+                              pool_out={0, 1}, donate=(1, 2))
 
     def _build_verify(self):
         """Speculative verify: ONE device dispatch scores q_len =
@@ -748,6 +823,7 @@ class PagedServingEngine:
         """
         cfg, backend = self.cfg, self.backend
         eos = self.sched.eos_id
+        shard = self._shard
 
         def run(params, pool_k, pool_v, page_table, lengths, active, owned,
                 fed, n_fed):
@@ -755,14 +831,15 @@ class PagedServingEngine:
                                            lengths)
             logits, new_cache = decoding.verify_step_paged(
                 params, cfg, cache, fed, active, n_fed, backend=backend,
-                write_mask=owned)
+                write_mask=owned, shard=shard)
             # greedy targets: bitwise the tokens sample_tokens(T=0) emits
             targets = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             emit = speculate_lib.accepted_counts(targets, fed, n_fed, eos)
             emit = jnp.where(active, jnp.minimum(emit, n_fed), 0)
             return new_cache.k, new_cache.v, targets, emit
 
-        return jax.jit(run, donate_argnums=(1, 2))
+        return self._mesh_jit(run, n_in=9, pool_in={1, 2}, n_out=4,
+                              pool_out={0, 1}, donate=(1, 2))
 
     def _build_spec(self):
         """Fused speculative burst: up to `k_rounds` (<= max_burst)
@@ -803,6 +880,7 @@ class PagedServingEngine:
         out_w = max_burst * q_len
         c_tok = self.ctx_buf.shape[1]
         rows = jnp.arange(s)
+        shard = self._shard
 
         def run(params, pool_k, pool_v, page_table, lengths, active, owned,
                 ctx, ctx_len, remaining, k_rounds):
@@ -836,7 +914,7 @@ class PagedServingEngine:
                     n_fed = jnp.where(act, 1 + nd, 1)
                     logits, new_cache = decoding.verify_step_paged(
                         params, cfg, cache, fed, act, n_fed,
-                        backend=backend, write_mask=owned)
+                        backend=backend, write_mask=owned, shard=shard)
                     targets = jnp.argmax(logits,
                                          axis=-1).astype(jnp.int32)
                     emit = speculate_lib.accepted_counts(targets, fed,
@@ -853,7 +931,7 @@ class PagedServingEngine:
                     # 0 IS the decode accumulation)
                     logits, new_cache = decoding.decode_step_paged(
                         params, cfg, cache, pending[:, None], act,
-                        backend=backend, write_mask=owned)
+                        backend=backend, write_mask=owned, shard=shard)
                     t1 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                     targets = jnp.zeros((s, q_len),
                                         jnp.int32).at[:, 0].set(t1)
@@ -903,7 +981,8 @@ class PagedServingEngine:
             return (fin[1], fin[2], fin[8], fin[9], fin[10], fin[11],
                     fin[12])
 
-        return jax.jit(run, donate_argnums=(1, 2))
+        return self._mesh_jit(run, n_in=11, pool_in={1, 2}, n_out=7,
+                              pool_out={0, 1}, donate=(1, 2))
 
     def warmup(self, skips=(0,)) -> dict:
         """AOT-compile every enumerable dispatch variant up front — see
@@ -1214,6 +1293,7 @@ class PagedServingEngine:
         requant = self.sched.prefix_cache != "off"
         n_chunks = width // chunk
         nk, nv = transformer._layer_bins(qz, cfg.num_layers)
+        shard = self._shard
 
         def one_chunk(params, tokens_c, chunk_idx, buf_k, buf_v):
             x = transformer.embed_inputs(params, cfg, {"tokens": tokens_c})
@@ -1280,6 +1360,17 @@ class PagedServingEngine:
                                               bk, bv)
                 ck = jax.tree.map(lambda a: a[:, 0], ck)  # drop batch=1
                 cv = jax.tree.map(lambda a: a[:, 0], cv)
+                if shard is not None:
+                    # prefill compute is replicated; only the pool write
+                    # is sharded — each device scatters its own kv-head
+                    # slice of the chunk codes ((L, C, n_kv, X), head
+                    # axis 2) into its pool shard
+                    nkv_l = cfg.num_kv_heads // shard.size
+                    sidx = jax.lax.axis_index(shard.axis)
+                    cut = lambda a: jax.lax.dynamic_slice_in_dim(
+                        a, sidx * nkv_l, nkv_l, axis=2)
+                    ck = jax.tree.map(cut, ck)
+                    cv = jax.tree.map(cut, cv)
                 pk = pages_lib.write_prompt_pages(pk, ck, ids, ps)
                 pv = pages_lib.write_prompt_pages(pv, cv, ids, ps)
                 return (bk, bv, pk, pv), x
@@ -1299,7 +1390,8 @@ class PagedServingEngine:
             tok = engine_lib.sample_tokens(rng, logits, sc)
             return tok, pool_k, pool_v
 
-        fn = jax.jit(run, donate_argnums=(8, 9))
+        fn = self._mesh_jit(run, n_in=10, pool_in={8, 9}, n_out=3,
+                            pool_out={1, 2}, donate=(8, 9))
         self._prefill_fns[key] = fn
         return fn
 
@@ -1320,6 +1412,7 @@ class PagedServingEngine:
         ps = self.sched.page_size
         nk, nv = transformer._layer_bins(qz, cfg.num_layers)
         dt = jnp.dtype(cfg.compute_dtype)
+        shard = self._shard
 
         def load(page_ids, pool_k, pool_v):
             def take(pool_a):  # (L, P, ps, n_kv, X) -> (L, 1, n*ps, ...)
@@ -1337,9 +1430,16 @@ class PagedServingEngine:
                 return carry, (bk, bv)
 
             _, (bk, bv) = jax.lax.scan(body, 0, (kq, vq, nk, nv))
+            if shard is not None:
+                # decode is per-head (reductions stay inside head_dim), so
+                # gathering the per-shard decodes along the head axis is
+                # bitwise the unsharded decode of the full pool
+                bk = jax.lax.all_gather(bk, shard.axis, axis=3, tiled=True)
+                bv = jax.lax.all_gather(bv, shard.axis, axis=3, tiled=True)
             return bk, bv
 
-        fn = jax.jit(load)
+        fn = self._mesh_jit(load, n_in=3, pool_in={1, 2}, n_out=2,
+                            pool_out=set(), donate=())
         self._prefix_load_fns[n_pages] = fn
         return fn
 
@@ -1766,13 +1866,13 @@ class PagedServingEngine:
             n_data = pages_lib.pages_for_tokens(sp.length,
                                                 self.sched.page_size)
             if sp.tier2:
-                self.pool2 = spill_lib.restore_pages(
+                self.pool2 = self._commit_pool(spill_lib.restore_pages(
                     self.pool2, sp.payload, ids[:n_data],
-                    tracer=self._tracer)
+                    tracer=self._tracer))
             else:
-                self.pool = spill_lib.restore_pages(
+                self.pool = self._commit_pool(spill_lib.restore_pages(
                     self.pool, sp.payload, ids[:n_data],
-                    tracer=self._tracer)
+                    tracer=self._tracer))
             slot = free[0]
             row = np.zeros((self.sched.max_pages,), np.int32)
             row[:sp.n_pages] = ids
@@ -1823,10 +1923,10 @@ class PagedServingEngine:
         n_data = pages_lib.pages_for_tokens(int(self.lengths[slot]),
                                             self.sched.page_size)
         ids2 = self.allocator2.alloc(n_total, rid)
-        self.pool2 = spill_lib.migrate_pages(
+        self.pool2 = self._commit_pool(spill_lib.migrate_pages(
             self.pool, row[:n_data], self.backend.quantizer,
             self.backend2.quantizer, self.pool2, ids2[:n_data],
-            migrate_fn=self._migrate_fn)
+            migrate_fn=self._migrate_fn))
         self.allocator.free(rid)
         self.page_table[slot] = 0
         row2 = np.zeros((self.sched.max_pages,), np.int32)

@@ -1,16 +1,52 @@
 """Shared test configuration.
 
-Provides a minimal deterministic stand-in for `hypothesis` when the real
-package is not installed, so the whole suite still *collects and runs* from
-a fresh checkout or a slim CI image (`pip install -e ".[test]"` installs the
-real property-based engine; this stub just draws a fixed number of seeded
-examples per test).
+Two jobs:
+
+1. Simulated multi-device mesh for the sharded-serving tests
+   (tests/test_sharded.py): XLA's host-platform device forcing must be set
+   BEFORE the first jax import anywhere in the process, so it happens here
+   at conftest import time — guarded so an already-imported jax (or a
+   user-set flag) is never clobbered. The flag only affects the CPU
+   platform and only *adds* devices; single-device tests keep dispatching
+   to device 0 exactly as before, so the legacy suite is not poisoned.
+   Tests that genuinely need >= 2 devices take the `sim_mesh_devices`
+   fixture, which skips cleanly when forcing did not take effect (real
+   accelerators, jax imported early, etc.).
+
+2. A minimal deterministic stand-in for `hypothesis` when the real
+   package is not installed, so the whole suite still *collects and runs*
+   from a fresh checkout or a slim CI image (`pip install -e ".[test]"`
+   installs the real property-based engine; this stub just draws a fixed
+   number of seeded examples per test).
 """
 from __future__ import annotations
 
+import os
 import sys
 import types
 import zlib
+
+import pytest
+
+if "jax" not in sys.modules:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=8").strip()
+
+
+@pytest.fixture(scope="session")
+def sim_mesh_devices():
+    """The process's device list, skipping when multi-device forcing did
+    not take effect (so sharded tests never fail spuriously on platforms
+    where the flag is inert)."""
+    import jax
+
+    devs = jax.devices()
+    if len(devs) < 2:
+        pytest.skip("simulated multi-device mesh unavailable "
+                    "(xla_force_host_platform_device_count not in effect)")
+    return devs
 
 try:
     import hypothesis  # noqa: F401  — real engine wins when present
