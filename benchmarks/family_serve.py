@@ -1,0 +1,276 @@
+"""Family-adapter serving benchmark: every opened family, one report.
+
+Serves one deterministic trace per model family the adapter subsystem
+(`repro.serving.families`) opened to the paged stack and checks the
+contract each family ships with:
+
+    granite-moe   MoE paged decode (dropless capacity) — greedy tokens
+                  BITWISE the static engine's under chunked prefill and
+                  slot reuse; reports paged decode tokens/sec.
+    zamba2        hybrid attention-pages + quantized SSM state slots in
+                  the same tick — raw-codec (quantize=False) tokens match
+                  the static engine exactly; the quantized run reports
+                  packed-vs-raw bytes per slot.
+    xlstm         pure recurrent state slots (no pages at all) — same
+                  raw-parity + compression contract.
+    paligemma     multimodal image-prefix reuse — questions about the
+                  same image share the image/instruction pages through
+                  the COW trie; shared tokens equal the cold run's and
+                  the report carries the shared-token count.
+
+Emits BENCH_families.json. The summary holds only deterministic metrics
+(so `tools/bench_diff.py` can gate a CI smoke run against the committed
+report without pinning wall clocks): `tokens_match` (must hold),
+`post_warmup_variants` (zero — state-family dispatch is fully enumerated
+by `warmup()`), `ratios.state_bytes_per_slot_*` (lower is better), and
+`prefix_hit_tokens` (higher is better). Wall-clock tokens/sec are
+reported per family as information only. Exits non-zero on any token
+mismatch or post-warmup recompile.
+
+Usage:
+    PYTHONPATH=src python benchmarks/family_serve.py [--smoke] \
+        [--out BENCH_families.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core import mixedkv, rates
+from repro.core.quantizer import KVQuantizer, QuantizerConfig
+from repro.models import moe, transformer
+from repro.serving import backends as backends_lib
+from repro.serving import engine as engine_lib
+from repro.serving import scheduler, statecache
+
+
+def _backend(cfg):
+    if not cfg.has_kv_cache:
+        return backends_lib.RawBackend(cfg)
+    return backends_lib.QuantXLABackend(cfg, KVQuantizer(QuantizerConfig(
+        head_dim=cfg.head_dim,
+        schedule=mixedkv.uniform(cfg.num_attn_layers),
+        k_norm=rates.NORM_K8, v_norm=rates.NORM_V4_LOG,
+        storage="bitpack")))
+
+
+def _sched(**kw):
+    base = dict(num_slots=2, page_size=4, num_pages=64, max_context=48,
+                prefill_chunk=8, max_burst=4, debug_conservation=True)
+    base.update(kw)
+    return scheduler.SchedulerConfig(**base)
+
+
+def _requests(cfg, n, seed, plen_lo=4, plen_hi=14, budget_hi=6):
+    rng = np.random.default_rng(seed)
+    return [scheduler.Request(
+        rid=i,
+        tokens=rng.integers(0, cfg.vocab_size,
+                            rng.integers(plen_lo, plen_hi + 1)
+                            ).astype(np.int32),
+        max_new_tokens=int(rng.integers(2, budget_hi + 1)))
+        for i in range(n)]
+
+
+def _static_tokens(params, cfg, be, req):
+    out = engine_lib.generate(params, cfg, be,
+                              jnp.asarray(req.tokens)[None],
+                              max_new_tokens=req.max_new_tokens)
+    return np.asarray(out.tokens)[0][:req.max_new_tokens].tolist()
+
+
+def _setup(arch_id, seed):
+    cfg = registry.get_reduced_config(arch_id)
+    params, _ = transformer.init_params(jax.random.PRNGKey(seed), cfg)
+    return cfg, params, _backend(cfg)
+
+
+def bench_moe(n_req):
+    """Paged MoE vs static engine under the dropless serving config."""
+    cfg, params, be = _setup("granite-moe-3b-a800m", 2)
+    reqs = _requests(cfg, n_req, seed=7, plen_lo=3)
+    eng = scheduler.PagedServingEngine(params, cfg, be, _sched())
+    eng.warmup()
+    t0 = time.perf_counter()
+    results, stats = eng.run([scheduler.Request(
+        rid=r.rid, tokens=r.tokens, max_new_tokens=r.max_new_tokens)
+        for r in reqs])
+    wall = time.perf_counter() - t0
+    dropless = moe.dropless_serving_config(cfg)
+    errors = []
+    for r, req in zip(results, reqs):
+        ref = _static_tokens(params, dropless, be, req)
+        if list(map(int, r.tokens)) != ref:
+            errors.append({"rid": r.rid, "paged": list(map(int, r.tokens)),
+                           "static": ref})
+    new_tokens = int(stats["new_tokens"])
+    return {
+        "arch": cfg.name, "family": stats["family"]["name"],
+        "moe_dropless": stats["family"]["moe_dropless"],
+        "requests": len(reqs), "new_tokens": new_tokens,
+        "wall_s": wall, "tokens_per_sec": new_tokens / max(wall, 1e-9),
+        "post_warmup_variants": stats["perf"]["post_warmup_variants"],
+        "token_errors": errors,
+    }
+
+
+def bench_state_family(arch_id, seed, n_req):
+    """Raw-codec parity vs static engine + quantized compression."""
+    cfg, params, be = _setup(arch_id, seed)
+    reqs = _requests(cfg, n_req, seed=seed + 10)
+    # parity leg: raw state codec, token-exact against the static engine
+    eng = scheduler.PagedServingEngine(
+        params, cfg, be, _sched(),
+        state_cache=statecache.StateCacheConfig(quantize=False))
+    results, _ = eng.run([scheduler.Request(
+        rid=r.rid, tokens=r.tokens, max_new_tokens=r.max_new_tokens)
+        for r in reqs])
+    errors = []
+    for r, req in zip(results, reqs):
+        ref = _static_tokens(params, cfg, be, req)
+        if list(map(int, r.tokens)) != ref:
+            errors.append({"rid": r.rid, "paged": list(map(int, r.tokens)),
+                           "static": ref})
+    # production leg: quantized state slots, warmed dispatch
+    engq = scheduler.PagedServingEngine(params, cfg, be, _sched())
+    engq.warmup()
+    t0 = time.perf_counter()
+    resultsq, statsq = engq.run([scheduler.Request(
+        rid=r.rid, tokens=r.tokens, max_new_tokens=r.max_new_tokens)
+        for r in reqs])
+    wall = time.perf_counter() - t0
+    fam = statsq["family"]
+    new_tokens = int(statsq["new_tokens"])
+    return {
+        "arch": cfg.name, "family": fam["name"],
+        "paged_kv": fam["paged_kv"], "requests": len(reqs),
+        "new_tokens": new_tokens, "wall_s": wall,
+        "tokens_per_sec": new_tokens / max(wall, 1e-9),
+        "state_bytes_per_slot": fam["state_bytes_per_slot"],
+        "state_raw_bytes_per_slot": fam["state_raw_bytes_per_slot"],
+        "state_cache_bytes": fam["state_cache_bytes"],
+        "state_encode_seconds": fam["state_encode_seconds"],
+        "post_warmup_variants": statsq["perf"]["post_warmup_variants"],
+        "completed": sum(r.status == "completed" for r in resultsq),
+        "token_errors": errors,
+    }
+
+
+def bench_prefix(n_images, questions_per_image):
+    """paligemma image-prefix reuse: share vs cold, identical tokens."""
+    cfg, params, be = _setup("paligemma-3b", 0)
+    patch_tile, instruction_len, gen = 4, 8, 6
+    rng = np.random.default_rng(0)
+    instruction = rng.integers(0, cfg.vocab_size, instruction_len)
+    reqs = []
+    for img in range(n_images):
+        block = np.random.default_rng(1000 + img).integers(
+            0, cfg.vocab_size, cfg.frontend_tokens * patch_tile)
+        for q in range(questions_per_image):
+            question = rng.integers(0, cfg.vocab_size, 6 + 2 * q)
+            reqs.append(np.concatenate([block, instruction, question])
+                        .astype(np.int32))
+
+    def serve(mode):
+        eng = scheduler.PagedServingEngine(params, cfg, be, _sched(
+            num_pages=96, max_context=64, prefix_cache=mode,
+            prefix_pages=32))
+        return eng.run([scheduler.Request(rid=i, tokens=t,
+                                          max_new_tokens=gen)
+                        for i, t in enumerate(reqs)])
+
+    shared, stats = serve("share")
+    cold, _ = serve("cold")
+    errors = [{"rid": rs.rid, "shared": list(map(int, rs.tokens)),
+               "cold": list(map(int, rc.tokens))}
+              for rs, rc in zip(shared, cold)
+              if list(rs.tokens) != list(rc.tokens)]
+    px = stats["prefix"]
+    return {
+        "arch": cfg.name, "family": stats["family"]["name"],
+        "requests": len(reqs), "image_block_tokens":
+            int(cfg.frontend_tokens * patch_tile),
+        "prefix_hits": int(px["hits"]), "prefix_misses": int(px["misses"]),
+        "prefix_hit_tokens": int(px["hit_tokens"]),
+        "token_errors": errors,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized trace (the workload is already tiny; "
+                         "recorded in meta for report provenance)")
+    ap.add_argument("--out", type=Path, default=Path("BENCH_families.json"))
+    args = ap.parse_args()
+    n_req = 3 if args.smoke else 4
+
+    rows = {
+        "granite_moe": bench_moe(n_req),
+        "zamba2": bench_state_family("zamba2-2.7b", 4, n_req),
+        "xlstm": bench_state_family("xlstm-350m", 5, n_req),
+        # same trace in smoke and full: hit_tokens is deterministic per
+        # trace, so the CI smoke can bench_diff against the committed
+        # report without a wall-clock in the gate
+        "paligemma_prefix": bench_prefix(2, 3),
+    }
+    tokens_match = all(not r["token_errors"] for r in rows.values())
+    variants = max(r.get("post_warmup_variants", 0) for r in rows.values())
+    report = {
+        "meta": {
+            "smoke": args.smoke,
+            "backend": "quant-xla bitpack (raw for xlstm)",
+            "jax": jax.__version__,
+        },
+        "tokens_match": tokens_match,
+        "rows": rows,
+        "summary": {
+            "tokens_match": tokens_match,
+            "post_warmup_variants": variants,
+            "ratios": {
+                "state_bytes_per_slot_zamba2":
+                    rows["zamba2"]["state_bytes_per_slot"]
+                    / rows["zamba2"]["state_raw_bytes_per_slot"],
+                "state_bytes_per_slot_xlstm":
+                    rows["xlstm"]["state_bytes_per_slot"]
+                    / rows["xlstm"]["state_raw_bytes_per_slot"],
+            },
+            "prefix_hit_tokens": rows["paligemma_prefix"]
+            ["prefix_hit_tokens"],
+        },
+    }
+    args.out.write_text(json.dumps(report, indent=2) + "\n")
+    s = report["summary"]
+    print(f"wrote {args.out}")
+    print(f"  tokens_match={tokens_match} "
+          f"post_warmup_variants={variants}")
+    for k, v in s["ratios"].items():
+        print(f"  {k}: {v:.3f} (1/{1 / v:.2f}x)")
+    print(f"  prefix_hit_tokens: {s['prefix_hit_tokens']}")
+    for name, r in rows.items():
+        tps = r.get("tokens_per_sec")
+        extra = f" {tps:.1f} tok/s" if tps else ""
+        print(f"  {name}: {r['requests']} reqs{extra}")
+    if not tokens_match:
+        print("TOKEN MISMATCH", file=sys.stderr)
+        for name, r in rows.items():
+            if r["token_errors"]:
+                print(f"  {name}: {r['token_errors']}", file=sys.stderr)
+        return 1
+    if variants:
+        print(f"{variants} jit variants compiled after warmup()",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -46,15 +46,24 @@ from repro.launch import steps as steps_lib
 from repro.models import transformer
 from repro.serving import backends as backends_lib
 from repro.serving import engine
+from repro.serving import families as families_lib
 from repro.serving import pages as pages_lib
 from repro.serving import scheduler as scheduler_lib
 from repro.serving import server as server_lib
+from repro.serving import statecache as statecache_lib
 from repro.serving import telemetry as telemetry_lib
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list(registry.ALL_IDS))
+    ap.add_argument("--arch", default=None, choices=list(registry.ALL_IDS))
+    ap.add_argument("--model", default=None, choices=list(registry.ALL_IDS),
+                    help="alias of --arch (the registry id to serve); "
+                         "families beyond dense decoders route through "
+                         "their adapter (serving/families.py) — "
+                         "unsupported combinations fail with a typed "
+                         "UnsupportedFamilyError naming the missing "
+                         "capability")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
@@ -174,6 +183,12 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    if args.arch is None and args.model is None:
+        ap.error("one of --arch / --model is required")
+    if args.arch and args.model and args.arch != args.model:
+        ap.error("--arch and --model disagree (they are aliases)")
+    args.arch = args.arch or args.model
+
     run = registry.get_run_config(args.arch)
     cfg = registry.get_reduced_config(args.arch) if args.reduced \
         else run.model
@@ -207,7 +222,14 @@ def main(argv=None):
     prompts = jnp.asarray(tokens)
 
     if args.paged:
-        return _serve_paged(args, cfg, qz, backend, params, tokens, lens)
+        state_cache = statecache_lib.state_cache_config_from_quant(
+            run.quant, raw=backend_name == "raw")
+        try:
+            return _serve_paged(args, cfg, qz, backend, params, tokens,
+                                lens, state_cache)
+        except families_lib.UnsupportedFamilyError as e:
+            print(f"unsupported: {e}")
+            return 2
 
     result = engine.generate(
         params, cfg, backend, prompts, prompt_lengths,
@@ -243,7 +265,8 @@ def main(argv=None):
     return 0
 
 
-def _serve_paged(args, cfg, qz, backend, params, tokens, lens):
+def _serve_paged(args, cfg, qz, backend, params, tokens, lens,
+                 state_cache=None):
     """Run the prompt set through the continuous-batching scheduler."""
     prios = ([int(x) for x in args.priorities.split(",")]
              if args.priorities else [0])
@@ -282,7 +305,8 @@ def _serve_paged(args, cfg, qz, backend, params, tokens, lens):
             if args.degrade_pages else None),
         max_wall_s=args.max_wall_s,
         telemetry=not args.no_telemetry)
-    eng = scheduler_lib.PagedServingEngine(params, cfg, backend, sched)
+    eng = scheduler_lib.PagedServingEngine(params, cfg, backend, sched,
+                                           state_cache=state_cache)
     if not args.no_warmup:
         eng.warmup()
     if args.serve_http:
@@ -346,10 +370,23 @@ def _serve_paged(args, cfg, qz, backend, params, tokens, lens):
         print(f"prefix cache: {px['hits']} hits / {px['misses']} misses, "
               f"{px['hit_tokens']} prompt tokens served from shared pages "
               f"({px['nodes']} pages pinned, bound {px['max_pages']})")
-    pool_mb = stats["pool_bytes"] / 1e6
-    page_kb = pages_lib.page_payload_bytes(qz, cfg, args.page_size) / 1e3
-    print(f"pool-resident payload: {pool_mb:.2f} MB "
-          f"({page_kb:.2f} kB/page x {stats['pages_total']} pages)")
+    fam = stats["family"]
+    caps = ", ".join(k for k in ("paged_kv", "state_slots", "speculate",
+                                 "prefix_share", "degrade", "mesh")
+                     if fam[k])
+    print(f"family: {fam['name']} ({caps or 'no serving capabilities'})")
+    if eng.pool is not None:
+        pool_mb = stats["pool_bytes"] / 1e6
+        page_kb = pages_lib.page_payload_bytes(qz, cfg, args.page_size) / 1e3
+        print(f"pool-resident payload: {pool_mb:.2f} MB "
+              f"({page_kb:.2f} kB/page x {stats['pages_total']} pages)")
+    if fam["state_slots"]:
+        raw = fam["state_raw_bytes_per_slot"]
+        per = fam["state_bytes_per_slot"]
+        print(f"state cache: {fam['state_cache_bytes'] / 1e3:.2f} kB "
+              f"({per / 1e3:.2f} kB/slot vs {raw / 1e3:.2f} kB raw f32, "
+              f"{raw / max(per, 1):.2f}x compression; encode wall "
+              f"{fam['state_encode_seconds']:.2f} s)")
     if args.metrics:
         print("--- /metrics " + "-" * 51)
         print(eng.telemetry.registry.render_prometheus(), end="")

@@ -41,6 +41,29 @@ def init_moe(key, cfg: ModelConfig, dtype) -> dict:
     }
 
 
+def dropless_serving_config(cfg: ModelConfig) -> ModelConfig:
+    """A config whose MoE dispatch can never drop a token.
+
+    Capacity-based dispatch is batch-composition-dependent: whether a
+    token overflows an expert depends on which OTHER tokens share its
+    dispatch group, so the same token through a chunked prefill, a
+    padded decode batch, and a full-prompt prefill can round three
+    different ways. Serving demands batch-shape determinism (paged
+    decode must be bitwise the static engine), so the serving engine
+    raises the capacity factor to experts/top_k — capacity == the full
+    token group, zero drops by construction — exactly the guarantee
+    tests/test_arch_smoke.py leans on. Dense / non-MoE configs pass
+    through unchanged.
+    """
+    if not cfg.moe_experts:
+        return cfg
+    floor = cfg.moe_experts / cfg.moe_top_k
+    if cfg.moe_capacity_factor >= floor:
+        return cfg
+    import dataclasses
+    return dataclasses.replace(cfg, moe_capacity_factor=float(floor))
+
+
 def _dispatch_groups(cfg: ModelConfig, tokens: int) -> int:
     """Largest configured group count that divides the token count and keeps
     groups big enough for stable capacity statistics."""
@@ -50,8 +73,21 @@ def _dispatch_groups(cfg: ModelConfig, tokens: int) -> int:
     return max(g, 1)
 
 
-def moe_block(params, x: jax.Array, cfg: ModelConfig, cstr=None) -> jax.Array:
-    """x: (B, S, D) -> (B, S, D)."""
+def moe_block(params, x: jax.Array, cfg: ModelConfig, cstr=None,
+              shard=None) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D).
+
+    `shard` (anything with `.axis`/`.size`, e.g. serving's ShardInfo)
+    turns the expert FFN expert-parallel inside a shard_map: routing,
+    sort-based dispatch and combine stay replicated (cheap, token-local),
+    each device computes only its contiguous `e/size` expert slice of the
+    GEMMs, and one tiled all_gather over the expert axis reassembles the
+    buffer. Device order == expert order, and each expert's GEMM is an
+    independent contraction over d, so the gathered buffer is bitwise the
+    replicated computation — parity with the unsharded path is by
+    construction. Falls back to replicated compute when the expert count
+    does not divide over the mesh.
+    """
     cstr = cstr if cstr is not None else (lambda t, kind: t)
     b, s, d = x.shape
     e, k = cfg.moe_experts, cfg.moe_top_k
@@ -101,9 +137,24 @@ def moe_block(params, x: jax.Array, cfg: ModelConfig, cstr=None) -> jax.Array:
 
     # ---- expert FFN (einsum; expert/f dims shard over "model") -----------
     act = common.activation(cfg.act)
-    up = jnp.einsum("gecd,edf->gecf", buf, params["w_up"])
-    gate = act(jnp.einsum("gecd,edf->gecf", buf, params["w_gate"]))
-    out_e = jnp.einsum("gecf,efd->gecd", gate * up, params["w_down"])
+    if shard is not None and shard.size > 1 and e % shard.size == 0:
+        e_l = e // shard.size
+        sidx = jax.lax.axis_index(shard.axis)
+        buf_l = jax.lax.dynamic_slice_in_dim(buf, sidx * e_l, e_l, axis=1)
+        w_up = jax.lax.dynamic_slice_in_dim(
+            params["w_up"], sidx * e_l, e_l, axis=0)
+        w_gate = jax.lax.dynamic_slice_in_dim(
+            params["w_gate"], sidx * e_l, e_l, axis=0)
+        w_down = jax.lax.dynamic_slice_in_dim(
+            params["w_down"], sidx * e_l, e_l, axis=0)
+        up = jnp.einsum("gecd,edf->gecf", buf_l, w_up)
+        gate = act(jnp.einsum("gecd,edf->gecf", buf_l, w_gate))
+        out_e = jnp.einsum("gecf,efd->gecd", gate * up, w_down)
+        out_e = jax.lax.all_gather(out_e, shard.axis, axis=1, tiled=True)
+    else:
+        up = jnp.einsum("gecd,edf->gecf", buf, params["w_up"])
+        gate = act(jnp.einsum("gecd,edf->gecf", buf, params["w_gate"]))
+        out_e = jnp.einsum("gecf,efd->gecd", gate * up, params["w_down"])
     out_e = cstr(out_e, "moe_buf")
 
     # ---- combine ----------------------------------------------------------

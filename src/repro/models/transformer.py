@@ -166,17 +166,22 @@ def _fake_quant_hook(quantizer: Optional[KVQuantizer]):
 
 
 # ============================================================ forward ======
-def ffn_residual(layer_params, x, cfg: ModelConfig, cstr=None) -> jax.Array:
+def ffn_residual(layer_params, x, cfg: ModelConfig, cstr=None,
+                 shard=None) -> jax.Array:
     """Post-attention half of a decoder block: norm2 -> MoE/MLP -> residual.
 
     Shared by every decoder-layer body (full forward, prefill, decode step,
     paged decode, chunked prefill) so the block math lives in one place.
+    `shard` makes an MoE FFN expert-parallel inside a shard_map (see
+    `moe.moe_block`); dense MLPs ignore it (they stay replicated — the
+    mesh's win there is the kv-head pool split, not the FFN).
     """
     cstr = cstr if cstr is not None else (lambda t, kind="residual": t)
     inner = common.rms_norm(x, layer_params["norm2"], cfg.norm_eps)
     if cfg.moe_experts:
         return common.radd(
-            x, moe.moe_block(layer_params["moe"], inner, cfg, cstr))
+            x, moe.moe_block(layer_params["moe"], inner, cfg, cstr,
+                             shard=shard))
     return common.radd(x, mlp.mlp_block(layer_params["mlp"], inner, cfg, cstr))
 
 

@@ -80,6 +80,19 @@ def prefill_width_buckets(engine) -> list[int]:
     return sorted(set(out))
 
 
+def state_width_buckets(engine) -> list[int]:
+    """Every prompt width `_state_width` can return for an admittable
+    request on a state-slot family: powers of two clamped at the token
+    capacity (plus the capacity itself when it is not a power of two)."""
+    cap = engine.sched.max_pages * engine.sched.page_size
+    out, w = [], 1
+    while w < cap:
+        out.append(w)
+        w *= 2
+    out.append(cap)
+    return sorted(set(out))
+
+
 def enumerate_variants(engine, skips=(0,)) -> list[tuple]:
     """The (key, jit_fn, abstract_args) list `warmup` compiles.
 
@@ -90,7 +103,6 @@ def enumerate_variants(engine, skips=(0,)) -> list[tuple]:
     """
     sched, cfg = engine.sched, engine.cfg
     s = sched.num_slots
-    pk, pv = _sds(engine.pool.k), _sds(engine.pool.v)
     params = _sds(engine.params)
     key = _sds(jax.random.PRNGKey(0))
     i32 = jnp.int32
@@ -98,6 +110,37 @@ def enumerate_variants(engine, skips=(0,)) -> list[tuple]:
     mask = jax.ShapeDtypeStruct((s,), jnp.bool_)
     scalar = jax.ShapeDtypeStruct((), i32)
     out = []
+    if engine.family.state_slots:
+        # state-slot families (serving/statecache.py): the burst decode
+        # threads the packed state store, and admission prefill is the
+        # per-pow-2-prompt-width `_sprefill_fn` family (no chunked
+        # prefill, no prefix loads, no speculate/tiered variants —
+        # families.py rejects those scheduler modes up front)
+        packed = _sds(engine.states)
+        if engine.family.paged_kv:  # hybrid: pages ride along
+            pk, pv = _sds(engine.pool.k), _sds(engine.pool.v)
+            for mp in table_width_buckets(engine):
+                table = jax.ShapeDtypeStruct((s, mp), i32)
+                out.append((("decode", mp), engine._decode_fn,
+                            (params, pk, pv, table, vec, mask, vec, vec,
+                             scalar, key, packed)))
+            full = jax.ShapeDtypeStruct((s, sched.max_pages), i32)
+            for width in state_width_buckets(engine):
+                toks = jax.ShapeDtypeStruct((width,), i32)
+                skey, fn = engine._sprefill_fn(width)
+                out.append((skey, fn,
+                            (params, toks, scalar, scalar, pk, pv, full,
+                             vec, packed, key)))
+        else:  # pure-recurrent (xlstm): no pages at all
+            out.append((("decode", 0), engine._decode_fn,
+                        (params, mask, vec, vec, scalar, key, packed)))
+            for width in state_width_buckets(engine):
+                toks = jax.ShapeDtypeStruct((width,), i32)
+                skey, fn = engine._sprefill_fn(width)
+                out.append((skey, fn,
+                            (params, toks, scalar, scalar, packed, key)))
+        return out
+    pk, pv = _sds(engine.pool.k), _sds(engine.pool.v)
     for mp in table_width_buckets(engine):
         table = jax.ShapeDtypeStruct((s, mp), i32)
         if sched.speculate and sched.spec_device:
@@ -152,6 +195,11 @@ def _mesh_warmup(engine, skips=(0,)) -> dict:
     every masked write lands on trash page 0, which holds no data by
     contract)."""
     t_start = time.perf_counter()
+    # state-slot families never run under a mesh (families.py rejects
+    # sched.mesh at construction), so no state-cache variant kind can
+    # reach this path
+    assert not engine.family.state_slots, \
+        "state-cache variants cannot run under a mesh"
     sched, cfg = engine.sched, engine.cfg
     s = sched.num_slots
     i32 = jnp.int32

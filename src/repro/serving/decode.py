@@ -267,7 +267,7 @@ def decode_step_paged(
                           ).astype(carry.dtype)
         h = jnp.einsum("bsk,kd->bsd", out, layer_params["attn"]["wo"])
         xx = transformer.ffn_residual(layer_params, common.radd(carry, h),
-                                      cfg)
+                                      cfg, shard=shard)
         return xx, new_c
 
     x, new_kv = common.uscan(
@@ -278,6 +278,117 @@ def decode_step_paged(
         lengths=new_lengths)
     logits = transformer.lm_logits(params, cfg, x)[:, 0]
     return logits, new_cache
+
+
+def _where_slot_axis(mask: jax.Array, new: jax.Array, old: jax.Array,
+                     axis: int) -> jax.Array:
+    shape = [1] * new.ndim
+    shape[axis] = mask.shape[0]
+    return jnp.where(mask.reshape(shape), new, old)
+
+
+def mask_states(cfg: ModelConfig, active: jax.Array, new, old):
+    """Per-slot select on a family's batched recurrent-state tree.
+
+    Rows of `active` take the freshly-stepped state, the rest keep the
+    previous one bit-exactly — the state-family analogue of the paged
+    path's masked append (inactive slots still execute the fixed-shape
+    step; this throws their garbage state update away). The slot axis per
+    leaf follows `init_decode_state`'s tiling: hybrid leaves are
+    (n_groups, attn_every, S, ...); xlstm mLSTM leaves (G, per-1, S, ...)
+    and sLSTM leaves (G, S, ...).
+    """
+    if cfg.family == "hybrid_ssm":
+        return jax.tree.map(
+            lambda n, o: _where_slot_axis(active, n, o, 2), new, old)
+    if cfg.family == "xlstm":
+        new_m, new_s = new
+        old_m, old_s = old
+        return (
+            jax.tree.map(
+                lambda n, o: _where_slot_axis(active, n, o, 2), new_m, old_m),
+            jax.tree.map(
+                lambda n, o: _where_slot_axis(active, n, o, 1), new_s, old_s),
+        )
+    raise ValueError(f"no recurrent state for family {cfg.family!r}")
+
+
+def decode_step_paged_hybrid(
+    params,
+    cfg: ModelConfig,
+    cache,  # pages.PagedKVCache — the shared-attention layers' pool
+    states,  # batched MambaState tree, leaves (n_groups, attn_every, S, ...)
+    tokens: jax.Array,  # (B, 1) int32 — one per decode slot
+    active: jax.Array,  # (B,) bool — slots currently serving a request
+    *,
+    backend: AttentionBackend,
+    write_mask: Optional[jax.Array] = None,  # (B,) bool — slot may append
+) -> tuple[jax.Array, object, object]:
+    """One hybrid-SSM decode step: Mamba2 stacks on state slots, the shared
+    attention block on paged quantized pages, in the same dispatch
+    -> (logits (B, V), new cache, new states).
+
+    Layer structure mirrors `decode_step`'s hybrid branch (zamba2: per
+    group, `attn_every` Mamba2 layers then ONE shared attention block),
+    but the attention sublayer reads/writes the paged pool exactly like
+    `decode_step_paged` — trash-page-masked appends, per-slot page-table
+    indirection — and the recurrent state update is masked per slot with
+    `mask_states` so inactive slots keep their stored state bit-exactly.
+    The pool's leading axis is `cfg.num_attn_layers` == n_groups (one
+    attention instance per group), so page geometry and byte accounting
+    carry over from the decoder path unchanged.
+    """
+    if cfg.family != "hybrid_ssm":
+        raise ValueError(
+            f"hybrid paged decode is defined for family 'hybrid_ssm', not "
+            f"{cfg.family!r}")
+    from repro.serving import pages as pages_lib
+
+    x = transformer.embed_inputs(params, cfg, {"tokens": tokens})
+    qz = backend.quantizer
+    lengths = cache.lengths
+    page_table = cache.page_table
+    may_write = active if write_mask is None else active & write_mask
+    positions = lengths[:, None]
+    n_groups = cfg.num_layers // cfg.attn_every
+    nk, nv = transformer._layer_bins(qz, n_groups)
+    shared = params["shared_attn"]
+
+    def group_body(carry, xs):
+        group_params, ck, cv, lnk, lnv, gstates = xs
+
+        def mamba_body(c, lxs):
+            lp, st = lxs
+            out, new_st = ssm.mamba2_decode_step(
+                lp["ssm"], common.rms_norm(c, lp["norm"], cfg.norm_eps),
+                st, cfg)
+            return common.radd(c, out), new_st
+
+        h, new_states = common.uscan(mamba_body, carry,
+                                     (group_params, gstates))
+        b = h.shape[0]
+        q, k, v = attention.project_qkv(
+            shared["attn"],
+            common.rms_norm(h, shared["norm"], cfg.norm_eps),
+            positions, cfg)
+        new_c = backend.paged_append(
+            (ck, cv), k, v, lnk, lnv, page_table, lengths, may_write)
+        out = backend.paged_attend(
+            q, new_c, lnk, lnv, page_table, lengths + 1)
+        out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim
+                          ).astype(h.dtype)
+        a = jnp.einsum("bsk,kd->bsd", out, shared["attn"]["wo"])
+        return common.radd(h, a), (new_c, new_states)
+
+    x, (new_kv, new_states) = common.uscan(
+        group_body, x, (params["mamba"], cache.k, cache.v, nk, nv, states))
+    new_lengths = jnp.where(active, lengths + 1, lengths)
+    new_cache = pages_lib.PagedKVCache(
+        k=new_kv[0], v=new_kv[1], page_table=page_table,
+        lengths=new_lengths)
+    new_states = mask_states(cfg, active, new_states, states)
+    logits = transformer.lm_logits(params, cfg, x)[:, 0]
+    return logits, new_cache, new_states
 
 
 def decode_step_paged_tiered(
@@ -355,7 +466,7 @@ def decode_step_paged_tiered(
                           ).astype(carry.dtype)
         h = jnp.einsum("bsk,kd->bsd", out, layer_params["attn"]["wo"])
         xx = transformer.ffn_residual(layer_params, common.radd(carry, h),
-                                      cfg)
+                                      cfg, shard=shard)
         return xx, (new_c1, new_c2)
 
     x, (new_kv1, new_kv2) = common.uscan(
@@ -448,7 +559,7 @@ def verify_step_paged(
                           ).astype(carry.dtype)
         h = jnp.einsum("bsk,kd->bsd", out, layer_params["attn"]["wo"])
         xx = transformer.ffn_residual(layer_params, common.radd(carry, h),
-                                      cfg)
+                                      cfg, shard=shard)
         return xx, new_c
 
     x, new_kv = common.uscan(

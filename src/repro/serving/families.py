@@ -1,0 +1,164 @@
+"""Model-family adapters: capability-based admission for the paged stack.
+
+The serving engine used to hard-gate on ``cfg.family == "decoder"``. That
+gate conflated several independent capabilities — whether a family stores
+attention KV in paged quantized pages, whether it carries recurrent state
+that needs fixed-size slots, whether speculative rollback is defined for
+it — and it made every non-dense-decoder registry entry fail with a bare
+ValueError that named no missing capability.
+
+This module replaces the gate with a small capability matrix:
+
+======================  ========  ===========  =========  ======  ====
+family                  paged_kv  state_slots  speculate  prefix  mesh
+======================  ========  ===========  =========  ======  ====
+decoder (dense / MoE)   yes       no           yes        yes     yes
+hybrid_ssm (zamba2)     yes       yes          no         no      no
+xlstm                   no        yes          no         no      no
+encoder (hubert)        —  does not generate  —
+======================  ========  ===========  =========  ======  ====
+
+``check_supported`` is the single admission point: it returns the family's
+adapter when the requested scheduler configuration is servable and raises
+one typed :class:`UnsupportedFamilyError` naming the missing capability
+otherwise (never a bare ValueError, never silent corruption).  Capability
+notes:
+
+* ``speculate`` — speculative decoding needs transactional rollback of the
+  cache.  Pages roll back by dropping refcounts (`pages.pop_tokens`);
+  recurrent state has snapshot/rollback primitives
+  (`statecache.StateStore.snapshot_slot` / `write_slot`) used by
+  spill/restore, but no in-dispatch multi-token rollback, so state-slot
+  families reject ``speculate=True`` up front.
+* ``degrade`` — tiered-precision recompression is defined over page pools
+  only.
+* ``mesh`` — kv-head/expert shard_map composition is a paged-decoder
+  feature; state-slot families run single-device.
+
+Sliding-window decoders (mixtral) remain unservable because pages are
+absolute-position tiles — that is a capability hole
+(``paged_sliding_window``), not a family mismatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+__all__ = [
+    "UnsupportedFamilyError",
+    "FamilyAdapter",
+    "ADAPTERS",
+    "get_adapter",
+    "check_supported",
+]
+
+
+class UnsupportedFamilyError(ValueError):
+    """A registry config cannot serve through the paged stack.
+
+    Carries the family and the single missing ``capability`` (a stable
+    identifier the registry smoke test asserts on) plus a human detail.
+    Subclasses ValueError so legacy callers that caught the old bare
+    gate errors keep working.
+    """
+
+    def __init__(self, family: str, capability: str, detail: str):
+        self.family = family
+        self.capability = capability
+        super().__init__(
+            f"family {family!r} cannot serve: missing capability "
+            f"{capability!r} — {detail}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FamilyAdapter:
+    """Capability flags for one model family.
+
+    ``paged_kv``     attention KV lives in the paged quantized pool
+    ``state_slots``  recurrent state lives in fixed-size quantized slots
+    ``generates``    the family autoregressively emits tokens at all
+    ``speculate``    draft/verify with transactional rollback is defined
+    ``prefix_share`` COW prefix-trie page sharing is defined
+    ``degrade``      tiered-precision page recompression is defined
+    ``mesh``         shard_map (kv-head / expert) composition is defined
+    """
+
+    family: str
+    paged_kv: bool
+    state_slots: bool
+    generates: bool = True
+    speculate: bool = False
+    prefix_share: bool = False
+    degrade: bool = False
+    mesh: bool = False
+
+
+ADAPTERS: dict[str, FamilyAdapter] = {
+    "decoder": FamilyAdapter(
+        "decoder", paged_kv=True, state_slots=False, speculate=True,
+        prefix_share=True, degrade=True, mesh=True),
+    "hybrid_ssm": FamilyAdapter(
+        "hybrid_ssm", paged_kv=True, state_slots=True),
+    "xlstm": FamilyAdapter(
+        "xlstm", paged_kv=False, state_slots=True),
+    "encoder": FamilyAdapter(
+        "encoder", paged_kv=False, state_slots=False, generates=False),
+}
+
+
+def get_adapter(cfg: ModelConfig) -> FamilyAdapter:
+    """The family's adapter, or UnsupportedFamilyError for unknown families."""
+    try:
+        return ADAPTERS[cfg.family]
+    except KeyError:
+        raise UnsupportedFamilyError(
+            cfg.family, "family_adapter",
+            f"no adapter registered (known: {sorted(ADAPTERS)})") from None
+
+
+def check_supported(cfg: ModelConfig, sched, backend) -> FamilyAdapter:
+    """Admission check for PagedServingEngine construction.
+
+    Returns the adapter when (cfg, sched, backend) is servable; raises a
+    single typed UnsupportedFamilyError naming the first missing
+    capability otherwise.
+    """
+    a = get_adapter(cfg)
+    fam = cfg.family
+    if not a.generates:
+        raise UnsupportedFamilyError(
+            fam, "generation",
+            "the family has no autoregressive token loop to serve")
+    if a.paged_kv:
+        if cfg.sliding_window is not None:
+            raise UnsupportedFamilyError(
+                fam, "paged_sliding_window",
+                "pages are absolute-position tiles; ring-buffer sliding "
+                "windows are not implemented")
+        if backend.quantizer is None:
+            raise UnsupportedFamilyError(
+                fam, "quantized_pages",
+                "paged serving stores packed quantized pages; use a quant "
+                "backend (quant-pallas / quant-xla)")
+    if sched.speculate and not a.speculate:
+        raise UnsupportedFamilyError(
+            fam, "speculative_rollback",
+            "recurrent state slots have no multi-token transactional "
+            "rollback (pages roll back via pop_tokens; state slots only "
+            "snapshot/restore at slot granularity)")
+    if getattr(sched, "prefix_cache", "off") != "off" and not a.prefix_share:
+        raise UnsupportedFamilyError(
+            fam, "prefix_share",
+            "COW prefix-trie sharing is defined over page refcounts only")
+    if getattr(sched, "degrade", None) is not None and not a.degrade:
+        raise UnsupportedFamilyError(
+            fam, "tiered_degrade",
+            "tiered-precision recompression is defined over page pools "
+            "only")
+    if getattr(sched, "mesh", None) is not None and not a.mesh:
+        raise UnsupportedFamilyError(
+            fam, "mesh_sharding",
+            "state-slot families run single-device; kv-head/expert "
+            "shard_map composition is a paged-decoder feature")
+    return a

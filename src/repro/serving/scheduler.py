@@ -61,15 +61,22 @@ from repro.core import sensitivity
 from repro.core.mixedkv import MixedKVSchedule
 from repro.core.quantizer import KVQuantizer
 from repro.distributed import sharding as sharding_lib
-from repro.models import attention, common, transformer
+from repro.models import attention, common, moe as moe_lib, transformer
 from repro.serving import decode as decoding
 from repro.serving import engine as engine_lib
+from repro.serving import families as families_lib
 from repro.serving import pages as pages_lib
 from repro.serving import prefix as prefix_lib
 from repro.serving import speculate as speculate_lib
 from repro.serving import spill as spill_lib
+from repro.serving import statecache as statecache_lib
 from repro.serving import telemetry as telemetry_lib
 from repro.serving.backends import AttentionBackend
+
+
+def _tree_nbytes(tree) -> int:
+    """Total bytes held by a pytree of (host or device) arrays."""
+    return int(sum(x.nbytes for x in jax.tree.leaves(tree)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -440,19 +447,22 @@ class PagedServingEngine:
 
     def __init__(self, params, cfg: ModelConfig,
                  backend: AttentionBackend, sched: SchedulerConfig,
-                 telemetry: Optional[telemetry_lib.Telemetry] = None):
-        if cfg.family != "decoder":
-            raise ValueError(
-                f"paged serving is defined for family 'decoder', not "
-                f"{cfg.family!r}")
-        if cfg.sliding_window is not None:
-            raise ValueError(
-                "paged serving does not implement ring-buffer sliding "
-                "windows (pages are absolute-position tiles)")
-        if backend.quantizer is None:
-            raise ValueError(
-                "paged serving stores packed quantized pages; use a quant "
-                "backend (quant-pallas / quant-xla)")
+                 telemetry: Optional[telemetry_lib.Telemetry] = None,
+                 state_cache: Optional[
+                     statecache_lib.StateCacheConfig] = None):
+        # capability-based admission (serving/families.py): either the
+        # (cfg, sched, backend) combination is servable and we get the
+        # family's adapter, or construction raises one typed
+        # UnsupportedFamilyError naming the missing capability.
+        self.family = families_lib.check_supported(cfg, sched, backend)
+        # MoE serving is dropless (models/moe.py): capacity-based token
+        # drops depend on batch composition, so the same prompt through a
+        # chunked prefill vs the static engine's full prefill would round
+        # differently. Raising capacity to experts/top_k makes every MoE
+        # dispatch batch-shape-deterministic — paged decode stays bitwise
+        # the static engine run with this same (dropless) config.
+        cfg = moe_lib.dropless_serving_config(cfg)
+        self.moe_dropless = bool(cfg.moe_experts)
         self.params = params
         self.cfg = cfg
         self.backend = backend
@@ -468,11 +478,26 @@ class PagedServingEngine:
             self._shard = decoding.ShardInfo("model", n_sh)
             self.params = sharding_lib.replicate(self.params, sched.mesh)
         self.allocator = self._make_allocator(sched.num_pages)
-        self.pool = self._commit_pool(backend.init_paged_cache(
-            sched.num_pages, sched.page_size, sched.num_slots,
-            sched.max_pages))
+        self.pool = None
+        if self.family.paged_kv:
+            self.pool = self._commit_pool(backend.init_paged_cache(
+                sched.num_pages, sched.page_size, sched.num_slots,
+                sched.max_pages))
         # host-side control plane (shipped per step; tiny)
         s = sched.num_slots
+        # --- quantized recurrent-state cache (ISSUE 10,
+        # serving/statecache.py): state-slot families keep per-slot
+        # SSM/xLSTM state in fixed-size FWHT+angle-coded slots, decoded
+        # on read and re-encoded on write at slot granularity. Hybrid
+        # families use BOTH planes in the same tick (attention KV on
+        # pages, recurrent state on slots).
+        self.store: Optional[statecache_lib.StateStore] = None
+        self.states = None  # packed per-leaf tuple (device-resident)
+        self.state_slots: Optional[statecache_lib.StateSlotAllocator] = None
+        if self.family.state_slots:
+            self.store = statecache_lib.StateStore(cfg, s, state_cache)
+            self.states = self.store.init_data()
+            self.state_slots = statecache_lib.StateSlotAllocator(s)
         self.page_table = np.zeros((s, sched.max_pages), np.int32)
         self.lengths = np.zeros((s,), np.int32)
         self.active = np.zeros((s,), bool)
@@ -548,6 +573,7 @@ class PagedServingEngine:
         # (suffix bucket width, skipped prefix tokens) -> jit fn
         self._prefill_fns: dict[tuple[int, int], object] = {}
         self._prefix_load_fns: dict[int, object] = {}  # prefix pages -> fn
+        self._sprefill_fns: dict[int, object] = {}  # state-prefill, width
         # --- perf observability (serving/compile_cache.py wires warmup):
         # every device dispatch routes through `_dispatch`, which counts
         # distinct jit-variant keys and prefers AOT-compiled executables
@@ -659,6 +685,12 @@ class PagedServingEngine:
                                 tier="2")
             m["pool_live2"] = g("pool_live_pages",
                                 "referenced physical pages", tier="2")
+        if self.family.state_slots:
+            m["state_bytes"] = g("state_cache_bytes", "packed bytes held "
+                                 "by the quantized recurrent-state cache")
+            m["state_encode_s"] = c("state_encode_seconds", "seconds "
+                                    "spent in state-cache encode/prefill "
+                                    "dispatches")
         return m
 
     def _refresh_gauges(self, n_pending: int) -> None:
@@ -668,6 +700,8 @@ class PagedServingEngine:
         if self.allocator2 is not None:
             m["pool_free2"].set(self.allocator2.num_free)
             m["pool_live2"].set(self.allocator2.num_live)
+        if self.store is not None:
+            m["state_bytes"].set(self.store.physical_bytes(self.states))
         m["slots_active"].set(int(self.active.sum()))
         m["pending"].set(n_pending)
         m["spilled"].set(len(self._spilled))
@@ -717,6 +751,8 @@ class PagedServingEngine:
         scales with the batch's real context, not the engine-wide maximum.
         jit specializes one trace per sliced width, O(log max_pages) total.
         """
+        if self.family.state_slots:
+            return self._build_decode_state()
         cfg, backend, sc = self.cfg, self.backend, self.sched.sampling
         s = self.sched.num_slots
         max_burst = self.sched.max_burst
@@ -805,6 +841,211 @@ class PagedServingEngine:
 
         return self._mesh_jit(run, n_in=11, pool_in={1, 2}, n_out=4,
                               pool_out={0, 1}, donate=(1, 2))
+
+    def _build_decode_state(self):
+        """Burst decode for state-slot families (serving/statecache.py).
+
+        Same fused-while_loop shape as the paged burst, but the per-slot
+        recurrent state rides the carry in RAW form: the packed
+        quantized store is decoded ONCE at burst entry, stepped raw for
+        up to `k_steps` tokens, then re-encoded and merged back at burst
+        exit — only burst-entry-active slots' packed bytes are rewritten
+        (`StateStore.merge`), so idle slots' codes stay bit-exact without
+        relying on encode∘decode idempotence. Hybrid families
+        (zamba2-style) additionally thread the shared-attention paged
+        pool through the same dispatch: pages and state slots advance in
+        the same tick. State families never run under a mesh
+        (families.py rejects it), so these are plain `jax.jit`.
+        """
+        cfg, backend, sc = self.cfg, self.backend, self.sched.sampling
+        s = self.sched.num_slots
+        max_burst = self.sched.max_burst
+        eos = self.sched.eos_id
+        store = self.store
+
+        if self.family.paged_kv:  # hybrid: pages + state slots per tick
+            def run(params, pool_k, pool_v, page_table, lengths, active,
+                    tokens, remaining, k_steps, rng, packed):
+                states0 = store.decode(packed)
+                out0 = jnp.full((s, max_burst), -1, jnp.int32)
+                emitted0 = jnp.zeros((s,), jnp.int32)
+
+                def cond(c):
+                    return (c[0] < k_steps) & jnp.any(c[4])
+
+                def body(c):
+                    (step, pk, pv, lens, act, states, toks, emitted, out,
+                     rng) = c
+                    rng, sub = jax.random.split(rng)
+                    cache = pages_lib.PagedKVCache(pk, pv, page_table,
+                                                   lens)
+                    logits, new_cache, new_states = (
+                        decoding.decode_step_paged_hybrid(
+                            params, cfg, cache, states, toks[:, None],
+                            act, backend=backend))
+                    nxt = engine_lib.sample_tokens(sub, logits, sc)
+                    nxt = jnp.where(act, nxt, toks)
+                    out = jax.lax.dynamic_update_slice(
+                        out, jnp.where(act, nxt, -1)[:, None], (0, step))
+                    emitted = emitted + act.astype(jnp.int32)
+                    done = emitted >= remaining
+                    if eos is not None:
+                        done = done | (act & (nxt == eos))
+                    return (step + 1, new_cache.k, new_cache.v,
+                            new_cache.lengths, act & ~done, new_states,
+                            nxt, emitted, out, rng)
+
+                init = (jnp.asarray(0, jnp.int32), pool_k, pool_v,
+                        lengths, active, states0, tokens, emitted0, out0,
+                        rng)
+                fin = jax.lax.while_loop(cond, body, init)
+                new_packed = store.merge(store.encode(fin[5]), packed,
+                                         active)
+                # pool_k, pool_v, emitted, out, packed
+                return fin[1], fin[2], fin[7], fin[8], new_packed
+
+            return jax.jit(run, donate_argnums=(1, 2, 10))
+
+        def run(params, active, tokens, remaining, k_steps, rng, packed):
+            states0 = store.decode(packed)
+            out0 = jnp.full((s, max_burst), -1, jnp.int32)
+            emitted0 = jnp.zeros((s,), jnp.int32)
+
+            def cond(c):
+                return (c[0] < k_steps) & jnp.any(c[1])
+
+            def body(c):
+                step, act, states, toks, emitted, out, rng = c
+                rng, sub = jax.random.split(rng)
+                logits, new_ds = decoding.decode_step(
+                    params, cfg,
+                    decoding.DecodeState(cache=None, states=states),
+                    toks[:, None], backend=backend)
+                new_states = decoding.mask_states(cfg, act, new_ds.states,
+                                                  states)
+                nxt = engine_lib.sample_tokens(sub, logits, sc)
+                nxt = jnp.where(act, nxt, toks)
+                out = jax.lax.dynamic_update_slice(
+                    out, jnp.where(act, nxt, -1)[:, None], (0, step))
+                emitted = emitted + act.astype(jnp.int32)
+                done = emitted >= remaining
+                if eos is not None:
+                    done = done | (act & (nxt == eos))
+                return (step + 1, act & ~done, new_states, nxt, emitted,
+                        out, rng)
+
+            init = (jnp.asarray(0, jnp.int32), active, states0, tokens,
+                    emitted0, out0, rng)
+            fin = jax.lax.while_loop(cond, body, init)
+            new_packed = store.merge(store.encode(fin[2]), packed, active)
+            return fin[4], fin[5], new_packed  # emitted, out, packed
+
+        return jax.jit(run, donate_argnums=(6,))
+
+    def _state_width(self, plen: int) -> int:
+        """Pow-2 prompt-width bucket for a state-prefill dispatch."""
+        cap = self.sched.max_pages * self.sched.page_size
+        w = 1
+        while w < plen:
+            w *= 2
+        return min(w, max(cap, plen))
+
+    def _sprefill_fn(self, width: int):
+        """State-family admission prefill, one jit variant per pow-2
+        prompt-width bucket.
+
+        There is no chunked-prefill shortcut for recurrent state: the
+        state after the prompt IS the prompt's sequential scan, so the
+        slot's tokens are fed one step at a time through the SAME
+        fixed-shape full-batch decode step the burst loop uses (a
+        `lax.scan` over the padded width; positions past the real prompt
+        length are masked inactive). Other live slots ride along masked:
+        their state and lengths are untouched and their appends hit the
+        trash page. The first generated token is sampled in-dispatch
+        from the last valid position's logits, and the freshly scanned
+        state is encoded and merged into ONLY the admitted slot's packed
+        bytes.
+        """
+        key = ("sprefill", width)
+        if width in self._sprefill_fns:
+            return key, self._sprefill_fns[width]
+        cfg, backend, sc = self.cfg, self.backend, self.sched.sampling
+        s = self.sched.num_slots
+        store = self.store
+
+        if self.family.paged_kv:  # hybrid
+            def run(params, tokens, slot, plen, pool_k, pool_v,
+                    page_table, lengths, packed, rng):
+                onehot = jnp.arange(s) == slot
+                # slot reuse: the packed bytes still hold the PREVIOUS
+                # owner's final state — select the initial state for the
+                # admitted slot before scanning the new prompt into it
+                states0 = decoding.mask_states(
+                    cfg, onehot, store.init_states(), store.decode(packed))
+                last0 = jnp.zeros((cfg.vocab_size,), jnp.float32)
+
+                def body(carry, xs):
+                    states, pk, pv, lens, last = carry
+                    tok, pos = xs
+                    act = onehot & (pos < plen)
+                    toks = jnp.where(onehot, tok, 0).astype(jnp.int32)
+                    cache = pages_lib.PagedKVCache(pk, pv, page_table,
+                                                   lens)
+                    logits, new_cache, new_states = (
+                        decoding.decode_step_paged_hybrid(
+                            params, cfg, cache, states, toks[:, None],
+                            act, backend=backend))
+                    row = jax.lax.dynamic_index_in_dim(
+                        logits, slot, 0, keepdims=False)
+                    last = jnp.where(pos == plen - 1,
+                                     row.astype(jnp.float32), last)
+                    return (new_states, new_cache.k, new_cache.v,
+                            new_cache.lengths, last), None
+
+                init = (states0, pool_k, pool_v, lengths, last0)
+                (fstates, pk, pv, _, last), _ = jax.lax.scan(
+                    body, init, (tokens, jnp.arange(width)))
+                first = engine_lib.sample_tokens(rng, last[None], sc)[0]
+                new_packed = store.merge(store.encode(fstates), packed,
+                                         onehot)
+                return first, pk, pv, new_packed
+
+            fn = jax.jit(run, donate_argnums=(4, 5, 8))
+        else:
+            def run(params, tokens, slot, plen, packed, rng):
+                onehot = jnp.arange(s) == slot
+                # reused slot: reset to the initial state (see hybrid run)
+                states0 = decoding.mask_states(
+                    cfg, onehot, store.init_states(), store.decode(packed))
+                last0 = jnp.zeros((cfg.vocab_size,), jnp.float32)
+
+                def body(carry, xs):
+                    states, last = carry
+                    tok, pos = xs
+                    act = onehot & (pos < plen)
+                    toks = jnp.where(onehot, tok, 0).astype(jnp.int32)
+                    logits, new_ds = decoding.decode_step(
+                        params, cfg,
+                        decoding.DecodeState(cache=None, states=states),
+                        toks[:, None], backend=backend)
+                    new_states = decoding.mask_states(
+                        cfg, act, new_ds.states, states)
+                    row = jax.lax.dynamic_index_in_dim(
+                        logits, slot, 0, keepdims=False)
+                    last = jnp.where(pos == plen - 1,
+                                     row.astype(jnp.float32), last)
+                    return (new_states, last), None
+
+                (fstates, last), _ = jax.lax.scan(
+                    body, (states0, last0), (tokens, jnp.arange(width)))
+                first = engine_lib.sample_tokens(rng, last[None], sc)[0]
+                new_packed = store.merge(store.encode(fstates), packed,
+                                         onehot)
+                return first, new_packed
+
+            fn = jax.jit(run, donate_argnums=(4,))
+        self._sprefill_fns[width] = fn
+        return key, fn
 
     def _build_verify(self):
         """Speculative verify: ONE device dispatch scores q_len =
@@ -1470,6 +1711,15 @@ class PagedServingEngine:
         page, so it never inflates a request's page footprint."""
         chunk = self.sched.prefill_chunk
         width = -(-len(req.tokens) // chunk) * chunk  # exact chunked prompt
+        if self.family.state_slots:
+            # state families prefill token-by-token (`_sprefill_fn`), so
+            # no chunk padding ever lands in real pages; pure-recurrent
+            # families (xlstm) hold no pages at all
+            if not self.family.paged_kv:
+                return width, 0
+            span = len(req.tokens) + req.max_new_tokens
+            return width, pages_lib.pages_for_tokens(
+                span, self.sched.page_size)
         span = max(width, len(req.tokens) + req.max_new_tokens)
         return width, pages_lib.pages_for_tokens(span, self.sched.page_size)
 
@@ -1498,6 +1748,12 @@ class PagedServingEngine:
         suffix prefill writes ONLY into fresh pages — a request never
         scatters into a page it does not own exclusively.
         """
+        if self.family.state_slots:
+            # recurrent state has no chunked-prefill shortcut: the
+            # prompt is scanned token-by-token into the slot's state
+            # (and, for hybrids, its pages) in one dispatch
+            self._admit_state(req, slot, fresh_ids, rng, t_admit)
+            return
         chunk = self.sched.prefill_chunk
         ps = self.sched.page_size
         plen = len(req.tokens)
@@ -1561,6 +1817,60 @@ class PagedServingEngine:
             # path; the trie takes its own page refs, LRU-bounded)
             self.trie.insert(req.tokens, page_ids)
 
+    def _admit_state(self, req: Request, slot: int, fresh_ids: np.ndarray,
+                     rng: jax.Array, t_admit: float) -> None:
+        """State-family admission: scan the prompt into the slot's
+        recurrent state (and, for hybrids, append its KV into the slot's
+        fresh pages) in one `_sprefill_fn` dispatch, claim the state
+        slot, and activate. The dispatch samples the first token
+        in-device and merges the scanned state into only this slot's
+        packed bytes."""
+        plen = len(req.tokens)
+        width = self._state_width(plen)
+        pad = np.zeros((width,), np.int32)
+        pad[:plen] = req.tokens
+        t_pfc = self._tracer.now()
+        t_wall = time.perf_counter()
+        key, fn = self._sprefill_fn(width)
+        if self.family.paged_kv:
+            # pages first: the prefill scan appends through the table
+            row = np.zeros((self.sched.max_pages,), np.int32)
+            row[:len(fresh_ids)] = fresh_ids.astype(np.int32)
+            self.page_table[slot] = row
+            self.lengths[slot] = 0
+            tok, pk, pv, packed = self._dispatch(
+                key, fn, self.params, jnp.asarray(pad),
+                jnp.asarray(slot, jnp.int32), jnp.asarray(plen, jnp.int32),
+                self.pool.k, self.pool.v, jnp.asarray(self.page_table),
+                jnp.asarray(self.lengths), self.states, rng)
+            self.pool = self.pool._replace(k=pk, v=pv)
+        else:
+            tok, packed = self._dispatch(
+                key, fn, self.params, jnp.asarray(pad),
+                jnp.asarray(slot, jnp.int32), jnp.asarray(plen, jnp.int32),
+                self.states, rng)
+        self.states = packed
+        self._m["prefill_tokens"].inc(width)
+        self._perf["host_sync_count"] += 1  # first-token readback
+        self._m["host_syncs"].inc()
+        first = int(tok)
+        self._m["state_encode_s"].inc(time.perf_counter() - t_wall)
+        self._tracer.span(
+            "state-prefill", t_pfc, tid=slot + 1, rid=req.rid,
+            tick=self._tick, width=width, plen=plen)
+        self.state_slots.claim(slot, req.rid)
+        self.lengths[slot] = plen if self.family.paged_kv else 0
+        self.active[slot] = True
+        self.next_tok[slot] = first
+        self.ctx_buf[slot] = 0
+        self.ctx_buf[slot, :plen] = req.tokens
+        self.ctx_buf[slot, plen] = first
+        self.ctx_len[slot] = plen + 1
+        self.slots[slot] = _Slot(req, first, t_admit,
+                                 time.perf_counter() - self._t0)
+        if self.on_tokens is not None:
+            self.on_tokens(req.rid, [first])
+
     def _evict(self, slot: int, results: list, t_now: float,
                status: str = "completed") -> None:
         """Retire a finished (or cancelled) request: drop its page
@@ -1570,6 +1880,8 @@ class PagedServingEngine:
         refcounts), clear the slot, and record the typed result."""
         st = self.slots[slot]
         self.allocator.free(st.req.rid)
+        if self.state_slots is not None:
+            self.state_slots.release(st.req.rid)
         self.page_table[slot] = 0
         if self.allocator2 is not None:
             self.allocator2.free(st.req.rid)
@@ -1728,6 +2040,8 @@ class PagedServingEngine:
         self.allocator.check_conservation()
         if self.allocator2 is not None:
             self.allocator2.check_conservation()
+        if self.state_slots is not None:
+            self.state_slots.check_conservation()
 
     def _watchdog(self, tick: int, pending: list) -> None:
         """Wall-clock watchdog (`SchedulerConfig.max_wall_s`): abort a
@@ -1787,16 +2101,31 @@ class PagedServingEngine:
         n_total = int(np.count_nonzero(row))
         n_data = pages_lib.pages_for_tokens(int(self.lengths[slot]),
                                             self.sched.page_size)
-        payload = spill_lib.spill_pages(pool, row[:n_data],
-                                        tracer=self._tracer)
+        payload = None
+        if pool is not None:
+            payload = spill_lib.spill_pages(pool, row[:n_data],
+                                            tracer=self._tracer)
         alloc.free(rid)
+        state = None
+        state_bytes = 0
+        if self.store is not None:
+            # the state-slot half of the preemption: snapshot the slot's
+            # PACKED bytes (already quantized — the spill is bit-exact
+            # over the stored representation) and release the slot
+            t_sspan = self._tracer.now()
+            state = self.store.snapshot_slot(self.states, slot)
+            state_bytes = _tree_nbytes(state)
+            self.state_slots.release(rid)
+            self._tracer.span(
+                "state-spill", t_sspan, tid=slot + 1, rid=rid,
+                tick=self._tick, bytes=state_bytes)
         st.marks.append(("spill", time.perf_counter() - self._t0))
         sp = spill_lib.SpilledRequest(
             req=st.req, priority=st.priority, generated=st.generated,
             next_tok=int(self.next_tok[slot]),
             length=int(self.lengths[slot]),
             ctx=self.ctx_buf[slot, :int(self.ctx_len[slot])].copy(),
-            payload=payload, n_pages=n_total, tier2=tier2,
+            payload=payload, n_pages=n_total, tier2=tier2, state=state,
             t_admit=st.t_admit, t_first=st.t_first,
             draft_proposed=st.draft_proposed,
             draft_accepted=st.draft_accepted,
@@ -1817,10 +2146,11 @@ class PagedServingEngine:
         self.slots[slot] = None
         self._spilled[rid] = sp
         self._m["spills"].inc()
-        self._m["spill_bytes"].inc(payload.nbytes())
+        page_bytes = payload.nbytes() if payload is not None else 0
+        self._m["spill_bytes"].inc(page_bytes + state_bytes)
         self._tracer.span(
             "spill", t_span, tid=slot + 1, rid=rid, tick=self._tick,
-            pages=n_total, bytes=payload.nbytes(), tier2=tier2)
+            pages=n_total, bytes=page_bytes + state_bytes, tier2=tier2)
 
     def _try_restore(self, sp: "spill_lib.SpilledRequest",
                      now: float) -> str:
@@ -1865,15 +2195,27 @@ class PagedServingEngine:
                 continue
             n_data = pages_lib.pages_for_tokens(sp.length,
                                                 self.sched.page_size)
-            if sp.tier2:
-                self.pool2 = self._commit_pool(spill_lib.restore_pages(
-                    self.pool2, sp.payload, ids[:n_data],
-                    tracer=self._tracer))
-            else:
-                self.pool = self._commit_pool(spill_lib.restore_pages(
-                    self.pool, sp.payload, ids[:n_data],
-                    tracer=self._tracer))
+            if sp.payload is not None:
+                if sp.tier2:
+                    self.pool2 = self._commit_pool(spill_lib.restore_pages(
+                        self.pool2, sp.payload, ids[:n_data],
+                        tracer=self._tracer))
+                else:
+                    self.pool = self._commit_pool(spill_lib.restore_pages(
+                        self.pool, sp.payload, ids[:n_data],
+                        tracer=self._tracer))
             slot = free[0]
+            if sp.state is not None:
+                # upload the slot's packed state bytes back — bit-exact
+                # (the snapshot WAS the stored representation)
+                t_sspan = self._tracer.now()
+                self.states = self.store.write_slot(self.states, slot,
+                                                    sp.state)
+                self.state_slots.claim(slot, sp.req.rid)
+                self._tracer.span(
+                    "state-restore", t_sspan, tid=slot + 1,
+                    rid=sp.req.rid, tick=self._tick,
+                    bytes=_tree_nbytes(sp.state))
             row = np.zeros((self.sched.max_pages,), np.int32)
             row[:sp.n_pages] = ids
             if sp.tier2:
@@ -1897,8 +2239,9 @@ class PagedServingEngine:
             self._tracer.span(
                 "restore", t_span, tid=slot + 1, rid=sp.req.rid,
                 tick=self._tick, pages=sp.n_pages,
-                bytes=sp.payload.nbytes(), retries=sp.restore_retries,
-                tier2=sp.tier2)
+                bytes=(sp.payload.nbytes() if sp.payload is not None
+                       else _tree_nbytes(sp.state)),
+                retries=sp.restore_retries, tier2=sp.tier2)
             return "ok"
         # per-tick retry budget exhausted: re-queue with backoff so the
         # loop never blocks on one unlucky restore
@@ -2097,6 +2440,17 @@ class PagedServingEngine:
         (serving/server.py) runs the same check at submit time to turn
         the ValueError into a 400 instead of killing the serve loop."""
         width, need = self._pages_needed(r)
+        if self.family.state_slots:
+            # state families bound the span by the token capacity (the
+            # device-resident ctx stream); xlstm has no page bound at all
+            cap = self.sched.max_pages * self.sched.page_size
+            if len(r.tokens) + r.max_new_tokens > cap:
+                raise ValueError(
+                    f"request {r.rid} span ({len(r.tokens)} prompt + "
+                    f"{r.max_new_tokens} new) exceeds the token capacity "
+                    f"{cap}")
+            if not self.family.paged_kv:
+                return
         if need > self.sched.num_pages - 1:
             raise ValueError(
                 f"request {r.rid} needs {need} pages; pool only has "
@@ -2266,11 +2620,35 @@ class PagedServingEngine:
             # --- one decode burst: k fused steps, k = min remaining budget
             k = int(min(self.sched.max_burst,
                         remaining[self.active].min()))
-            mp = self._live_table_width(k)
+            mp = self._live_table_width(k) if self.family.paged_kv else 0
             owned = self._owned_write_mask(k)
             t_burst = self._tracer.now()
             rng, sub = jax.random.split(rng)
-            if self.backend2 is not None:
+            if self.family.state_slots:
+                # state-family burst: the packed recurrent-state store
+                # rides the dispatch (decoded once at entry, merged back
+                # at exit); hybrids advance their shared-attention pages
+                # and their state slots in the SAME tick
+                if self.family.paged_kv:
+                    pk, pv, emitted, out, packed = self._dispatch(
+                        ("decode", mp), self._decode_fn,
+                        self.params, self.pool.k, self.pool.v,
+                        jnp.asarray(self.page_table[:, :mp]),
+                        jnp.asarray(self.lengths),
+                        jnp.asarray(self.active),
+                        jnp.asarray(self.next_tok),
+                        jnp.asarray(remaining),
+                        jnp.asarray(k, jnp.int32), sub, self.states)
+                    self.pool = self.pool._replace(k=pk, v=pv)
+                else:
+                    emitted, out, packed = self._dispatch(
+                        ("decode", 0), self._decode_fn,
+                        self.params, jnp.asarray(self.active),
+                        jnp.asarray(self.next_tok),
+                        jnp.asarray(remaining),
+                        jnp.asarray(k, jnp.int32), sub, self.states)
+                self.states = packed
+            elif self.backend2 is not None:
                 # tiered dispatch: both pools ride the burst; a slot's
                 # pages live in exactly one (tier2 routes)
                 pk, pv, pk2, pv2, emitted, out = self._dispatch(
@@ -2286,6 +2664,7 @@ class PagedServingEngine:
                     jnp.asarray(remaining), jnp.asarray(k, jnp.int32),
                     sub)
                 self.pool2 = self.pool2._replace(k=pk2, v=pv2)
+                self.pool = self.pool._replace(k=pk, v=pv)
             else:
                 pk, pv, emitted, out = self._dispatch(
                     ("decode", mp), self._decode_fn,
@@ -2296,7 +2675,7 @@ class PagedServingEngine:
                     jnp.asarray(self.next_tok),
                     jnp.asarray(remaining), jnp.asarray(k, jnp.int32),
                     sub)
-            self.pool = self.pool._replace(k=pk, v=pv)
+                self.pool = self.pool._replace(k=pk, v=pv)
             emitted = np.asarray(emitted)
             out = np.asarray(out)
             self._perf["host_sync_count"] += 1
@@ -2359,7 +2738,8 @@ class PagedServingEngine:
             "latency_p50_s": float(np.percentile(lat, 50)),
             "latency_p99_s": float(np.percentile(lat, 99)),
             "ttft_p50_s": float(np.percentile(ttft, 50)),
-            "pool_bytes": pages_lib.cache_physical_bytes(self.pool),
+            "pool_bytes": (pages_lib.cache_physical_bytes(self.pool)
+                           if self.pool is not None else 0),
             "pages_total": self.sched.num_pages - 1,
             "page_size": self.sched.page_size,
             "prefill_chunks": int(d.value("prefill_chunks")),
@@ -2375,6 +2755,23 @@ class PagedServingEngine:
         # lifetime (compile cost is paid once and amortized across runs —
         # see serving/compile_cache.py and docs/serving.md "Performance")
         stats["perf"] = dict(self._perf, warmed=self._warmed)
+        # family adapter view (serving/families.py): which capability
+        # plane served this run, plus state-cache byte accounting for
+        # state-slot families
+        fam = self.family
+        stats["family"] = dict(
+            name=fam.family, paged_kv=fam.paged_kv,
+            state_slots=fam.state_slots, speculate=fam.speculate,
+            prefix_share=fam.prefix_share, degrade=fam.degrade,
+            mesh=fam.mesh, moe_dropless=self.moe_dropless)
+        if self.store is not None:
+            stats["family"].update(
+                state_cache_bytes=self.store.physical_bytes(self.states),
+                state_bytes_per_slot=self.store.bytes_per_slot(
+                    self.states),
+                state_raw_bytes_per_slot=self.store.raw_bytes_per_slot(),
+                state_encode_seconds=float(
+                    d.value("state_encode_seconds")))
         # SLO / pressure-ladder accounting for THIS run: what the ladder
         # did (spill/restore/degrade/shed/cancel counters) and how each
         # priority class fared (completed requests only)

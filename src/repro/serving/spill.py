@@ -140,11 +140,16 @@ class SpilledRequest:
     next_tok: int
     length: int
     ctx: np.ndarray  # (ctx_len,) prompt + emitted tokens (pending last)
-    payload: SpilledPages  # the pages_with_data data pages
+    payload: SpilledPages  # the pages_with_data data pages (None when
+    #   the family holds no pages — pure-recurrent xlstm)
     n_pages: int  # full span reservation to re-allocate on restore
     tier2: bool  # payload lives in the degraded (tier-2) pool
     t_admit: float
     t_first: float
+    # state-slot families (serving/statecache.py): the slot's PACKED
+    # quantized state bytes, snapshotted host-side — restore re-uploads
+    # them bit-exactly. None for page-only (decoder) families.
+    state: object = None
     # carried accounting
     draft_proposed: int = 0
     draft_accepted: int = 0

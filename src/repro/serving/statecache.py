@@ -1,0 +1,350 @@
+"""Fixed-size quantized recurrent-state cache for SSM / xLSTM serving.
+
+Attention KV grows with the sequence, so it pages
+(`serving/pages.py`). Recurrent state does not: a Mamba2 / mLSTM /
+sLSTM layer carries a *fixed-size* state per sequence, so the serving
+cache for state families is simply S slots of a known byte layout — no
+page table, no allocator refcounts, no COW. What carries over from the
+KV path unchanged is the codec: the FWHT+angle quantizer
+(`core/angular.py` via `core/quantizer.py`) is position-independent and
+applies to any per-layer f32 tensor stream, so state slots store the
+same bit-packed `QuantizedKV` word streams pages do, with a MixedKV-style
+per-layer bin schedule (early layers can carry more bins, mirroring the
+paper's early-boost allocation).
+
+Layout. Every leaf of the family's batched decode-state tree (see
+`serving/decode.py::init_decode_state`) is stored slot-major:
+
+    family layout   (layer axes..., S, payload axes...)
+    store layout    (S, L, n_vec, vec_width)  -> encoded word streams
+
+i.e. the slot axis is moved to the front, layer axes flatten to L, the
+per-layer payload flattens and zero-pads to ``n_vec`` vectors of
+``vec_width`` elements, and each (slot, layer, vector) row encodes
+independently. Slot-major storage is what makes every host-side
+operation — spill, restore, transactional snapshot/rollback — a
+contiguous per-slot byte copy, exactly the `serving/spill.py` idiom.
+
+Exceptions: the log-stabilizer leaves of the xLSTM states (``m`` of
+`MLSTMState`/`SLSTMState`) are stored as raw f32. They initialize to
+-1e30 and act as running maxima in log space; min-max angle coding of a
+vector containing -1e30 would destroy every other coordinate, and the
+leaves are tiny (H or H*dh floats/slot), so precision wins over the few
+saved bytes. `StateCacheConfig(quantize=False)` stores *every* leaf raw
+— the bytes/slot baseline the benchmarks and drift tests compare
+against.
+
+Granularity. Encode-on-write / decode-on-read happens at slot
+granularity *per dispatch*: the burst/prefill jit decodes all S slots,
+steps, re-encodes, and writes back masked to the slots that were active
+at dispatch start (`merge`), so an untouched slot's stored bytes are
+bit-identical across dispatches (no reliance on encode∘decode
+idempotence).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import rates
+from repro.core.mixedkv import MixedKVSchedule
+from repro.core.quantizer import KVQuantizer, QuantizedKV, QuantizerConfig
+from repro.serving.families import UnsupportedFamilyError
+
+__all__ = [
+    "StateCacheConfig",
+    "StateStore",
+    "StateSlotAllocator",
+    "state_cache_config_from_quant",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class StateCacheConfig:
+    """Codec configuration for the per-slot state store.
+
+    vec_width:  elements per encoded vector (the codec's head_dim; a
+                power of two keeps the FWHT pad a no-op).
+    n_bins:     angle bins per coordinate pair for base layers.
+    n_early:    leading layers (per leaf) that get `boost_bins` instead —
+                the MixedKV early-boost allocation applied to state.
+    boost_bins: bins for the boosted layers.
+    norm:       per-vector norm quantization (8-bit linear default).
+    quantize:   False stores every leaf as raw f32 (baseline/debug).
+    """
+
+    vec_width: int = 64
+    n_bins: int = 512
+    n_early: int = 0
+    boost_bins: int = 1024
+    norm: rates.NormConfig = rates.NORM8
+    quantize: bool = True
+    seed: int = 0
+    storage: str = "auto"
+
+
+def state_cache_config_from_quant(quant, raw: bool = False) -> StateCacheConfig:
+    """Derive a state codec from a model's QuantConfig (launch path).
+
+    `raw=True` (the user chose an unquantized serve, e.g. --no-quant)
+    turns the state codec off. Otherwise the state slots quantize even
+    when `quant.enabled` is False — pure-recurrent families (xlstm)
+    ship a disabled QuantConfig because they have no KV cache to
+    quantize, but the state codec is independent of the page codec.
+    """
+    if raw:
+        return StateCacheConfig(quantize=False)
+    return StateCacheConfig(
+        n_early=int(getattr(quant, "n_early", 0) or 0) if quant else 0)
+
+
+def _leaf_specs(cfg: ModelConfig) -> list[tuple[str, bool, int]]:
+    """(name, quantize, slot_axis) per leaf, in tree_flatten order of the
+    family's batched decode-state tree."""
+    if cfg.family == "hybrid_ssm":
+        # MambaState leaves tiled to (n_groups, attn_every, S, ...)
+        return [("mamba.h", True, 2), ("mamba.conv", True, 2)]
+    if cfg.family == "xlstm":
+        # (mstates, sstates): MLSTM tiled (G, per-1, S, ...), SLSTM (G, S, ...)
+        return [
+            ("mlstm.c", True, 2), ("mlstm.n", True, 2), ("mlstm.m", False, 2),
+            ("slstm.c", True, 1), ("slstm.n", True, 1), ("slstm.h", True, 1),
+            ("slstm.m", False, 1),
+        ]
+    raise UnsupportedFamilyError(
+        cfg.family, "state_slots",
+        "no recurrent-state layout registered for this family")
+
+
+class _LeafCodec:
+    """Slot-major storage + optional angle codec for one state leaf."""
+
+    def __init__(self, name: str, shape: tuple[int, ...], dtype,
+                 slot_axis: int, quantize: bool, sc: StateCacheConfig):
+        self.name = name
+        self.shape = tuple(shape)
+        self.dtype = dtype
+        self.slot_axis = slot_axis
+        self.num_slots = self.shape[slot_axis]
+        layer_dims = self.shape[:slot_axis]
+        payload_dims = self.shape[slot_axis + 1:]
+        self.layers = int(np.prod(layer_dims, dtype=np.int64)) if layer_dims \
+            else 1
+        self.payload = int(np.prod(payload_dims, dtype=np.int64)) if \
+            payload_dims else 1
+        self.quantize = bool(quantize and sc.quantize)
+        w = sc.vec_width
+        self.vec_width = w
+        self.n_vec = max(1, -(-self.payload // w))
+        self.pad = self.n_vec * w - self.payload
+        if self.quantize:
+            n_early = min(sc.n_early, self.layers)
+            bins = (sc.boost_bins,) * n_early + \
+                (sc.n_bins,) * (self.layers - n_early)
+            schedule = MixedKVSchedule(n_k=bins, n_v=bins)
+            self.quantizer = KVQuantizer(QuantizerConfig(
+                head_dim=w, schedule=schedule, k_norm=sc.norm,
+                v_norm=sc.norm, seed=sc.seed, storage=sc.storage))
+            # (1, L, 1, 1) broadcast against the (S, L, n_vec, pairs) layout
+            self.bins = jnp.asarray(bins, jnp.int32).reshape(1, -1, 1, 1)
+            self.norm = sc.norm
+        else:
+            self.quantizer = None
+
+    # ---- layout ----------------------------------------------------------
+    def _to_slot_major(self, x: jax.Array) -> jax.Array:
+        y = jnp.moveaxis(x, self.slot_axis, 0)
+        return y.reshape(self.num_slots, self.layers, self.payload)
+
+    def _from_slot_major(self, y: jax.Array) -> jax.Array:
+        rest = self.shape[:self.slot_axis] + self.shape[self.slot_axis + 1:]
+        y = y.reshape((self.num_slots,) + rest)
+        return jnp.moveaxis(y, 0, self.slot_axis).astype(self.dtype)
+
+    # ---- codec -----------------------------------------------------------
+    def encode(self, x: jax.Array):
+        y = self._to_slot_major(x)
+        if not self.quantize:
+            return y.astype(self.dtype)
+        y = jnp.pad(y.astype(jnp.float32), ((0, 0), (0, 0), (0, self.pad)))
+        y = y.reshape(self.num_slots, self.layers, self.n_vec, self.vec_width)
+        return self.quantizer.encode(y, self.bins, self.norm)
+
+    def decode(self, stored) -> jax.Array:
+        if not self.quantize:
+            return self._from_slot_major(stored)
+        y = self.quantizer.decode(stored, self.bins, self.norm)
+        y = y.reshape(self.num_slots, self.layers,
+                      self.n_vec * self.vec_width)[:, :, :self.payload]
+        return self._from_slot_major(y)
+
+
+def _slot_where(touched: jax.Array, new: jax.Array, old: jax.Array):
+    m = touched.reshape((-1,) + (1,) * (new.ndim - 1))
+    return jnp.where(m, new, old)
+
+
+class StateStore:
+    """Encoded per-slot state storage for one serving engine.
+
+    The store itself is stateless after construction; the packed data
+    pytree lives on the engine (so jit dispatches can donate it) and
+    every method here either transforms that pytree inside a trace
+    (`encode`/`decode`/`merge`) or byte-copies one slot on the host
+    (`snapshot_slot`/`write_slot` — the spill/restore and transactional
+    rollback primitive).
+    """
+
+    def __init__(self, cfg: ModelConfig, num_slots: int,
+                 sc: Optional[StateCacheConfig] = None,
+                 dtype=jnp.float32):
+        from repro.serving import decode as decoding  # avoid import cycle
+
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.sc = sc = sc if sc is not None else StateCacheConfig()
+        # f32 layout: decode steps emit f32 state (the compute dtype),
+        # and the scheduler's fused loops carry decoded state through
+        # scan/while_loop — the stored leaf dtype must match or the
+        # carry types diverge
+        example = decoding.init_decode_state(
+            cfg, num_slots, 0, dtype=dtype).states
+        leaves, self._treedef = jax.tree_util.tree_flatten(example)
+        specs = _leaf_specs(cfg)
+        if len(specs) != len(leaves):
+            raise AssertionError(
+                f"state layout drift: {len(specs)} specs vs "
+                f"{len(leaves)} leaves for family {cfg.family!r}")
+        self._codecs = [
+            _LeafCodec(name, leaf.shape, leaf.dtype, axis, q, sc)
+            for (name, q, axis), leaf in zip(specs, leaves)]
+        self._example = example
+
+    # ---- trace-time transforms ------------------------------------------
+    def init_data(self):
+        """Packed storage holding every slot's initial (reset) state."""
+        return self.encode(self._example)
+
+    def init_states(self):
+        """The family's batched initial decode-state tree (all slots
+        reset) in family layout — the reset value admission selects for
+        a reused slot, whose packed bytes still hold the previous
+        owner's final state."""
+        return self._example
+
+    def encode(self, states):
+        leaves = jax.tree_util.tree_leaves(states)
+        return tuple(c.encode(x) for c, x in zip(self._codecs, leaves))
+
+    def decode(self, data):
+        leaves = [c.decode(p) for c, p in zip(self._codecs, data)]
+        return jax.tree_util.tree_unflatten(self._treedef, leaves)
+
+    def merge(self, new_data, old_data, touched: jax.Array):
+        """Per-slot select: rows of `touched` take `new_data`, the rest
+        keep `old_data` bit-exactly (every stored array is slot-major)."""
+        return jax.tree_util.tree_map(
+            functools.partial(_slot_where, touched), new_data, old_data)
+
+    # ---- host-side slot ops (spill / restore / rollback) ----------------
+    def snapshot_slot(self, data, slot: int):
+        """One slot's packed bytes as a host pytree (numpy). This is the
+        transactional snapshot: `write_slot` of the result restores the
+        slot bit-identically (tests/test_families.py)."""
+        return jax.tree_util.tree_map(
+            lambda a: np.asarray(a[int(slot)]), data)
+
+    def write_slot(self, data, slot: int, snap):
+        """Write a snapshot back into `slot`, donating the old buffers."""
+        idx = jnp.asarray(int(slot), jnp.int32)
+        return jax.tree_util.tree_map(
+            lambda a, h: _upload_slot(a, jnp.asarray(h), idx), data, snap)
+
+    # ---- accounting ------------------------------------------------------
+    def physical_bytes(self, data) -> int:
+        return int(sum(a.nbytes for a in jax.tree_util.tree_leaves(data)))
+
+    def bytes_per_slot(self, data) -> float:
+        return self.physical_bytes(data) / max(self.num_slots, 1)
+
+    def raw_bytes_per_slot(self) -> int:
+        """f32 bytes of one slot's state in family layout (the baseline)."""
+        per = 0
+        for c in self._codecs:
+            per += c.layers * c.payload * 4
+        return per
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def _upload_slot(a: jax.Array, h: jax.Array, idx: jax.Array) -> jax.Array:
+    return a.at[idx].set(h.astype(a.dtype))
+
+
+class StateSlotAllocator:
+    """Ownership audit for the S fixed state slots.
+
+    Slots are 1:1 with the engine's decode slots, so there is nothing to
+    *search* — the point of this object is conservation: every claim /
+    release / spill / restore keeps (free ∪ owned) an exact partition of
+    the slot set, checked by the scheduler's end-of-run audit and the
+    hypothesis conservation test.
+    """
+
+    def __init__(self, num_slots: int):
+        self.num_slots = int(num_slots)
+        self._owner: dict[int, object] = {}  # slot -> rid
+        self._slot: dict[object, int] = {}  # rid -> slot
+
+    @property
+    def num_free(self) -> int:
+        return self.num_slots - len(self._owner)
+
+    @property
+    def num_live(self) -> int:
+        return len(self._owner)
+
+    def owner_of(self, slot: int):
+        return self._owner.get(int(slot))
+
+    def slot_of(self, rid) -> Optional[int]:
+        return self._slot.get(rid)
+
+    def claim(self, slot: int, rid) -> None:
+        slot = int(slot)
+        if not 0 <= slot < self.num_slots:
+            raise ValueError(f"slot {slot} out of range 0..{self.num_slots - 1}")
+        if slot in self._owner:
+            raise RuntimeError(
+                f"state slot {slot} already owned by "
+                f"{self._owner[slot]!r} (claimed for {rid!r})")
+        if rid in self._slot:
+            raise RuntimeError(f"request {rid!r} already holds slot "
+                               f"{self._slot[rid]}")
+        self._owner[slot] = rid
+        self._slot[rid] = slot
+
+    def release(self, rid) -> int:
+        """Free `rid`'s slot (eviction and spill both land here)."""
+        try:
+            slot = self._slot.pop(rid)
+        except KeyError:
+            raise RuntimeError(
+                f"request {rid!r} holds no state slot") from None
+        del self._owner[slot]
+        return slot
+
+    def check_conservation(self) -> None:
+        if len(self._owner) != len(self._slot):
+            raise AssertionError("state-slot maps out of sync")
+        for rid, slot in self._slot.items():
+            if self._owner.get(slot) != rid:
+                raise AssertionError(
+                    f"state slot {slot} ownership mismatch for {rid!r}")
+        if self.num_free < 0:
+            raise AssertionError("state slots over-committed")

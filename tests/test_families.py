@@ -1,0 +1,417 @@
+"""Family adapters (ISSUE 10): capability-based admission over the whole
+registry, MoE paged-vs-static bitwise parity (chunked prefill, both quant
+backends, 2/4-way simulated mesh), quantized recurrent-state serving for
+zamba2 (hybrid: pages + state slots in the same tick) and xlstm (pure
+state slots), state snapshot/rollback bit-exactness, bounded quantized
+state drift over long decodes, spill/restore token parity under
+preemption, and state-slot conservation properties."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.configs.base import ModelConfig
+from repro.core import mixedkv, rates
+from repro.core.quantizer import KVQuantizer, QuantizerConfig
+from repro.launch import mesh as mesh_lib
+from repro.models import moe, transformer
+from repro.serving import backends as backends_lib
+from repro.serving import decode as decoding
+from repro.serving import engine as engine_lib
+from repro.serving import families, scheduler, statecache
+
+
+# ----------------------------------------------------------- helpers ------
+def _quantizer(cfg):
+    return KVQuantizer(QuantizerConfig(
+        head_dim=cfg.head_dim,
+        schedule=mixedkv.uniform(cfg.num_attn_layers),
+        k_norm=rates.NORM_K8, v_norm=rates.NORM_V4_LOG, storage="bitpack"))
+
+
+def _backend(cfg, name="xla"):
+    """A servable backend for any family: quantized pages when the family
+    stores attention KV, raw otherwise (pure-recurrent / encoder)."""
+    if not cfg.has_kv_cache or cfg.family == "xlstm":
+        return backends_lib.RawBackend(cfg)
+    if name == "pallas":
+        return backends_lib.QuantPallasBackend(cfg, _quantizer(cfg),
+                                               interpret=True)
+    return backends_lib.QuantXLABackend(cfg, _quantizer(cfg))
+
+
+def _sched(**kw):
+    base = dict(num_slots=2, page_size=4, num_pages=48, max_context=48,
+                prefill_chunk=8, max_burst=4, debug_conservation=True)
+    base.update(kw)
+    return scheduler.SchedulerConfig(**base)
+
+
+def _requests(cfg, n, seed=0, plen_lo=4, plen_hi=10, budget_hi=5, **kw):
+    # plen_lo >= 4: the static-engine reference's hybrid prefill needs the
+    # Mamba conv window filled (pre-existing forward_prefill limitation)
+    rng = np.random.default_rng(seed)
+    return [scheduler.Request(
+        rid=i,
+        tokens=rng.integers(0, cfg.vocab_size,
+                            rng.integers(plen_lo, plen_hi + 1)
+                            ).astype(np.int32),
+        max_new_tokens=int(rng.integers(1, budget_hi + 1)), **kw)
+        for i in range(n)]
+
+
+def _static_tokens(params, cfg, be, req):
+    ref = engine_lib.generate(params, cfg, be,
+                              jnp.asarray(req.tokens)[None],
+                              max_new_tokens=req.max_new_tokens)
+    return np.asarray(ref.tokens)[0][:req.max_new_tokens]
+
+
+@pytest.fixture(scope="module")
+def zamba():
+    cfg = registry.get_reduced_config("zamba2-2.7b")
+    params, _ = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def xlstm():
+    cfg = registry.get_reduced_config("xlstm-350m")
+    params, _ = transformer.init_params(jax.random.PRNGKey(1), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def granite():
+    cfg = registry.get_reduced_config("granite-moe-3b-a800m")
+    params, _ = transformer.init_params(jax.random.PRNGKey(2), cfg)
+    return cfg, params
+
+
+# ----------------------------------------- registry-wide admission --------
+EXPECT_UNSUPPORTED = {
+    # sliding-window pages are a capability hole, not a family mismatch
+    "mixtral-8x22b": "paged_sliding_window",
+    # encoders have no autoregressive loop to serve
+    "hubert-xlarge": "generation",
+}
+
+
+@pytest.mark.parametrize("arch_id", registry.ALL_IDS)
+def test_registry_admission_smoke(arch_id):
+    """Every registry config either serves a short request end-to-end or
+    raises one typed UnsupportedFamilyError naming the missing
+    capability — never a bare ValueError, never silent corruption."""
+    cfg = registry.get_reduced_config(arch_id)
+    be = _backend(cfg)
+    params, _ = transformer.init_params(jax.random.PRNGKey(3), cfg)
+    if arch_id in EXPECT_UNSUPPORTED:
+        with pytest.raises(families.UnsupportedFamilyError) as ei:
+            scheduler.PagedServingEngine(params, cfg, be, _sched())
+        assert ei.value.capability == EXPECT_UNSUPPORTED[arch_id]
+        assert ei.value.family == cfg.family
+        return
+    eng = scheduler.PagedServingEngine(params, cfg, be, _sched())
+    reqs = _requests(cfg, 1, seed=5, plen_hi=6, budget_hi=3)
+    results, stats = eng.run(reqs)
+    assert [r.status for r in results] == ["completed"]
+    assert len(results[0].tokens) == reqs[0].max_new_tokens
+    assert stats["family"]["name"] == cfg.family
+
+
+def test_unknown_family_raises_typed():
+    cfg = dataclasses.replace(registry.get_reduced_config("qwen3-0.6b"),
+                              family="diffusion")
+    with pytest.raises(families.UnsupportedFamilyError) as ei:
+        families.get_adapter(cfg)
+    assert ei.value.capability == "family_adapter"
+
+
+def test_capability_errors_are_typed(zamba):
+    """Each unsupported (cfg, sched, backend) combination names its ONE
+    missing capability; state families reject speculation/mesh/prefix up
+    front instead of corrupting state mid-flight."""
+    cfg, params = zamba
+    be = _backend(cfg)
+    cases = [
+        (_sched(speculate=True), be, "speculative_rollback"),
+        (_sched(prefix_cache="share", prefix_pages=16), be, "prefix_share"),
+        (_sched(degrade=scheduler.DegradeConfig(num_pages=8)), be,
+         "tiered_degrade"),
+        (_sched(mesh=mesh_lib.make_sim_mesh(1)), be, "mesh_sharding"),
+        (_sched(), backends_lib.RawBackend(cfg), "quantized_pages"),
+    ]
+    for sched, backend, capability in cases:
+        with pytest.raises(families.UnsupportedFamilyError) as ei:
+            scheduler.PagedServingEngine(params, cfg, backend, sched)
+        assert ei.value.capability == capability, capability
+        assert ei.value.family == "hybrid_ssm"
+
+
+# ------------------------------------------------ MoE paged decode --------
+@pytest.mark.parametrize("backend_name", ["xla", "pallas"])
+def test_moe_paged_bitwise_matches_static(granite, backend_name):
+    """granite-moe through the paged scheduler — chunked prefill (prompts
+    longer than prefill_chunk), slot reuse, batched decode — emits
+    BITWISE the static engine's greedy tokens on both quant backends.
+    Serving auto-applies the dropless capacity factor (models/moe.py):
+    capacity-based drops are batch-composition-dependent, so the static
+    reference runs under the same dropless config."""
+    cfg, params = granite
+    be = _backend(cfg, backend_name)
+    eng = scheduler.PagedServingEngine(params, cfg, be, _sched())
+    assert eng.family.family == "decoder"
+    reqs = _requests(cfg, 3, seed=7, plen_lo=3, plen_hi=14, budget_hi=6)
+    assert max(len(r.tokens) for r in reqs) > 8  # chunked prefill covered
+    results, stats = eng.run(reqs)
+    assert stats["family"]["moe_dropless"]
+    dropless = moe.dropless_serving_config(cfg)
+    for r, req in zip(results, reqs):
+        np.testing.assert_array_equal(
+            r.tokens, _static_tokens(params, dropless, be, req))
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_moe_paged_mesh_parity(granite, sim_mesh_devices, n_shards):
+    """Expert-parallel MoE dispatch composes with the kv-head shard_map:
+    an N-way simulated mesh serves bitwise the single-device engine."""
+    cfg, _ = granite
+    cfg = dataclasses.replace(cfg, num_heads=4, num_kv_heads=4)
+    params, _ = transformer.init_params(jax.random.PRNGKey(2), cfg)
+    be = _backend(cfg)
+    reqs = _requests(cfg, 3, seed=9, plen_lo=3, plen_hi=14, budget_hi=5)
+    eng0 = scheduler.PagedServingEngine(params, cfg, be, _sched())
+    base, _ = eng0.run([dataclasses.replace(r) for r in reqs])
+    mesh = mesh_lib.make_sim_mesh(n_shards)
+    eng = scheduler.PagedServingEngine(params, cfg, be,
+                                       _sched(mesh=mesh))
+    sharded, stats = eng.run([dataclasses.replace(r) for r in reqs])
+    assert stats["family"]["mesh"]
+    for r0, r1 in zip(base, sharded):
+        np.testing.assert_array_equal(r0.tokens, r1.tokens)
+
+
+# --------------------------------------- quantized state-slot serving -----
+@pytest.mark.parametrize("family_fixture", ["zamba", "xlstm"])
+def test_state_family_raw_parity_with_slot_reuse(family_fixture, request):
+    """zamba2 (hybrid: attention pages + SSM state slots in the same
+    tick) and xlstm (pure state slots) serve end-to-end; with the raw
+    (quantize=False) state codec the greedy tokens match the static
+    engine exactly, INCLUDING requests admitted into reused slots (the
+    slot's state resets to the family initial state on admission)."""
+    cfg, params = request.getfixturevalue(family_fixture)
+    be = _backend(cfg)
+    eng = scheduler.PagedServingEngine(
+        params, cfg, be, _sched(),
+        state_cache=statecache.StateCacheConfig(quantize=False))
+    reqs = _requests(cfg, 3, seed=0)  # 3 reqs, 2 slots -> slot reuse
+    results, stats = eng.run(reqs)
+    fam = stats["family"]
+    assert fam["state_slots"]
+    assert fam["paged_kv"] == (cfg.family == "hybrid_ssm")
+    for r, req in zip(results, reqs):
+        np.testing.assert_array_equal(
+            r.tokens, _static_tokens(params, cfg, be, req))
+    assert eng.state_slots.num_live == 0
+    eng.state_slots.check_conservation()
+
+
+@pytest.mark.parametrize("family_fixture", ["zamba", "xlstm"])
+def test_state_family_quantized_serves_and_compresses(family_fixture,
+                                                      request):
+    cfg, params = request.getfixturevalue(family_fixture)
+    be = _backend(cfg)
+    eng = scheduler.PagedServingEngine(params, cfg, be, _sched())
+    results, stats = eng.run(_requests(cfg, 3, seed=1))
+    assert all(r.status == "completed" for r in results)
+    fam = stats["family"]
+    assert 0 < fam["state_bytes_per_slot"] < fam["state_raw_bytes_per_slot"]
+    assert fam["state_cache_bytes"] == eng.store.physical_bytes(eng.states)
+
+
+@pytest.mark.parametrize("family_fixture", ["zamba", "xlstm"])
+def test_state_family_warmup_enumerates_every_variant(family_fixture,
+                                                      request):
+    cfg, params = request.getfixturevalue(family_fixture)
+    be = _backend(cfg)
+    eng = scheduler.PagedServingEngine(params, cfg, be, _sched())
+    eng.warmup()
+    results, stats = eng.run(_requests(cfg, 4, seed=2))
+    assert all(r.status == "completed" for r in results)
+    assert stats["perf"]["post_warmup_variants"] == 0, stats["perf"]
+
+
+@pytest.mark.parametrize("family_fixture", ["zamba", "xlstm"])
+def test_state_family_spill_restore_token_parity(family_fixture, request):
+    """A high-priority arrival preempts a state-family victim: its packed
+    state slot (and pages, for hybrids) spill to host and restore; every
+    request's tokens still match the static engine (raw codec)."""
+    cfg, params = request.getfixturevalue(family_fixture)
+    be = _backend(cfg)
+    rng = np.random.default_rng(11)
+
+    def req(rid, plen, budget, arrival, priority):
+        return scheduler.Request(
+            rid=rid,
+            tokens=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+            max_new_tokens=budget, arrival=arrival, priority=priority)
+
+    reqs = [req(0, 10, 12, 0.0, 0), req(1, 10, 12, 0.0, 0),
+            req(2, 10, 5, 0.02, 1)]
+    eng = scheduler.PagedServingEngine(
+        params, cfg, be, _sched(preempt=True, max_wall_s=300.0),
+        state_cache=statecache.StateCacheConfig(quantize=False))
+    results, stats = eng.run(list(reqs))
+    assert stats["slo"]["spills"] >= 1
+    assert stats["slo"]["restores"] == stats["slo"]["spills"]
+    by = {r.rid: r for r in results}
+    assert by[2].preemptions == 0  # priority 1 is never the victim
+    for r in reqs:
+        np.testing.assert_array_equal(
+            by[r.rid].tokens, _static_tokens(params, cfg, be, r))
+    assert eng.state_slots.num_live == 0
+    assert eng.allocator.num_free == eng.sched.num_pages - 1
+
+
+# ------------------------------------ snapshot / rollback / drift ---------
+def test_state_snapshot_rollback_bit_exact(zamba):
+    """snapshot_slot -> clobber -> write_slot restores the slot's packed
+    bytes bit-identically and leaves every other slot untouched — the
+    transactional primitive spill/restore is built on."""
+    cfg, params = zamba
+    store = statecache.StateStore(cfg, 3)
+    rng = np.random.default_rng(0)
+    states = jax.tree.map(
+        lambda x: jnp.asarray(rng.standard_normal(x.shape), x.dtype),
+        store.init_states())
+    data = store.encode(states)
+    snap1 = store.snapshot_slot(data, 1)
+    snap2 = store.snapshot_slot(data, 2)
+    # clobber slot 1 with slot 2's bytes, then roll back
+    clobbered = store.write_slot(data, 1, snap2)
+    for a, b in zip(jax.tree.leaves(store.snapshot_slot(clobbered, 1)),
+                    jax.tree.leaves(snap2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    restored = store.write_slot(clobbered, 1, snap1)
+    reference = store.encode(states)  # data was donated by write_slot
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(reference)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("storage", ["bitpack", "uint8"])
+def test_state_quantized_drift_bounded_256_steps(xlstm, storage):
+    """Encode-on-write/decode-on-read each step for 256 teacher-forced
+    decode steps: the angle-coded state trajectory stays within a bounded
+    relative error of the raw-f32 trajectory on both codec storages, and
+    the final logits stay tightly correlated."""
+    cfg, params = xlstm
+    store = statecache.StateStore(
+        cfg, 1, statecache.StateCacheConfig(storage=storage))
+    rng = np.random.default_rng(3)
+    toks = rng.integers(0, cfg.vocab_size, 256)
+
+    @jax.jit
+    def step(states, tok):
+        logits, ds = decoding.decode_step(
+            params, cfg, decoding.DecodeState(cache=None, states=states),
+            tok.reshape(1, 1))
+        return ds.states, logits
+
+    @jax.jit
+    def roundtrip(states):
+        return store.decode(store.encode(states))
+
+    sq = sr = store.init_states()
+    for t in toks:
+        tok = jnp.asarray(t, jnp.int32)
+        sq, logits_q = step(sq, tok)
+        sq = roundtrip(sq)  # codec round trip EVERY step
+        sr, logits_r = step(sr, tok)
+    for name, q, r in zip(
+            [c.name for c in store._codecs],
+            jax.tree.leaves(sq), jax.tree.leaves(sr)):
+        qn = np.asarray(q, np.float64).ravel()
+        rn = np.asarray(r, np.float64).ravel()
+        denom = np.linalg.norm(rn)
+        rel = np.linalg.norm(qn - rn) / max(denom, 1e-9)
+        assert rel < 0.25, (name, rel)
+    a = np.asarray(logits_q, np.float64).ravel()
+    b = np.asarray(logits_r, np.float64).ravel()
+    corr = np.corrcoef(a, b)[0, 1]
+    assert corr > 0.98, corr
+
+
+# ------------------------------------------------ conservation ------------
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6))
+def test_state_slot_conservation_property(seed):
+    """Seeded op-sequence over claim / release / spill (snapshot +
+    release) / restore (claim + write): slot conservation holds after
+    every op, a spilled snapshot restores bit-exactly into ANY free slot,
+    and untouched slots' packed bytes never change."""
+    cfg = registry.get_reduced_config("xlstm-350m")
+    s = 4
+    store = statecache.StateStore(cfg, s)
+    alloc = statecache.StateSlotAllocator(s)
+    data = store.init_data()
+    rng = np.random.default_rng(seed)
+    live = {}  # rid -> (slot, stamp)
+    spilled = {}  # rid -> (snapshot, stamp)
+    next_rid, next_stamp = 0, 1
+
+    def stamped_snapshot(stamp):
+        # same treedef as snapshot_slot, every leaf filled with `stamp`
+        return jax.tree.map(lambda a: np.full(a.shape, stamp, a.dtype),
+                            store.snapshot_slot(data, 0))
+
+    for _ in range(40):
+        op = rng.choice(["claim", "release", "spill", "restore"])
+        free = [i for i in range(s) if alloc.owner_of(i) is None]
+        if op == "claim" and free:
+            slot = int(rng.choice(free))
+            rid = next_rid
+            next_rid += 1
+            alloc.claim(slot, rid)
+            data = store.write_slot(data, slot,
+                                    stamped_snapshot(next_stamp))
+            live[rid] = (slot, next_stamp)
+            next_stamp += 1
+        elif op == "release" and live:
+            rid = list(live)[int(rng.integers(len(live)))]
+            slot, _ = live.pop(rid)
+            assert alloc.release(rid) == slot
+        elif op == "spill" and live:
+            rid = list(live)[int(rng.integers(len(live)))]
+            slot, stamp = live.pop(rid)
+            snap = store.snapshot_slot(data, slot)
+            alloc.release(rid)
+            spilled[rid] = (snap, stamp)
+        elif op == "restore" and spilled and free:
+            rid = list(spilled)[int(rng.integers(len(spilled)))]
+            snap, stamp = spilled.pop(rid)
+            slot = int(rng.choice(free))  # any free slot will do
+            alloc.claim(slot, rid)
+            data = store.write_slot(data, slot, snap)
+            live[rid] = (slot, stamp)
+        alloc.check_conservation()
+        assert alloc.num_free == s - len(live)
+        # every live slot's bytes are exactly its stamp fill
+        for rid, (slot, stamp) in live.items():
+            for a in jax.tree.leaves(store.snapshot_slot(data, slot)):
+                a = np.asarray(a)
+                assert np.all(a == a.dtype.type(stamp)), (slot, stamp)
+
+    # double-claim / unknown-release stay loud
+    if live:
+        rid = next(iter(live))
+        with pytest.raises(RuntimeError):
+            alloc.claim(live[rid][0], "other")
+    with pytest.raises(RuntimeError):
+        alloc.release("never-admitted")

@@ -422,3 +422,89 @@ def test_http_shutdown_returns_run_stats(frontend):
     assert stats is not None
     assert stats["slo"]["cancelled"] >= 1  # the disconnect test's cancel
     assert eng.allocator.num_free == eng.sched.num_pages - 1
+
+
+# ---------------------------------------------- family / state metrics ----
+def _state_engine(arch_id, seed=0, **sched_kw):
+    from repro.configs import registry
+
+    cfg = registry.get_reduced_config(arch_id)
+    params, _ = transformer.init_params(jax.random.PRNGKey(seed), cfg)
+    if cfg.has_kv_cache:
+        be = backends_lib.QuantXLABackend(cfg, KVQuantizer(QuantizerConfig(
+            head_dim=cfg.head_dim,
+            schedule=mixedkv.uniform(cfg.num_attn_layers),
+            k_norm=rates.NORM_K8, v_norm=rates.NORM_V4_LOG,
+            storage="bitpack")))
+    else:
+        be = backends_lib.RawBackend(cfg)
+    eng = scheduler.PagedServingEngine(params, cfg, be, _sched(**sched_kw))
+    return cfg, params, eng
+
+
+def _state_requests(cfg, n, seed=0, plen=10, budget=5, **kw):
+    rng = np.random.default_rng(seed)
+    return [scheduler.Request(
+        rid=i, tokens=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+        max_new_tokens=budget, **kw) for i in range(n)]
+
+
+def test_family_stats_block_and_state_metrics():
+    """stats['family'] names the adapter and its capabilities; the state
+    cache exports its footprint as a gauge (packed bytes resident) and
+    its codec cost as a counter (encode wall seconds), both registry
+    views of the same run."""
+    cfg, params, eng = _state_engine("xlstm-350m")
+    results, stats = eng.run(_state_requests(cfg, 3, seed=3))
+    assert all(r.status == "completed" for r in results)
+    fam = stats["family"]
+    assert fam["name"] == "xlstm" and fam["state_slots"]
+    assert not (fam["paged_kv"] or fam["speculate"] or fam["prefix_share"]
+                or fam["degrade"] or fam["mesh"])
+    parsed = telemetry.parse_prometheus(
+        eng.telemetry.registry.render_prometheus())
+    assert parsed["repro_state_cache_bytes"] \
+        == fam["state_cache_bytes"] == eng.store.physical_bytes(eng.states)
+    assert fam["state_cache_bytes"] > 0
+    assert parsed["repro_state_encode_seconds_total"] \
+        == pytest.approx(fam["state_encode_seconds"])
+    assert fam["state_encode_seconds"] > 0
+    # decoder engines carry the same block with state caps off
+    cfgd, qzd = _cfg(), None
+    paramsd, _ = transformer.init_params(jax.random.PRNGKey(0), cfgd)
+    engd = scheduler.PagedServingEngine(
+        paramsd, cfgd, backends_lib.QuantXLABackend(cfgd, _qz(cfgd)),
+        _sched())
+    _, statsd = engd.run(_requests(1, seed=1))
+    famd = statsd["family"]
+    assert famd["name"] == "decoder" and famd["paged_kv"]
+    assert not famd["state_slots"]
+    assert "state_cache_bytes" not in famd
+
+
+def test_state_family_trace_spans():
+    """A hybrid run under preemption emits the state lifecycle as spans:
+    state-prefill on admission, state-spill / state-restore around the
+    preemption, all carrying slot lanes + rids and passing the Perfetto
+    schema check."""
+    cfg, params, eng = _state_engine(
+        "zamba2-2.7b", preempt=True, max_wall_s=300.0)
+    rng = np.random.default_rng(11)
+
+    def req(rid, budget, arrival, priority):
+        return scheduler.Request(
+            rid=rid, tokens=rng.integers(0, cfg.vocab_size, 10)
+            .astype(np.int32), max_new_tokens=budget,
+            arrival=arrival, priority=priority)
+
+    results, stats = eng.run(
+        [req(0, 12, 0.0, 0), req(1, 12, 0.0, 0), req(2, 5, 0.02, 1)])
+    assert stats["slo"]["spills"] >= 1
+    evs = eng.telemetry.tracer.events()
+    names = {e["name"] for e in evs}
+    assert {"state-prefill", "state-spill", "state-restore"} <= names
+    for name in ("state-prefill", "state-spill", "state-restore"):
+        spans = [e for e in evs if e["name"] == name]
+        assert spans and all(
+            e["tid"] >= 1 and "rid" in e["args"] for e in spans), name
+    assert telemetry.validate_trace(eng.telemetry.tracer.to_perfetto()) == []
